@@ -1,0 +1,116 @@
+"""Roofline analysis over the dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Three terms per (arch x shape x mesh), in seconds-per-step on TPU v5e:
+
+    compute    = HLO_FLOPs_per_device / 197e12        (bf16 peak per chip)
+    memory     = HLO_bytes_per_device / 819e9         (HBM bandwidth)
+    collective = collective_bytes_per_device / 50e9   (ICI per link)
+
+FLOPs/bytes come from our while-trip-corrected HLO walk
+(repro.launch.hlo_analysis) over the post-SPMD module, so they are
+per-device local quantities already.  MODEL_FLOPS = 6 * N(_active) * tokens.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+import sys
+
+PEAK_FLOPS = 197e12       # TPU v5e bf16 / chip
+HBM_BW = 819e9            # bytes/s / chip
+ICI_BW = 50e9             # bytes/s / link
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+def model_flops(arch: str, shape_name: str) -> float:
+    from repro.configs.registry import get_config
+    from repro.models.config import SHAPES
+    cfg = get_config(arch)
+    s = SHAPES[shape_name]
+    tokens = s.global_batch * (s.seq_len if s.kind in ("train", "prefill") else 1)
+    n = cfg.active_param_count
+    flops = 6.0 * n * tokens
+    if s.kind == "prefill":
+        flops /= 3.0        # forward only (no backward)
+    if s.kind == "decode":
+        flops /= 3.0
+    return flops
+
+
+def load_cells(dirpath: str) -> list[dict]:
+    cells = []
+    for path in sorted(glob.glob(os.path.join(dirpath, "*.json"))):
+        with open(path) as f:
+            cells.append(json.load(f))
+    return cells
+
+
+def roofline_row(cell: dict) -> dict | None:
+    if "skipped" in cell or "error" in cell or "hlo_analysis" not in cell:
+        return None
+    chips = cell["num_chips"]
+    fl = cell["hlo_analysis"]["flops"]
+    by = cell["hlo_analysis"]["bytes"]
+    co = cell["collectives"]["total_bytes"]
+    t_c = fl / PEAK_FLOPS
+    t_m = by / HBM_BW
+    t_n = co / ICI_BW
+    dom = max((t_c, "compute"), (t_m, "memory"), (t_n, "collective"))[1]
+    row = {
+        "arch": cell["arch"], "shape": cell["shape"], "mesh": cell["mesh"],
+        "chips": chips,
+        "compute_s": t_c, "memory_s": t_m, "collective_s": t_n,
+        "bound": dom,
+        "step_s": max(t_c, t_m, t_n),
+    }
+    if cell["arch"] != "petfmm-vortex":
+        mf = model_flops(cell["arch"], cell["shape"])
+        row["model_flops"] = mf
+        row["useful_ratio"] = mf / max(fl * chips, 1.0)
+        # roofline fraction: useful FLOP/s achieved at the modeled step time
+        row["mfu_bound"] = mf / (row["step_s"] * chips * PEAK_FLOPS)
+    return row
+
+
+def advice(row: dict) -> str:
+    a = {
+        "compute": "cut recompute (remat policy) / capacity factor; pad less",
+        "memory": "fuse + bf16 intermediates; larger blocks to raise arithmetic intensity",
+        "collective": "reshard to cut FSDP regathers; overlap collectives with compute",
+    }
+    return a[row["bound"]]
+
+
+def markdown_table(rows: list[dict]) -> str:
+    hdr = ("| arch | shape | mesh | compute s | memory s | collective s | "
+           "bound | 6ND/HLO | MFU bound |\n|---|---|---|---|---|---|---|---|---|\n")
+    out = [hdr]
+    for r in rows:
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | {r['compute_s']:.3f} "
+            f"| {r['memory_s']:.3f} | {r['collective_s']:.3f} | {r['bound']} "
+            f"| {r.get('useful_ratio', float('nan')):.3f} "
+            f"| {r.get('mfu_bound', float('nan')):.3f} |\n")
+    return "".join(out)
+
+
+def main(dirpath: str = "experiments/dryrun", out_csv: str | None = None):
+    rows = [r for r in (roofline_row(c) for c in load_cells(dirpath)) if r]
+    rows.sort(key=lambda r: (r["mesh"], r["arch"], r["shape"]))
+    print("arch,shape,mesh,chips,compute_s,memory_s,collective_s,bound,"
+          "useful_ratio,mfu_bound")
+    for r in rows:
+        print(f"{r['arch']},{r['shape']},{r['mesh']},{r['chips']},"
+              f"{r['compute_s']:.4f},{r['memory_s']:.4f},{r['collective_s']:.4f},"
+              f"{r['bound']},{r.get('useful_ratio', float('nan')):.4f},"
+              f"{r.get('mfu_bound', float('nan')):.4f}")
+    if out_csv:
+        with open(out_csv, "w") as f:
+            f.write(markdown_table(rows))
+    return rows
+
+
+if __name__ == "__main__":
+    main(*sys.argv[1:])

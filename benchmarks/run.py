@@ -1,0 +1,158 @@
+"""Benchmark harness: one entry per paper table/figure + kernel benches.
+
+Prints ``name,us_per_call,derived`` CSV rows (the scaffold contract).
+``derived`` carries the figure-specific metric (efficiency, LB, GB/s, ...).
+Run: PYTHONPATH=src python -m benchmarks.run [--quick]
+"""
+from __future__ import annotations
+
+import os
+import sys
+import time
+
+import numpy as np
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+def _time(fn, reps=3, warmup=1):
+    for _ in range(warmup):
+        fn()
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        fn()
+    return (time.perf_counter() - t0) / reps * 1e6  # us
+
+
+def bench_fig6_stage_timings(rows, quick=False):
+    """Paper Fig 6: per-stage FMM timings (measured, serial, CPU)."""
+    import jax
+    from repro.core import expansions as ex
+    from repro.core.fmm import fmm_velocity, near_field, upward_sweep
+    from repro.core.quadtree import build_tree
+
+    n_particles, level, p = (20_000, 5, 12) if quick else (100_000, 6, 17)
+    rng = np.random.default_rng(0)
+    pos = rng.uniform(0.01, 0.99, (n_particles, 2))
+    tree, _ = build_tree(pos, rng.normal(size=n_particles), level, 0.02)
+
+    total = _time(lambda: jax.block_until_ready(fmm_velocity(tree, p)))
+    rows.append(("fig6_total_fmm", total, f"N={n_particles}_L={level}_p={p}"))
+
+    up = jax.jit(lambda t: upward_sweep(t, p)[0], static_argnames=())
+    rows.append(("fig6_upward_sweep", _time(lambda: jax.block_until_ready(up(tree))),
+                 "P2M+M2M"))
+    me = upward_sweep(tree, p)
+    m2l = jax.jit(lambda g: ex.m2l_reference(g, level, p))
+    rows.append(("fig6_m2l_leaf_level",
+                 _time(lambda: jax.block_until_ready(m2l(me[level]))), "M2L"))
+    nearf = jax.jit(near_field)
+    rows.append(("fig6_p2p_near_field",
+                 _time(lambda: jax.block_until_ready(nearf(tree))), "P2P"))
+
+
+def bench_fig7_9_scaling(rows, quick=False):
+    """Paper Figs 7-9: speedup / efficiency / load balance (modeled)."""
+    from benchmarks.fmm_scaling import scaling_table
+    level = 8 if quick else 10
+    t = scaling_table(level=level, cut=4)
+    for r in t:
+        rows.append((f"fig7_speedup_P{r['P']}", 0.0, f"{r['S_model']:.2f}"))
+        rows.append((f"fig8_efficiency_P{r['P']}", 0.0, f"{r['E_model']:.3f}"))
+        rows.append((f"fig9_loadbalance_P{r['P']}", 0.0,
+                     f"model={r['LB_model']:.3f}_uniform={r['LB_uniform']:.3f}"))
+
+
+def bench_table12_memory(rows, quick=False):
+    """Paper §5.3 Tables 1-2 + the 64M-particle headline (<1.01 GB/proc)."""
+    from repro.core import cost_model as cm
+    params = cm.ModelParams(level=10, cut=4, p=17, slots=1)
+    mem = cm.memory_serial(params, 765_625)
+    rows.append(("table1_serial_total_MB", 0.0, f"{sum(mem.values())/1e6:.1f}"))
+    par = cm.memory_parallel(params, 64, 256, 64)
+    rows.append(("table2_parallel_total_MB", 0.0, f"{sum(par.values())/1e6:.1f}"))
+    # 64M particles / 64 procs headline (paper: 115.8 s, < 1.01 GB/proc)
+    params64 = cm.ModelParams(level=12, cut=5, p=17, slots=4)
+    per_proc = (sum(cm.memory_serial(params64, 64_000_000).values()) / 64 +
+                sum(cm.memory_parallel(params64, 64, 1024, 128).values()))
+    rows.append(("headline_64M_per_proc_paperTable_GB", 0.0, f"{per_proc/1e9:.2f}"))
+    # our dense implementation stores NO interaction lists/values (generated
+    # from the 40 static offsets — the paper's own 'future improvement'):
+    L, p, s = 12, 17, 4
+    nleaf = 4 ** L
+    lam = cm.total_boxes(L)
+    ours = (nleaf * s * (8 + 8 + 1 + 8)      # z, q, mask, W
+            + lam * p * 8 * 2) / 64          # ME + LE grids (complex64)
+    rows.append(("headline_64M_per_proc_ours_GB", 0.0, f"{ours/1e9:.2f}"))
+
+
+def bench_kernels(rows, quick=False):
+    """Pallas kernels vs jnp reference (CPU: ref timed; kernels run in the
+    interpreter for correctness, so 'derived' reports the validation error)."""
+    import jax
+    import jax.numpy as jnp
+    from repro.kernels import ref
+    from repro.kernels.m2l import m2l_pallas
+    from repro.kernels.p2p import p2p_pallas
+    from repro.kernels.flash_attn import flash_attention
+
+    rng = np.random.default_rng(0)
+    ny = nx = 8 if quick else 16
+    s = 8
+    z = jnp.asarray(rng.uniform(size=(ny, nx, s)) + 1j * rng.uniform(size=(ny, nx, s)),
+                    jnp.complex64)
+    q = jnp.asarray(rng.normal(size=(ny, nx, s)) + 0j, jnp.complex64)
+    mask = jnp.ones((ny, nx, s), bool)
+    expect = np.asarray(ref.p2p_ref(z, q, mask, 0.05))
+    p2p_ref_t = _time(lambda: jax.block_until_ready(ref.p2p_ref(z, q, mask, 0.05)))
+    err = float(np.linalg.norm(np.asarray(p2p_pallas(z, q, mask, 0.05)) - expect) /
+                np.linalg.norm(expect))
+    rows.append(("kernel_p2p_ref_jnp", p2p_ref_t, f"pallas_relerr={err:.1e}"))
+
+    p = 17
+    me = jnp.asarray(rng.normal(size=(ny, nx, p)) + 1j * rng.normal(size=(ny, nx, p)),
+                     jnp.complex64)
+    expect = np.asarray(ref.m2l_ref(me, 4, p))
+    m2l_t = _time(lambda: jax.block_until_ready(ref.m2l_ref(me, 4, p)))
+    err = float(np.linalg.norm(np.asarray(m2l_pallas(me, 4, p)) - expect) /
+                np.linalg.norm(expect))
+    rows.append(("kernel_m2l_ref_jnp", m2l_t, f"pallas_relerr={err:.1e}"))
+
+    qq = jnp.asarray(rng.normal(size=(1, 4, 128, 64)), jnp.float32)
+    kk = jnp.asarray(rng.normal(size=(1, 2, 128, 64)), jnp.float32)
+    expect = np.asarray(ref.attention_ref(qq, kk, kk))
+    fa_t = _time(lambda: jax.block_until_ready(ref.attention_ref(qq, kk, kk)))
+    err = float(np.linalg.norm(
+        np.asarray(flash_attention(qq, kk, kk, block_q=64, block_k=64)) - expect) /
+        np.linalg.norm(expect))
+    rows.append(("kernel_flash_attn_ref_jnp", fa_t, f"pallas_relerr={err:.1e}"))
+
+
+def bench_moe_placement(rows, quick=False):
+    """The paper's technique transplanted: expert-placement load balance."""
+    from repro.models.moe import expert_placement
+    rng = np.random.default_rng(0)
+    E, ranks = 64, 8
+    counts = (rng.zipf(1.5, E) * 100).clip(0, 50_000).astype(np.float64)
+    coact = np.zeros((E, E))
+    assign = expert_placement(counts, coact, ranks)
+    loads = np.bincount(assign, weights=counts, minlength=ranks)
+    naive = counts.reshape(ranks, -1).sum(1)
+    rows.append(("moe_placement_lb", 0.0,
+                 f"model={loads.min()/max(loads.max(),1):.3f}_"
+                 f"contiguous={naive.min()/max(naive.max(),1):.3f}"))
+
+
+def main() -> None:
+    quick = "--quick" in sys.argv
+    rows: list[tuple[str, float, str]] = []
+    for bench in (bench_fig6_stage_timings, bench_fig7_9_scaling,
+                  bench_table12_memory, bench_kernels, bench_moe_placement):
+        bench(rows, quick=quick)
+    print("name,us_per_call,derived")
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,50 @@
+"""Serving example: batched prefill + greedy decode with a persistent cache.
+
+Exercises the production decode path (ring-buffer / SSM states included if
+you pick a hybrid/ssm arch).
+
+Run:  PYTHONPATH=src python examples/serve_lm.py [--arch yi-6b] [--new 16]
+"""
+import argparse
+import sys
+import time
+
+import numpy as np
+import jax
+
+sys.path.insert(0, "src")
+
+from repro.configs.registry import get_smoke_config
+from repro.models.transformer import init_params
+from repro.serve.engine import ServeEngine
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="yi-6b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--new", type=int, default=16)
+    args = ap.parse_args()
+
+    cfg = get_smoke_config(args.arch)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    engine = ServeEngine(params, cfg, batch_slots=args.batch,
+                         max_len=args.prompt_len + args.new + 8)
+
+    rng = np.random.default_rng(0)
+    prompts = rng.integers(0, cfg.vocab, (args.batch, args.prompt_len)).astype(np.int32)
+    t0 = time.perf_counter()
+    out = engine.step_all(prompts, args.new)
+    wall = time.perf_counter() - t0
+    assert out.shape == (args.batch, args.new)
+    print(f"arch={cfg.name} batch={args.batch} prompt={args.prompt_len} "
+          f"new={args.new}")
+    print(f"generated (first seq): {out[0].tolist()}")
+    print(f"wall {wall:.2f}s -> {args.batch * args.new / wall:.1f} tok/s "
+          f"(CPU, includes compile)")
+    print("OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,50 @@
+"""Architecture registry: --arch <id> -> ModelConfig (full and smoke-reduced)."""
+from __future__ import annotations
+
+import importlib
+
+ARCHS = [
+    "qwen3_moe_235b_a22b",
+    "granite_moe_1b_a400m",
+    "command_r_35b",
+    "codeqwen15_7b",
+    "yi_6b",
+    "qwen15_32b",
+    "recurrentgemma_2b",
+    "musicgen_large",
+    "internvl2_26b",
+    "mamba2_13b",
+    "petfmm_vortex",            # the paper's own client application
+]
+
+_ALIASES = {
+    "qwen3-moe-235b-a22b": "qwen3_moe_235b_a22b",
+    "granite-moe-1b-a400m": "granite_moe_1b_a400m",
+    "command-r-35b": "command_r_35b",
+    "codeqwen1.5-7b": "codeqwen15_7b",
+    "yi-6b": "yi_6b",
+    "qwen1.5-32b": "qwen15_32b",
+    "recurrentgemma-2b": "recurrentgemma_2b",
+    "musicgen-large": "musicgen_large",
+    "internvl2-26b": "internvl2_26b",
+    "mamba2-1.3b": "mamba2_13b",
+    "petfmm-vortex": "petfmm_vortex",
+}
+
+
+def canonical(arch: str) -> str:
+    return _ALIASES.get(arch, arch.replace("-", "_").replace(".", ""))
+
+
+def get_config(arch: str):
+    mod = importlib.import_module(f"repro.configs.{canonical(arch)}")
+    return mod.CONFIG
+
+
+def get_smoke_config(arch: str):
+    mod = importlib.import_module(f"repro.configs.{canonical(arch)}")
+    return mod.SMOKE_CONFIG
+
+
+def lm_archs() -> list[str]:
+    return [a for a in ARCHS if a != "petfmm_vortex"]

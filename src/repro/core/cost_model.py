@@ -1,0 +1,206 @@
+"""Work, communication, and memory estimates (paper §5, Eqs 11-15, Tables 1-2).
+
+This module is the quantitative heart of the paper: an a-priori model of
+tree-based N-body computation that feeds the load-balancing partitioner.
+All functions are host-side NumPy (they run in the launcher / partitioner,
+never on device).
+
+Conventions: d = 2 (quadtree), L = tree depth, k = cut level, p = expansion
+terms, s = max particles per box, N_i = per-box particle count.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+D = 2                 # space dimension (quadtree; the model generalizes via d)
+N_CHILD = 4           # n_c
+N_IL = 27             # interaction-list size (2D upper bound, paper §5.2)
+N_ND = 9              # near-domain boxes (3x3 stencil incl. self)
+PARTICLE_BYTES = 28   # B, paper §5.3
+ARROW_BYTES = 108     # A, overlap arrow size, paper §5.3
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelParams:
+    level: int                   # L: leaf level of the global tree
+    cut: int                     # k: tree cut level -> 4^k subtrees
+    p: int                       # expansion order
+    slots: int                   # s: max particles per box
+    coeff_bytes: int = 16        # bytes per complex coefficient (complex128)
+    # calibration constants (seconds per unit); fit from measurements
+    t_flop: float = 1.0
+    t_byte: float = 1.0
+
+
+# ---------------------------------------------------------------------------
+# Work estimates (paper Eqs 13-15)
+# ---------------------------------------------------------------------------
+
+
+def work_nonleaf(p: int, n_c: int = N_CHILD, n_il: int = N_IL) -> float:
+    """Eq (13): O(p^2 (2 n_c + n_IL)) — M2M + L2L + M2L for one box."""
+    return float(p * p * (2 * n_c + n_il))
+
+
+def work_leaf(n_i: np.ndarray, p: int, n_il: int = N_IL, n_nd: int = N_ND,
+              neighbor_counts: np.ndarray | None = None) -> np.ndarray:
+    """Eq (14): O(2 N_i p + p^2 n_IL + n_nd N_i^2) per leaf box.
+
+    If ``neighbor_counts`` (sum of particle counts over the 3x3 stencil) is
+    given, the P2P term uses the *exact* N_i * sum_nd N_j product instead of
+    the paper's uniform n_nd * N_i^2 surrogate.
+    """
+    n_i = np.asarray(n_i, dtype=np.float64)
+    p2p = n_i * neighbor_counts if neighbor_counts is not None else n_nd * n_i * n_i
+    return 2.0 * n_i * p + float(p * p * n_il) + p2p
+
+
+def neighbor_count_sum(counts: np.ndarray) -> np.ndarray:
+    """Sum of per-box particle counts over each box's 3x3 near domain."""
+    padded = np.pad(counts, 1)
+    out = np.zeros_like(counts, dtype=np.float64)
+    for dy in (-1, 0, 1):
+        for dx in (-1, 0, 1):
+            n = counts.shape[0]
+            out += padded[1 + dy:1 + dy + n, 1 + dx:1 + dx + n]
+    return out
+
+
+def work_subtree(counts: np.ndarray, params: ModelParams) -> np.ndarray:
+    """Eq (15) evaluated exactly per subtree from leaf occupancy ``counts``.
+
+    counts: (2^L, 2^L) particles per leaf box (row-major grid).
+    Returns (4^k,) modeled work per subtree, ordered by subtree grid id
+    (row-major over the cut-level grid; use morton reorder for z-order).
+    """
+    L, k, p = params.level, params.cut, params.p
+    nsub = 1 << k
+    sub_leaf = 1 << (L - k)            # leaf boxes per subtree side
+    # Non-leaf boxes inside one subtree: levels k..L-1 of the global tree
+    # (the subtree root sits at cut level k).  Eq 15's first sum.
+    nonleaf_boxes = sum(4 ** (l - k) for l in range(k, L))
+    w_nonleaf = nonleaf_boxes * work_nonleaf(p)
+
+    nb = neighbor_count_sum(counts)
+    w_leaf = work_leaf(counts, p, neighbor_counts=nb)       # (2^L, 2^L)
+    w_leaf_sub = w_leaf.reshape(nsub, sub_leaf, nsub, sub_leaf).sum(axis=(1, 3))
+    return (w_leaf_sub + w_nonleaf).reshape(-1)
+
+
+def work_active_total(counts: np.ndarray, params: ModelParams) -> float:
+    """Total useful work (for padding-waste metrics on SPMD hardware)."""
+    return float(work_subtree(counts, params).sum())
+
+
+def work_padded_total(counts: np.ndarray, params: ModelParams) -> float:
+    """Work actually paid by the dense padded execution (all slots active)."""
+    full = np.full_like(counts, params.slots)
+    return float(work_subtree(full, params).sum())
+
+
+# ---------------------------------------------------------------------------
+# Communication estimates (paper Eqs 11-12)
+# ---------------------------------------------------------------------------
+
+
+def alpha_comm(p: int, coeff_bytes: int = 16) -> float:
+    """Bytes per expansion exchanged: p coefficients of ``coeff_bytes``."""
+    return float(p * coeff_bytes)
+
+
+def comm_lateral(params: ModelParams) -> float:
+    """Eq (11): sum_{n=k+1}^{L} alpha * 2^(n-k) * 4.
+
+    Boundary boxes of a subtree facing a lateral neighbor at global level n
+    form a line of 2^(n-k) boxes; the factor 4 covers the M2L ghost exchange
+    in both directions for both expansion rings (paper §5.1).
+    """
+    L, k = params.level, params.cut
+    a = alpha_comm(params.p, params.coeff_bytes)
+    return float(sum(a * (2 ** (n - k)) * 4 for n in range(k + 1, L + 1)))
+
+
+def comm_diagonal(params: ModelParams) -> float:
+    """Eq (12): alpha * (L - k - 1) * 4 — only corner boxes at each level.
+
+    The paper prints ``alpha ((k - L) - 1) * 4``; the cut level k is always
+    < L so we read it as the magnitude |L - k| - 1 (one corner box per level
+    below the cut, excluding the subtree root).
+    """
+    L, k = params.level, params.cut
+    a = alpha_comm(params.p, params.coeff_bytes)
+    return float(a * max(L - k - 1, 0) * 4)
+
+
+def comm_particles_boundary(params: ModelParams, counts_edge: float) -> float:
+    """Ghost-particle traffic for P2P across a subtree face (model extension).
+
+    The paper folds this into 'communication of particles in the local
+    domain'; we expose it so the graph can weight particle-heavy boundaries.
+    counts_edge: total particles in the boundary boxes of the shared face.
+    """
+    return PARTICLE_BYTES * counts_edge
+
+
+def comm_root_tree(params: ModelParams) -> float:
+    """M2M/L2L traffic between a subtree and the root tree (per subtree)."""
+    return alpha_comm(params.p, params.coeff_bytes) * 2.0
+
+
+# ---------------------------------------------------------------------------
+# Memory estimates (paper §5.3, Tables 1 and 2)
+# ---------------------------------------------------------------------------
+
+
+def total_boxes(level: int) -> int:
+    """Lambda = sum_l 4^l = (4^(L+1) - 1) / 3."""
+    return (4 ** (level + 1) - 1) // 3
+
+
+def memory_serial(params: ModelParams, n_particles: int) -> dict[str, float]:
+    """Table 1 (bytes).  d=2, B=28, Lambda = total boxes, s = slots."""
+    L, p, s = params.level, params.p, params.slots
+    lam = total_boxes(L)
+    d, B = D, PARTICLE_BYTES
+    return {
+        "box_centers": 8 * d * lam,
+        "interaction_boxes": (2 * 4) * lam + (27 * 4) * lam,
+        "interaction_values": (2 * 4) * lam + 27 * (8 * d + 16 * p) * lam,
+        "multipole_coefficients": 16 * p * lam,
+        "temporary_coefficients": 16 * p * lam,
+        "local_coefficients": 16 * p * lam,
+        "local_particles": (2 * 4) * lam + B * n_particles,
+        "neighbor_particles": (2 * 4) * lam + 8 * B * s * (2 ** (d * L)),
+    }
+
+
+def memory_parallel(params: ModelParams, n_procs: int, n_local_trees: int,
+                    n_boundary_boxes: int) -> dict[str, float]:
+    """Table 2 (bytes): explicitly parallel structures per process."""
+    s, A = params.slots, ARROW_BYTES
+    return {
+        "partition": (2 * 4) * n_procs + 4 * n_local_trees,
+        "inverse_partition": 4 * n_local_trees,
+        "neighbor_send_overlap": n_boundary_boxes * s * A,
+        "neighbor_recv_overlap": n_boundary_boxes * s * A,
+        "interaction_send_overlap": 27 * n_boundary_boxes * A,
+        "interaction_recv_overlap": 27 * n_boundary_boxes * A,
+    }
+
+
+# ---------------------------------------------------------------------------
+# Greengard-Gropp running-time model (paper Eq 10) — kept as the baseline
+# model our extension is compared against in benchmarks/fmm_scaling.py.
+# ---------------------------------------------------------------------------
+
+
+def greengard_gropp_time(n: int, n_procs: int, boxes_finest: int,
+                         a: float = 1.0, b: float = 1.0, c: float = 1.0,
+                         d: float = 1.0) -> float:
+    """T = a N/P + b log4(P) + c N/(B P) + d N B / P   (lower-order e dropped)."""
+    import math
+
+    P, B = n_procs, boxes_finest
+    return (a * n / P + b * math.log(P, 4.0) + c * n / (B * P) + d * n * B / P)

@@ -1,0 +1,206 @@
+"""2D complex multipole/local expansions and translation operators.
+
+The far-field kernel is the singular complex velocity kernel
+
+    W(z) = sum_j q_j / (z - z_j),        q_j = gamma_j / (2*pi*i),
+
+which is the paper's ``1/|x|^2``-type substitution kernel (PetFMM §3): the
+Gaussian-regularized Biot-Savart kernel equals this singular kernel times a
+mollifier that is ~1 at interaction-list distances.
+
+Multipole expansion (ME) about a box center c with radius (side) r:
+
+    W(z) = sum_{k=0}^{p-1} a_k / (z - c)^{k+1}
+
+Local expansion (LE):
+
+    W(z) = sum_{l=0}^{p-1} b_l (z - c)^l
+
+**Scale normalization (beyond-paper, see DESIGN.md §3):** we store
+``ahat_k = a_k r^-k`` and ``bhat_l = b_l r^l``.  All translation operators
+then become *level independent*; M2L carries a single ``1/r`` scalar (the
+kernel has dimension 1/length).  One (4,p,p) M2M tensor, one (40,p,p) M2L
+tensor and one (4,p,p) L2L tensor serve the whole tree and stay resident in
+VMEM inside the Pallas kernels.
+"""
+from __future__ import annotations
+
+import functools
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from .quadtree import M2L_OFFSETS, M2L_VALIDITY
+
+# Child offsets within a parent, (cy, cx) in {0,1}^2; delta_hat = (c_child -
+# c_parent) / r_parent = ((cx - .5)/2, (cy - .5)/2).
+CHILD_OFFSETS = [(cy, cx) for cy in range(2) for cx in range(2)]
+
+
+def _binom_table(n: int) -> np.ndarray:
+    c = np.zeros((n, n), dtype=np.float64)
+    c[:, 0] = 1.0
+    for i in range(1, n):
+        for j in range(1, i + 1):
+            c[i, j] = c[i - 1, j - 1] + c[i - 1, j]
+    return c
+
+
+@functools.lru_cache(maxsize=None)
+def m2m_operator(p: int) -> np.ndarray:
+    """(4, p, p) tensor: ahat_parent[m] = sum_k Op[c, m, k] ahat_child[k].
+
+    Op[c, m, k] = C(m, k) * dhat_c^(m-k) * 2^-k   (k <= m), with
+    dhat_c = (child center - parent center) / r_parent.
+    """
+    C = _binom_table(p)
+    op = np.zeros((4, p, p), dtype=np.complex128)
+    for ci, (cy, cx) in enumerate(CHILD_OFFSETS):
+        dhat = ((cx - 0.5) / 2.0) + 1j * ((cy - 0.5) / 2.0)
+        for m in range(p):
+            for k in range(m + 1):
+                op[ci, m, k] = C[m, k] * dhat ** (m - k) * 2.0 ** (-k)
+    return op
+
+
+@functools.lru_cache(maxsize=None)
+def l2l_operator(p: int) -> np.ndarray:
+    """(4, p, p) tensor: bhat_child[m] = sum_l Op[c, m, l] bhat_parent[l].
+
+    Op[c, m, l] = 2^-m * C(l, m) * dhat_c^(l-m)   (l >= m).
+    """
+    C = _binom_table(p)
+    op = np.zeros((4, p, p), dtype=np.complex128)
+    for ci, (cy, cx) in enumerate(CHILD_OFFSETS):
+        dhat = ((cx - 0.5) / 2.0) + 1j * ((cy - 0.5) / 2.0)
+        for m in range(p):
+            for l in range(m, p):
+                op[ci, m, l] = 2.0 ** (-m) * C[l, m] * dhat ** (l - m)
+    return op
+
+
+@functools.lru_cache(maxsize=None)
+def m2l_operator(p: int) -> np.ndarray:
+    """(40, p, p) tensor: bhat_tgt[l] = (1/r) sum_k Op[o, l, k] ahat_src[k].
+
+    For source at integer offset d = (dx, dy) from the target (in units of
+    the level box size), dhat = c_src - c_tgt (normalized) = dx + 1j*dy and
+
+        Op[o, l, k] = (-1)^(k+1) * C(k+l, l) * dhat^-(k+l+1).
+    """
+    C = _binom_table(2 * p)
+    op = np.zeros((len(M2L_OFFSETS), p, p), dtype=np.complex128)
+    for oi, (dx, dy) in enumerate(M2L_OFFSETS):
+        dhat = float(dx) + 1j * float(dy)
+        for l in range(p):
+            for k in range(p):
+                op[oi, l, k] = (-1.0) ** (k + 1) * C[k + l, l] * dhat ** (-(k + l + 1))
+    return op
+
+
+# ---------------------------------------------------------------------------
+# Stage implementations (pure jnp; dense level grids).
+# Grids: me / le at level l have shape (n, n, p), n = 2**l, row-major (iy,ix).
+# ---------------------------------------------------------------------------
+
+
+def _powers(zhat: jnp.ndarray, p: int) -> jnp.ndarray:
+    """Stack [zhat^0, ..., zhat^(p-1)] along a new last axis."""
+    ones = jnp.ones_like(zhat)
+    steps = [ones]
+    for _ in range(p - 1):
+        steps.append(steps[-1] * zhat)
+    return jnp.stack(steps, axis=-1)
+
+
+def p2m(z: jnp.ndarray, q: jnp.ndarray, mask: jnp.ndarray, centers: jnp.ndarray,
+        r: float, p: int) -> jnp.ndarray:
+    """Particles -> normalized MEs at the leaf level.  -> (n, n, p)."""
+    zhat = (z - centers[..., None]) / r            # (n, n, s)
+    pw = _powers(zhat, p)                          # (n, n, s, p)
+    qm = jnp.where(mask, q, 0.0)
+    return jnp.einsum("yxs,yxsk->yxk", qm, pw)
+
+
+def m2m(me_child: jnp.ndarray, p: int) -> jnp.ndarray:
+    """Child level grid (2ny, 2nx, p) -> parent grid (ny, nx, p).
+
+    Rectangular grids supported (row slabs under the parallel decomposition).
+    """
+    op = jnp.asarray(m2m_operator(p), dtype=me_child.dtype)
+    ny, nx = me_child.shape[0] // 2, me_child.shape[1] // 2
+    c = me_child.reshape(ny, 2, nx, 2, p)          # [py, cy, px, cx, k]
+    # CHILD_OFFSETS order is (cy, cx) row-major -> index c = cy*2+cx
+    c = c.transpose(0, 2, 1, 3, 4).reshape(ny, nx, 4, p)
+    return jnp.einsum("yxck,cmk->yxm", c, op)
+
+
+def parity_mask(n: int, validity_o: np.ndarray) -> np.ndarray:
+    """(n, n) bool mask from a (2, 2) [py, px] parity-validity table."""
+    return parity_mask_rect(n, n, validity_o)
+
+
+def parity_mask_rect(rows: int, cols: int, validity_o: np.ndarray,
+                     row0: int = 0) -> np.ndarray:
+    """(rows, cols) parity mask; ``row0`` is the global index of row 0."""
+    iy = (np.arange(rows) + row0) % 2
+    ix = np.arange(cols) % 2
+    return validity_o[np.ix_(iy, ix)]
+
+
+def m2l_reference(me: jnp.ndarray, level: int, p: int) -> jnp.ndarray:
+    """Dense M2L at one level via 40 static-slice shifted matmuls.
+
+    This is the pure-jnp path (and the oracle for the Pallas kernel).
+    """
+    n = me.shape[0]
+    r = 2.0 ** (-level)
+    ops = m2l_operator(p)
+    pad = jnp.pad(me, ((3, 3), (3, 3), (0, 0)))
+    le = jnp.zeros_like(me)
+    for oi, (dx, dy) in enumerate(M2L_OFFSETS):
+        src = pad[3 + dy:3 + dy + n, 3 + dx:3 + dx + n, :]
+        op = jnp.asarray(ops[oi], dtype=me.dtype)
+        contrib = jnp.einsum("yxk,lk->yxl", src, op)
+        m = jnp.asarray(parity_mask(n, M2L_VALIDITY[oi]), dtype=me.dtype)
+        le = le + contrib * m[..., None]
+    return le / r
+
+
+def l2l(le_parent: jnp.ndarray, p: int) -> jnp.ndarray:
+    """Parent grid (ny, nx, p) -> child grid (2ny, 2nx, p)."""
+    op = jnp.asarray(l2l_operator(p), dtype=le_parent.dtype)
+    ny, nx = le_parent.shape[0], le_parent.shape[1]
+    c = jnp.einsum("yxl,cml->yxcm", le_parent, op)  # (ny, nx, 4, m)
+    c = c.reshape(ny, nx, 2, 2, p).transpose(0, 2, 1, 3, 4)
+    return c.reshape(2 * ny, 2 * nx, p)
+
+
+def l2p(le: jnp.ndarray, z: jnp.ndarray, centers: jnp.ndarray, r: float,
+        p: int) -> jnp.ndarray:
+    """Evaluate leaf LEs at particle positions -> complex W, (n, n, s)."""
+    zhat = (z - centers[..., None]) / r
+    pw = _powers(zhat, p)                          # (n, n, s, p)
+    return jnp.einsum("yxl,yxsl->yxs", le, pw)
+
+
+# -- Expansion evaluation helpers (unit tests / debugging) ------------------
+
+
+def eval_me(ahat: np.ndarray, center: complex, r: float, z: np.ndarray) -> np.ndarray:
+    """Evaluate a normalized ME at points z (far from the box)."""
+    zh = (np.asarray(z) - center) / r
+    out = np.zeros_like(zh, dtype=np.complex128)
+    for k in range(len(ahat) - 1, -1, -1):
+        out = (out + ahat[k]) / zh
+    return out / r
+
+
+def eval_le(bhat: np.ndarray, center: complex, r: float, z: np.ndarray) -> np.ndarray:
+    """Evaluate a normalized LE at points z (inside the box)."""
+    zh = (np.asarray(z) - center) / r
+    out = np.zeros_like(zh, dtype=np.complex128)
+    for l in range(len(bhat) - 1, -1, -1):
+        out = out * zh + bhat[l]
+    return out

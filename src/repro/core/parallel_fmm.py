@@ -1,0 +1,174 @@
+"""Distributed FMM under ``shard_map`` (paper §4, TPU-native form).
+
+Execution layout ("mode A", DESIGN.md §3): the leaf grid is sharded into
+row slabs of subtrees along y.  Levels ``l >= l_cut`` are sharded the same
+way; levels below the cut form the paper's *root tree* and are replicated
+via one ``all_gather`` (the SPMD equivalent of the paper's root-tree rank +
+broadcast, with no serial bottleneck).
+
+Communication structure (maps 1:1 onto the paper's Fig 3):
+  * M2M / L2L  — subtree <-> root tree only: the single all_gather at the
+    cut level (paper: "no communication between subtrees" for these ops);
+  * M2L        — lateral/diagonal neighbor subtrees: ±3-row halo exchange
+    per sharded level via ``lax.ppermute``;
+  * P2P        — neighbor particles: ±1-row halo of (z, q, mask).
+
+The cost model (core/cost_model.py) predicts exactly these volumes; the
+partitioner chooses the slab decomposition and drives the modeled
+reproduction of the paper's scaling experiments (benchmarks/fmm_scaling.py).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+from . import expansions as ex
+from .quadtree import M2L_OFFSETS, M2L_VALIDITY, P2P_OFFSETS, Tree, box_centers, box_size
+from .vortex import pairwise_w
+
+
+def _halo_exchange_rows(x: jnp.ndarray, width: int, axis_name: str) -> jnp.ndarray:
+    """Concatenate ±``width`` ghost rows from slab neighbors along axis 0.
+
+    Edge devices receive zeros (consistent with the serial zero padding of
+    the domain boundary).  Two ``ppermute`` calls: one up, one down.
+    """
+    P_ = jax.lax.axis_size(axis_name)
+    if P_ == 1:
+        zeros = jnp.zeros((width,) + x.shape[1:], x.dtype)
+        return jnp.concatenate([zeros, x, zeros], axis=0)
+    top_rows = x[:width]      # my top rows -> neighbor above's bottom halo
+    bot_rows = x[-width:]     # my bottom rows -> neighbor below's top halo
+    # send bottom rows to d+1 (they become d+1's top halo)
+    from_above = jax.lax.ppermute(bot_rows, axis_name,
+                                  [(d, d + 1) for d in range(P_ - 1)])
+    # send top rows to d-1 (they become d-1's bottom halo)
+    from_below = jax.lax.ppermute(top_rows, axis_name,
+                                  [(d + 1, d) for d in range(P_ - 1)])
+    return jnp.concatenate([from_above, x, from_below], axis=0)
+
+
+def _m2l_slab(me_halo: jnp.ndarray, level: int, p: int) -> jnp.ndarray:
+    """M2L over a row slab with ±3 ghost rows already attached.
+
+    me_halo: (rows+6, n, p).  Returns (rows, n, p).  Requires the slab's
+    global start row to be even (guaranteed: rows-per-device is even), so
+    the parity masks match the serial pattern.
+    """
+    rows = me_halo.shape[0] - 6
+    n = me_halo.shape[1]
+    r = box_size(level)
+    ops = ex.m2l_operator(p)
+    pad = jnp.pad(me_halo, ((0, 0), (3, 3), (0, 0)))
+    le = jnp.zeros((rows, n, p), me_halo.dtype)
+    for oi, (dx, dy) in enumerate(M2L_OFFSETS):
+        src = pad[3 + dy:3 + dy + rows, 3 + dx:3 + dx + n, :]
+        op = jnp.asarray(ops[oi], dtype=me_halo.dtype)
+        contrib = jnp.einsum("yxk,lk->yxl", src, op)
+        m = jnp.asarray(ex.parity_mask_rect(rows, n, M2L_VALIDITY[oi]),
+                        dtype=me_halo.dtype)
+        le = le + contrib * m[..., None]
+    return le / r
+
+
+def _p2p_slab(z, q, mask, sigma, axis_name: str) -> jnp.ndarray:
+    """Near-field direct interactions over a row slab with ±1 ghost rows."""
+    rows, n, s = z.shape
+    zh = _halo_exchange_rows(z, 1, axis_name)
+    qh = _halo_exchange_rows(q, 1, axis_name)
+    mh = _halo_exchange_rows(mask, 1, axis_name)
+    zp = jnp.pad(zh, ((0, 0), (1, 1), (0, 0)))
+    qp = jnp.pad(qh, ((0, 0), (1, 1), (0, 0)))
+    mp = jnp.pad(mh, ((0, 0), (1, 1), (0, 0)))
+    w = jnp.zeros_like(z)
+    for (dx, dy) in P2P_OFFSETS:
+        zs = zp[1 + dy:1 + dy + rows, 1 + dx:1 + dx + n]
+        qs = qp[1 + dy:1 + dy + rows, 1 + dx:1 + dx + n]
+        ms = mp[1 + dy:1 + dy + rows, 1 + dx:1 + dx + n]
+        w = w + pairwise_w(z, zs, qs, ms, sigma)
+    return w
+
+
+def _parallel_fmm_body(z, q, mask, *, level: int, p: int, sigma, axis_name: str):
+    """Runs on each device over its (rows, n, s) slab of the leaf grid."""
+    L = level
+    n = 1 << L
+    P_ = jax.lax.axis_size(axis_name)
+    a = int(np.log2(P_)) if P_ > 1 else 0
+    # sharded levels: rows/device >= 4 (single-hop ±3 halo); replicated below.
+    l_cut = min(L, max(2, a + 2))
+    dtype = z.dtype
+
+    my_row0 = jax.lax.axis_index(axis_name) * (n // P_)
+    centers = jnp.asarray(box_centers(L), dtype=dtype)
+    my_centers = jax.lax.dynamic_slice_in_dim(centers, my_row0, n // P_, 0)
+
+    # ---- upward sweep -----------------------------------------------------
+    me = {L: ex.p2m(z, q, mask, my_centers, box_size(L), p)}
+    l = L
+    while l > l_cut:
+        me[l - 1] = ex.m2m(me[l], p)
+        l -= 1
+    # gather the cut level -> replicated root tree (paper's M2M to root)
+    me_cut_full = jax.lax.all_gather(me[l_cut], axis_name, axis=0, tiled=True)
+    me_rep = {l_cut: me_cut_full}
+    for lv in range(l_cut, 0, -1):
+        me_rep[lv - 1] = ex.m2m(me_rep[lv], p)
+
+    # ---- downward sweep ---------------------------------------------------
+    # replicated root-tree levels 2 .. l_cut
+    le_rep: dict[int, jnp.ndarray] = {}
+    for lv in range(2, l_cut + 1):
+        le_rep[lv] = ex.m2l_reference(me_rep[lv], lv, p)
+        if lv > 2:
+            le_rep[lv] = le_rep[lv] + ex.l2l(le_rep[lv - 1], p)
+    # sharded levels l_cut+1 .. L
+    le_prev = None  # my slab's LE at previous (coarser) level
+    if l_cut >= 2 and L > l_cut:
+        # slice my slab rows out of the replicated cut-level LE
+        le_prev = jax.lax.dynamic_slice_in_dim(
+            le_rep[l_cut], jax.lax.axis_index(axis_name) * ((1 << l_cut) // P_),
+            (1 << l_cut) // P_, 0)
+    for lv in range(l_cut + 1, L + 1):
+        me_halo = _halo_exchange_rows(me[lv], 3, axis_name)
+        le_lv = _m2l_slab(me_halo, lv, p)
+        if le_prev is not None:
+            le_lv = le_lv + ex.l2l(le_prev, p)
+        le_prev = le_lv
+    le_leaf = le_prev if L > l_cut else jax.lax.dynamic_slice_in_dim(
+        le_rep[L], jax.lax.axis_index(axis_name) * (n // P_), n // P_, 0)
+
+    # ---- evaluation -------------------------------------------------------
+    far = ex.l2p(le_leaf, z, my_centers, box_size(L), p)
+    near = _p2p_slab(z, q, mask, sigma, axis_name)
+    return jnp.where(mask, far + near, 0.0)
+
+
+@functools.partial(jax.jit, static_argnames=("p", "mesh", "mesh_axis"))
+def parallel_fmm_velocity(tree: Tree, p: int, mesh: Optional[Mesh] = None,
+                          mesh_axis: str = "data") -> jnp.ndarray:
+    """Distributed FMM evaluation. Shards the leaf grid over ``mesh_axis``.
+
+    Falls back to a 1-device mesh when ``mesh`` is None.  The number of
+    devices along the axis must divide 2**level with an even quotient.
+    """
+    if mesh is None:
+        mesh = Mesh(np.array(jax.devices()[:1]), ("data",))
+    P_ = mesh.shape[mesh_axis]
+    n = tree.nside
+    if tree.level < 2:
+        raise ValueError("parallel FMM requires tree level >= 2")
+    if n % P_ or (n // P_) % 2:
+        raise ValueError(f"grid side {n} must split into even slabs over {P_} devices")
+
+    body = functools.partial(_parallel_fmm_body, level=tree.level, p=p,
+                             sigma=tree.sigma, axis_name=mesh_axis)
+    spec = P(mesh_axis, None, None)
+    fn = jax.shard_map(body, mesh=mesh, in_specs=(spec, spec, spec),
+                       out_specs=spec)
+    return fn(tree.z, tree.q, tree.mask)

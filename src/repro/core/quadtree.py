@@ -1,0 +1,236 @@
+"""Quadtree geometry, Morton indexing, and dense tree construction.
+
+The paper (PetFMM, §2.1) uses a pointer quadtree.  On TPU we use *dense level
+grids*: level ``l`` of the tree is a ``(2^l, 2^l, ...)`` array in row-major
+grid order ``(iy, ix)``.  Morton (z-order) indices are used by the
+partitioner (paper §4/§5.1) to enumerate subtrees and their neighbor sets.
+
+Domain is the unit square ``[0, 1]^2``.  Box side at level ``l`` is
+``2**-l``; particle positions are complex ``z = x + 1j*y``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+# ---------------------------------------------------------------------------
+# Morton (z-order) indexing — used by the partitioner, not the dense kernels.
+# ---------------------------------------------------------------------------
+
+
+def _part1by1(x: np.ndarray) -> np.ndarray:
+    """Interleave zeros: abcd -> 0a0b0c0d (supports up to 16-bit inputs)."""
+    # NB: copy before the in-place ops — ``asarray`` aliases uint32 inputs
+    # and the bit-twiddling must never mutate the caller's array.
+    x = np.array(x, dtype=np.uint32, copy=True)
+    x &= np.uint32(0x0000FFFF)
+    x = (x | (x << 8)) & np.uint32(0x00FF00FF)
+    x = (x | (x << 4)) & np.uint32(0x0F0F0F0F)
+    x = (x | (x << 2)) & np.uint32(0x33333333)
+    x = (x | (x << 1)) & np.uint32(0x55555555)
+    return x
+
+
+def _compact1by1(x: np.ndarray) -> np.ndarray:
+    x = np.array(x, dtype=np.uint32, copy=True)   # never mutate the caller
+    x &= np.uint32(0x55555555)
+    x = (x | (x >> 1)) & np.uint32(0x33333333)
+    x = (x | (x >> 2)) & np.uint32(0x0F0F0F0F)
+    x = (x | (x >> 4)) & np.uint32(0x00FF00FF)
+    x = (x | (x >> 8)) & np.uint32(0x0000FFFF)
+    return x
+
+
+def morton_encode(ix: np.ndarray, iy: np.ndarray) -> np.ndarray:
+    """(ix, iy) grid coords -> z-order index (paper's quadtree numbering)."""
+    return (_part1by1(iy) << 1) | _part1by1(ix)
+
+
+def morton_decode(code: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+    code = np.asarray(code, dtype=np.uint32)
+    return _compact1by1(code), _compact1by1(code >> 1)
+
+
+# ---------------------------------------------------------------------------
+# Interaction-list algebra for the dense uniform tree.
+#
+# A source box at relative offset (dx, dy), |dx|,|dy| <= 3, is in the
+# interaction list of a target box iff (a) it is not a near neighbor
+# (max(|dx|,|dy|) >= 2) and (b) its parent is a neighbor of the target's
+# parent.  Condition (b) depends only on the *parity* of the target's grid
+# coordinate:   |floor((parity + d) / 2)| <= 1.
+# There are 40 candidate offsets; each parity class admits exactly 27.
+# ---------------------------------------------------------------------------
+
+M2L_OFFSETS: list[tuple[int, int]] = [
+    (dx, dy)
+    for dy in range(-3, 4)
+    for dx in range(-3, 4)
+    if max(abs(dx), abs(dy)) >= 2
+]
+assert len(M2L_OFFSETS) == 40
+
+
+def _parity_valid(parity: int, d: int) -> bool:
+    return abs((parity + d) // 2) <= 1 if (parity + d) >= 0 else abs(-((-parity - d + 1) // 2)) <= 1
+
+
+def parity_valid(parity: int, d: int) -> bool:
+    """True iff parent(target+d) is a neighbor of parent(target)."""
+    import math
+
+    return abs(math.floor((parity + d) / 2)) <= 1
+
+
+# VALIDITY[o, py, px]: offset o is in the interaction list of boxes with
+# grid-coordinate parities (iy % 2 == py, ix % 2 == px).
+M2L_VALIDITY = np.zeros((len(M2L_OFFSETS), 2, 2), dtype=bool)
+for _o, (_dx, _dy) in enumerate(M2L_OFFSETS):
+    for _py in range(2):
+        for _px in range(2):
+            M2L_VALIDITY[_o, _py, _px] = parity_valid(_px, _dx) and parity_valid(_py, _dy)
+# Each parity class has exactly 27 interaction-list members (paper §5.2).
+assert (M2L_VALIDITY.sum(axis=0) == 27).all()
+
+# Near-field stencil (self + 8 neighbors).
+P2P_OFFSETS: list[tuple[int, int]] = [(dx, dy) for dy in (-1, 0, 1) for dx in (-1, 0, 1)]
+
+
+# ---------------------------------------------------------------------------
+# Geometry helpers
+# ---------------------------------------------------------------------------
+
+
+def box_size(level: int) -> float:
+    return 2.0 ** (-level)
+
+
+def box_centers(level: int) -> np.ndarray:
+    """Complex centers of all boxes at ``level``, shape (2^l, 2^l) [iy, ix]."""
+    n = 1 << level
+    r = box_size(level)
+    xs = (np.arange(n) + 0.5) * r
+    cx, cy = np.meshgrid(xs, xs, indexing="xy")  # [iy, ix]
+    return (cx + 1j * cy).astype(np.complex128)
+
+
+# ---------------------------------------------------------------------------
+# Dense tree container
+# ---------------------------------------------------------------------------
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class Tree:
+    """Dense uniform quadtree of particles.
+
+    ``z``/``q``/``mask`` have shape ``(n, n, s)`` with ``n = 2**level`` leaf
+    boxes per side and ``s`` padded slots per box.  ``q`` already includes
+    the ``gamma / (2*pi*i)`` pseudo-charge factor for the Biot-Savart kernel.
+    """
+
+    z: jax.Array       # complex64 (n, n, s) particle positions
+    q: jax.Array       # complex64 (n, n, s) pseudo-charges
+    mask: jax.Array    # bool      (n, n, s) slot occupancy
+    level: int = dataclasses.field(metadata=dict(static=True))
+    sigma: float = dataclasses.field(metadata=dict(static=True))
+
+    @property
+    def nside(self) -> int:
+        return 1 << self.level
+
+    @property
+    def slots(self) -> int:
+        return self.z.shape[-1]
+
+    @property
+    def num_particles(self) -> jax.Array:
+        return self.mask.sum()
+
+
+@dataclasses.dataclass(frozen=True)
+class TreeIndex:
+    """Host-side bookkeeping to map dense tree slots back to input order."""
+
+    box_of_particle: np.ndarray   # (N,) flat row-major box id per input particle
+    slot_of_particle: np.ndarray  # (N,) slot within the box
+    counts: np.ndarray            # (n, n) particles per box
+
+
+def choose_level(num_particles: int, target_per_box: float = 4.0, max_level: int = 12) -> int:
+    """Pick the tree depth so the mean leaf occupancy ~ ``target_per_box``."""
+    level = 0
+    while level < max_level and num_particles / float(4 ** (level + 1)) >= target_per_box:
+        level += 1
+    return level
+
+
+def build_tree(
+    positions: np.ndarray,
+    gamma: np.ndarray,
+    level: int,
+    sigma: float,
+    slots: Optional[int] = None,
+    dtype=np.complex64,
+) -> tuple[Tree, TreeIndex]:
+    """Bin particles into the dense leaf grid (host-side, NumPy).
+
+    positions: (N, 2) float in [0, 1)^2;  gamma: (N,) real circulations.
+    ``slots`` pads every box to a fixed capacity (defaults to the max
+    occupancy).  This is the TPU-native replacement for the paper's ragged
+    per-box particle lists (see DESIGN.md §3).
+    """
+    positions = np.asarray(positions, dtype=np.float64)
+    gamma = np.asarray(gamma, dtype=np.float64)
+    n = 1 << level
+    ij = np.clip((positions * n).astype(np.int64), 0, n - 1)
+    ix, iy = ij[:, 0], ij[:, 1]
+    box = iy * n + ix  # flat row-major box id
+
+    order = np.argsort(box, kind="stable")
+    sorted_box = box[order]
+    counts = np.bincount(sorted_box, minlength=n * n)
+    max_occ = int(counts.max()) if counts.size else 0
+    if slots is None:
+        slots = max(max_occ, 1)
+    if max_occ > slots:
+        raise ValueError(f"box occupancy {max_occ} exceeds slot capacity {slots}")
+
+    # slot index = rank of the particle within its (sorted) box run
+    starts = np.zeros(n * n + 1, dtype=np.int64)
+    np.cumsum(counts, out=starts[1:])
+    slot_sorted = np.arange(len(box)) - starts[sorted_box]
+
+    zflat = np.zeros((n * n, slots), dtype=np.complex128)
+    qflat = np.zeros((n * n, slots), dtype=np.complex128)
+    mflat = np.zeros((n * n, slots), dtype=bool)
+    zsrc = positions[order, 0] + 1j * positions[order, 1]
+    qsrc = gamma[order] / (2j * np.pi)
+    zflat[sorted_box, slot_sorted] = zsrc
+    qflat[sorted_box, slot_sorted] = qsrc
+    mflat[sorted_box, slot_sorted] = True
+
+    slot_of_particle = np.empty(len(box), dtype=np.int64)
+    slot_of_particle[order] = slot_sorted
+
+    tree = Tree(
+        z=jnp.asarray(zflat.reshape(n, n, slots), dtype=dtype),
+        q=jnp.asarray(qflat.reshape(n, n, slots), dtype=dtype),
+        mask=jnp.asarray(mflat.reshape(n, n, slots)),
+        level=level,
+        sigma=float(sigma),
+    )
+    index = TreeIndex(box_of_particle=box, slot_of_particle=slot_of_particle,
+                      counts=counts.reshape(n, n))
+    return tree, index
+
+
+def gather_particle_values(values: np.ndarray, index: TreeIndex) -> np.ndarray:
+    """Read per-slot results back into the original particle order."""
+    n2 = index.counts.size
+    flat = np.asarray(values).reshape(n2, -1)
+    return flat[index.box_of_particle, index.slot_of_particle]

@@ -1,0 +1,88 @@
+"""Pallas TPU kernel: fused multipole-to-local (M2L) transformation.
+
+M2L is the second FMM hot spot (paper Eq 10, term ``c``): every box at every
+level receives up to 27 (p x p) transform-accumulates.  The naive dense path
+writes the LE accumulator to HBM 40 times (once per candidate offset); this
+kernel keeps the accumulator in VMEM and performs the whole 40-offset
+reduction as ONE GEMM:
+
+  * the wrapper gathers, per target box, the 40 candidate source MEs
+    (validity/parity masks folded in at gather time — invalid sources are
+    zeroed, so the kernel is a pure contraction);
+  * scale normalization (DESIGN.md §3) makes the (40, p, p) operator tensor
+    level-independent, so it lives in VMEM once, reshaped to a
+    (40*p, p) matrix;
+  * per block of boxes:  LE(B, p) = ME_gathered(B, 40*p) @ Op(40*p, p),
+    a single MXU matmul with complex arithmetic expanded to 4 real GEMMs.
+
+On real hardware pad p (17) and 40*p (680) up to lane multiples; correctness
+is independent of padding.
+"""
+from __future__ import annotations
+
+import functools
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from ..core import expansions as ex
+from ..core.quadtree import M2L_OFFSETS, M2L_VALIDITY
+
+
+def _m2l_kernel(ar_ref, ai_ref, opr_ref, opi_ref, br_ref, bi_ref):
+    ar = ar_ref[...]        # (BB, 40p)
+    ai = ai_ref[...]
+    opr = opr_ref[...]      # (40p, p)
+    opi = opi_ref[...]
+    # complex GEMM via 4 real GEMMs (MXU)
+    br_ref[...] = jnp.dot(ar, opr, preferred_element_type=jnp.float32) - \
+        jnp.dot(ai, opi, preferred_element_type=jnp.float32)
+    bi_ref[...] = jnp.dot(ar, opi, preferred_element_type=jnp.float32) + \
+        jnp.dot(ai, opr, preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("level", "p", "block_boxes", "interpret"))
+def m2l_pallas(me: jnp.ndarray, level: int, p: int, block_boxes: int = 128,
+               interpret: bool = True) -> jnp.ndarray:
+    """Fused M2L over a (ny, nx, p) complex ME grid -> (ny, nx, p) LE grid."""
+    ny, nx = me.shape[:2]
+    nb = ny * nx
+    r = 2.0 ** (-level)
+
+    # --- gather the 40 candidate sources per box, masks folded in ---------
+    pad = jnp.pad(me, ((3, 3), (3, 3), (0, 0)))
+    slabs = []
+    for oi, (dx, dy) in enumerate(M2L_OFFSETS):
+        src = pad[3 + dy:3 + dy + ny, 3 + dx:3 + dx + nx, :]
+        m = jnp.asarray(ex.parity_mask_rect(ny, nx, M2L_VALIDITY[oi]),
+                        dtype=me.dtype)
+        slabs.append(src * m[..., None])
+    gathered = jnp.stack(slabs, axis=2).reshape(nb, 40 * p)   # (nb, 40p)
+
+    ops = np.transpose(ex.m2l_operator(p), (0, 2, 1)).reshape(40 * p, p)
+    opr = jnp.asarray(ops.real, dtype=jnp.float32)
+    opi = jnp.asarray(ops.imag, dtype=jnp.float32)
+
+    nb_pad = -(-nb // block_boxes) * block_boxes
+    ar = jnp.pad(gathered.real.astype(jnp.float32), ((0, nb_pad - nb), (0, 0)))
+    ai = jnp.pad(gathered.imag.astype(jnp.float32), ((0, nb_pad - nb), (0, 0)))
+
+    grid = (nb_pad // block_boxes,)
+    in_specs = [
+        pl.BlockSpec((block_boxes, 40 * p), lambda i: (i, 0)),
+        pl.BlockSpec((block_boxes, 40 * p), lambda i: (i, 0)),
+        pl.BlockSpec((40 * p, p), lambda i: (0, 0)),   # operator: VMEM-resident
+        pl.BlockSpec((40 * p, p), lambda i: (0, 0)),
+    ]
+    out_specs = [pl.BlockSpec((block_boxes, p), lambda i: (i, 0))] * 2
+    out_shape = [jax.ShapeDtypeStruct((nb_pad, p), jnp.float32)] * 2
+
+    br, bi = pl.pallas_call(
+        _m2l_kernel, grid=grid, in_specs=in_specs, out_specs=out_specs,
+        out_shape=out_shape, interpret=interpret,
+    )(ar, ai, opr, opi)
+
+    le = (br[:nb] + 1j * bi[:nb]).reshape(ny, nx, p).astype(me.dtype)
+    return le / r

@@ -1,0 +1,36 @@
+"""jit'd public wrappers for the Pallas kernels.
+
+``interpret`` defaults to True off-TPU (the Pallas interpreter executes the
+kernel body on CPU for validation); on TPU backends the compiled kernels
+run natively.
+"""
+from __future__ import annotations
+
+import jax
+
+from . import flash_attn as _fa
+from . import m2l as _m2l
+from . import p2p as _p2p
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def p2p_apply(tree, block_boxes: int = 64):
+    """P2P near field for a core.quadtree.Tree -> complex W (n, n, s)."""
+    return _p2p.p2p_pallas(tree.z, tree.q, tree.mask, sigma=tree.sigma,
+                           block_boxes=block_boxes, interpret=_interpret())
+
+
+def m2l_apply(me, level: int, p: int, block_boxes: int = 128):
+    """Fused M2L for one level's (ny, nx, p) ME grid."""
+    return _m2l.m2l_pallas(me, level, p, block_boxes=block_boxes,
+                           interpret=_interpret())
+
+
+def flash_attention(q, k, v, causal: bool = True, block_q: int = 128,
+                    block_k: int = 128):
+    """Blockwise attention; q (B,H,T,d), k/v (B,Hkv,S,d)."""
+    return _fa.flash_attention(q, k, v, causal=causal, block_q=block_q,
+                               block_k=block_k, interpret=_interpret())

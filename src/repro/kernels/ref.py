@@ -1,0 +1,46 @@
+"""Pure-jnp oracles for every Pallas kernel (the ``ref.py`` contract)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from ..core import expansions as ex
+from ..core.quadtree import P2P_OFFSETS
+from ..core.vortex import pairwise_w
+
+
+def p2p_ref(z, q, mask, sigma=None):
+    """Near-field direct sum over the 3x3 stencil; complex W per slot."""
+    ny, nx, s = z.shape
+    zp = jnp.pad(z, ((1, 1), (1, 1), (0, 0)))
+    qp = jnp.pad(q, ((1, 1), (1, 1), (0, 0)))
+    mp = jnp.pad(mask, ((1, 1), (1, 1), (0, 0)))
+    w = jnp.zeros_like(z)
+    for (dx, dy) in P2P_OFFSETS:
+        w = w + pairwise_w(z,
+                           zp[1 + dy:1 + dy + ny, 1 + dx:1 + dx + nx],
+                           qp[1 + dy:1 + dy + ny, 1 + dx:1 + dx + nx],
+                           mp[1 + dy:1 + dy + ny, 1 + dx:1 + dx + nx],
+                           sigma)
+    return w
+
+
+def m2l_ref(me, level: int, p: int):
+    """Dense 40-offset M2L (expansions.m2l_reference)."""
+    return ex.m2l_reference(me, level, p)
+
+
+def attention_ref(q, k, v, causal: bool = True):
+    """Exact softmax attention with GQA head grouping.  f32 math."""
+    B, H, T, d = q.shape
+    _, Hkv, S, _ = k.shape
+    group = H // Hkv
+    k = jnp.repeat(k, group, axis=1)
+    v = jnp.repeat(v, group, axis=1)
+    s = jnp.einsum("bhtd,bhsd->bhts", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / (d ** 0.5)
+    if causal:
+        mask = jnp.tril(jnp.ones((T, S), dtype=bool), k=S - T)
+        s = jnp.where(mask, s, -1e30)
+    a = jnp.exp(s - s.max(axis=-1, keepdims=True))
+    a = a / a.sum(axis=-1, keepdims=True)
+    return jnp.einsum("bhts,bhsd->bhtd", a, v.astype(jnp.float32)).astype(q.dtype)

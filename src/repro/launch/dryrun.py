@@ -1,0 +1,387 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# The two lines above MUST run before any other import (jax locks the device
+# count at first init); everything else follows.
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this produces:
+  * proof the sharding config is coherent (compile succeeds),
+  * compiled.memory_analysis()  -> fits-in-HBM evidence,
+  * compiled.cost_analysis()    -> FLOPs / bytes for the roofline,
+  * parsed collective volumes   -> the roofline's third term.
+
+Usage:
+  python -m repro.launch.dryrun --arch yi-6b --shape train_4k [--multi-pod]
+  python -m repro.launch.dryrun --all [--multi-pod] --out experiments/dryrun
+"""
+import argparse
+import functools
+import json
+import time
+import traceback
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..configs.registry import get_config, lm_archs
+from ..models.config import SHAPES, ModelConfig, ShapeConfig, shape_applicable
+from ..models.transformer import init_cache, init_params
+from ..optim.adamw import AdamWConfig
+from ..parallel import sharding as shd
+from ..serve.engine import decode_step, prefill_step
+from ..train.loop import make_train_step
+from .hlo_analysis import analyze_hlo
+from .mesh import make_flat_mesh, make_production_mesh
+
+
+# ---------------------------------------------------------------------------
+# Abstract inputs
+# ---------------------------------------------------------------------------
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    """ShapeDtypeStruct stand-ins for every model input of this cell."""
+    b, t = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    if shape.kind == "train" or shape.kind == "prefill":
+        t_text = t - (cfg.num_patches or 0)
+        specs = {
+            "tokens": jax.ShapeDtypeStruct((b, t_text), i32),
+            "labels": jax.ShapeDtypeStruct((b, t_text), i32),
+        }
+        if cfg.num_patches:
+            specs["patch_embeds"] = jax.ShapeDtypeStruct(
+                (b, cfg.num_patches, cfg.patch_dim), jnp.float32)
+        if shape.kind == "prefill":
+            specs.pop("labels")
+        return specs
+    # decode: one new token against a seq_len-deep cache
+    return {
+        "token": jax.ShapeDtypeStruct((b, 1), i32),
+        "pos": jax.ShapeDtypeStruct((), i32),
+    }
+
+
+def abstract_params(cfg: ModelConfig):
+    return jax.eval_shape(lambda: init_params(jax.random.PRNGKey(0), cfg))
+
+
+def abstract_opt_state(params, state_dtype=jnp.float32):
+    zeros = jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, state_dtype), params)
+    return {"mu": zeros, "nu": zeros, "step": jax.ShapeDtypeStruct((), jnp.int32)}
+
+
+def train_memory_plan(cfg: ModelConfig) -> dict:
+    """Per-arch HBM knobs for the train cells (documented in EXPERIMENTS.md).
+
+    Microbatching bounds live activations (scan over microbatches); bf16
+    optimizer states halve Adam HBM for the 100B+ archs.
+    """
+    n = cfg.param_count
+    if n > 100e9:
+        return {"num_microbatches": 16, "state_dtype": jnp.bfloat16}
+    if n > 25e9:
+        return {"num_microbatches": 8, "state_dtype": jnp.float32}
+    if n > 8e9:
+        return {"num_microbatches": 4, "state_dtype": jnp.float32}
+    return {"num_microbatches": 1, "state_dtype": jnp.float32}
+
+
+def abstract_cache(cfg: ModelConfig, batch: int, max_len: int):
+    return jax.eval_shape(lambda: init_cache(cfg, batch, max_len))
+
+
+# ---------------------------------------------------------------------------
+# Shardings
+# ---------------------------------------------------------------------------
+
+
+def _dp(mesh):
+    return shd.batch_axes(mesh)
+
+
+def batch_shardings(mesh: Mesh, specs: dict):
+    out = {}
+    for k, v in specs.items():
+        if k == "pos":
+            out[k] = NamedSharding(mesh, P())
+            continue
+        b = v.shape[0]
+        ax = _dp(mesh) if b % shd.axis_size(mesh, _dp(mesh)) == 0 else None
+        out[k] = NamedSharding(mesh, P(ax, *([None] * (v.ndim - 1))))
+    return out
+
+
+def cache_shardings(mesh: Mesh, cfg: ModelConfig, caches):
+    """Walk the cache pytree; shard by leaf role (KV / SSM / conv / ring pos)."""
+    dp = _dp(mesh)
+    tp = "model"
+    tp_n = shd.axis_size(mesh, tp)
+
+    def spec_for(path, leaf):
+        name = "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in path)
+        shape = leaf.shape
+        base = None
+        if name.endswith("/k") or name.endswith("/v"):
+            # (B, Hkv, S, d) possibly with leading stack dim
+            nd = len(shape)
+            b, hkv = shape[nd - 4], shape[nd - 3]
+            b_ax = dp if b % shd.axis_size(mesh, dp) == 0 else None
+            if hkv % tp_n == 0:
+                base = P(b_ax, tp, None, None)
+            else:
+                base = P(b_ax, None, tp, None)   # SP decode: shard sequence
+        elif name.endswith("/pos"):
+            base = P(None)
+        elif name.endswith("/ssm"):
+            nd = len(shape)
+            b, h = shape[nd - 4], shape[nd - 3]
+            b_ax = dp if b % shd.axis_size(mesh, dp) == 0 else None
+            h_ax = tp if h % tp_n == 0 else None
+            base = P(b_ax, h_ax, None, None)
+        elif name.endswith("/h"):
+            b, w = shape[-2], shape[-1]
+            b_ax = dp if b % shd.axis_size(mesh, dp) == 0 else None
+            base = P(b_ax, tp if w % tp_n == 0 else None)
+        elif name.endswith("/conv"):
+            b, ch = shape[-3], shape[-1]
+            b_ax = dp if b % shd.axis_size(mesh, dp) == 0 else None
+            base = P(b_ax, None, tp if ch % tp_n == 0 else None)
+        else:
+            base = P(*([None] * len(shape)))
+        pad = len(shape) - len(base)
+        if pad > 0:
+            base = P(*([None] * pad), *base)
+        return NamedSharding(mesh, base)
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(caches)
+    return jax.tree_util.tree_unflatten(treedef, [spec_for(p, l) for p, l in flat])
+
+
+# ---------------------------------------------------------------------------
+# Cell runners
+# ---------------------------------------------------------------------------
+
+
+def _analyze(lowered, compiled, nchips: int, wall: dict) -> dict:
+    try:
+        mem = compiled.memory_analysis()
+        mem_out = {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+            "output_bytes": getattr(mem, "output_size_in_bytes", None),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+            "generated_code_bytes": getattr(mem, "generated_code_size_in_bytes", None),
+        }
+    except Exception as e:  # pragma: no cover
+        mem_out = {"error": str(e)}
+    try:
+        cost = compiled.cost_analysis()
+        cost = cost[0] if isinstance(cost, (list, tuple)) else cost
+        cost_out = {"flops": cost.get("flops"),
+                    "bytes_accessed": cost.get("bytes accessed")}
+    except Exception as e:  # pragma: no cover
+        cost_out = {"error": str(e)}
+    t0 = time.time()
+    hlo = analyze_hlo(compiled.as_text())
+    wall["parse_s"] = round(time.time() - t0, 2)
+    coll = {"per_kind": hlo["per_kind"], "total_bytes": hlo["collective_bytes"],
+            "count": hlo["count"]}
+    return {"memory_analysis": mem_out, "cost_analysis": cost_out,
+            "hlo_analysis": {"flops": hlo["flops"], "bytes": hlo["bytes"],
+                             "bytes_by_op": hlo.get("bytes_by_op", {})},
+            "collectives": coll, "num_chips": nchips, "wall": wall}
+
+
+def run_lm_cell(arch: str, shape_name: str, multi_pod: bool,
+                donate: bool = True, overrides: dict | None = None) -> dict:
+    import dataclasses
+    cfg = get_config(arch)
+    q_chunk = 512
+    if overrides:
+        q_chunk = overrides.pop("q_chunk", 512)
+        mamba_chunk = overrides.pop("mamba_chunk", None)
+        if mamba_chunk and cfg.mamba is not None:
+            cfg = dataclasses.replace(
+                cfg, mamba=dataclasses.replace(cfg.mamba, chunk=mamba_chunk))
+        micro = overrides.pop("num_microbatches", None)
+        cfg = dataclasses.replace(cfg, **overrides)
+        if micro is not None:
+            overrides["num_microbatches"] = micro
+    else:
+        micro = None
+    shape = SHAPES[shape_name]
+    ok, why = shape_applicable(cfg, shape)
+    if not ok:
+        return {"arch": arch, "shape": shape_name, "skipped": why}
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    params = abstract_params(cfg)
+    pshard = shd.param_shardings(mesh, params)
+    specs = input_specs(cfg, shape)
+    bshard = batch_shardings(mesh, specs)
+    wall = {}
+    t0 = time.time()
+
+    if shape.kind == "train":
+        plan = train_memory_plan(cfg)
+        if micro is not None:
+            plan["num_microbatches"] = micro
+        # each microbatch must still split over the data-parallel axes
+        dp_size = shd.axis_size(mesh, _dp(mesh))
+        plan["num_microbatches"] = min(plan["num_microbatches"],
+                                       max(shape.global_batch // dp_size, 1))
+        opt = abstract_opt_state(params, plan["state_dtype"])
+        oshard = {"mu": pshard, "nu": pshard, "step": NamedSharding(mesh, P())}
+        step = make_train_step(
+            cfg, mesh,
+            AdamWConfig(total_steps=1000,
+                        state_dtype=str(jnp.dtype(plan["state_dtype"]))),
+            num_microbatches=plan["num_microbatches"], q_chunk=q_chunk)
+        fn = jax.jit(step,
+                     in_shardings=(pshard, oshard, bshard),
+                     out_shardings=(pshard, oshard, NamedSharding(mesh, P())),
+                     donate_argnums=(0, 1) if donate else ())
+        lowered = fn.lower(params, opt, specs)
+    elif shape.kind == "prefill":
+        caches = abstract_cache(cfg, shape.global_batch, shape.seq_len)
+        cshard = cache_shardings(mesh, cfg, caches)
+        fn = jax.jit(functools.partial(prefill_step, cfg=cfg, mesh=mesh,
+                                       q_chunk=q_chunk),
+                     in_shardings=(pshard, bshard["tokens"], cshard),
+                     out_shardings=(NamedSharding(mesh, P()), cshard),
+                     donate_argnums=(2,) if donate else ())
+        lowered = fn.lower(params, specs["tokens"], caches)
+    else:  # decode
+        caches = abstract_cache(cfg, shape.global_batch, shape.seq_len)
+        cshard = cache_shardings(mesh, cfg, caches)
+        fn = jax.jit(functools.partial(decode_step, cfg=cfg, mesh=mesh),
+                     in_shardings=(pshard, bshard["token"], bshard["pos"], cshard),
+                     out_shardings=(NamedSharding(mesh, P()), cshard),
+                     donate_argnums=(3,) if donate else ())
+        lowered = fn.lower(params, specs["token"], specs["pos"], caches)
+
+    wall["lower_s"] = round(time.time() - t0, 2)
+    t0 = time.time()
+    compiled = lowered.compile()
+    wall["compile_s"] = round(time.time() - t0, 2)
+    out = _analyze(lowered, compiled, mesh.size, wall)
+    out.update({"arch": arch, "shape": shape_name,
+                "mesh": "2x16x16" if multi_pod else "16x16"})
+    return out
+
+
+def run_fmm_cell(multi_pod: bool, level: int = 10, slots: int = 2,
+                 p: int = 17) -> dict:
+    """The paper's own app: distributed FMM velocity evaluation dry-run."""
+    from ..core.parallel_fmm import parallel_fmm_velocity
+    from ..core.quadtree import Tree
+
+    mesh = make_flat_mesh(make_production_mesh(multi_pod=multi_pod), "data")
+    n = 1 << level
+    tree = Tree(z=jax.ShapeDtypeStruct((n, n, slots), jnp.complex64),
+                q=jax.ShapeDtypeStruct((n, n, slots), jnp.complex64),
+                mask=jax.ShapeDtypeStruct((n, n, slots), jnp.bool_),
+                level=level, sigma=0.02)
+    wall = {}
+    t0 = time.time()
+    fn = functools.partial(parallel_fmm_velocity, p=p, mesh=mesh)
+    lowered = jax.jit(fn, static_argnames=()).lower(tree)
+    wall["lower_s"] = round(time.time() - t0, 2)
+    t0 = time.time()
+    compiled = lowered.compile()
+    wall["compile_s"] = round(time.time() - t0, 2)
+    out = _analyze(lowered, compiled, mesh.size, wall)
+    out.update({"arch": "petfmm-vortex", "shape": f"level{level}_p{p}",
+                "mesh": "512flat" if multi_pod else "256flat"})
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", type=str, default=None)
+    ap.add_argument("--shape", type=str, default=None,
+                    choices=list(SHAPES) + [None])
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--fmm", action="store_true")
+    ap.add_argument("--out", type=str, default=None)
+    ap.add_argument("--tag", type=str, default=None,
+                    help="suffix for output filenames (perf iterations)")
+    # §Perf hillclimb knobs
+    ap.add_argument("--score-dtype", type=str, default=None,
+                    choices=[None, "float32", "bfloat16"])
+    ap.add_argument("--remat-policy", type=str, default=None,
+                    choices=[None, "full", "save_block_out"])
+    ap.add_argument("--mamba-chunk", type=int, default=None)
+    ap.add_argument("--microbatches", type=int, default=None)
+    ap.add_argument("--attn-impl", type=str, default=None,
+                    choices=[None, "chunked", "skip_core"])
+    ap.add_argument("--q-chunk", type=int, default=None)
+    ap.add_argument("--moe-gather-bits", type=int, default=None, choices=[None, 8, 16])
+    args = ap.parse_args()
+
+    overrides = {}
+    if args.score_dtype:
+        overrides["score_dtype"] = args.score_dtype
+    if args.remat_policy:
+        overrides["remat_policy"] = args.remat_policy
+    if args.mamba_chunk:
+        overrides["mamba_chunk"] = args.mamba_chunk
+    if args.microbatches:
+        overrides["num_microbatches"] = args.microbatches
+    if args.attn_impl:
+        overrides["attn_impl"] = args.attn_impl
+    if args.q_chunk:
+        overrides["q_chunk"] = args.q_chunk
+    if args.moe_gather_bits:
+        overrides["moe_gather_bits"] = args.moe_gather_bits
+
+    cells = []
+    if args.fmm:
+        cells.append(("petfmm-vortex", "fmm"))
+    elif args.all:
+        cells = [(a, s) for a in lm_archs() for s in SHAPES]
+        cells.append(("petfmm-vortex", "fmm"))
+    else:
+        cells = [(args.arch, args.shape)]
+
+    results = []
+    for arch, shape in cells:
+        label = f"{arch} x {shape} ({'2x16x16' if args.multi_pod else '16x16'})"
+        try:
+            if shape == "fmm":
+                res = run_fmm_cell(args.multi_pod)
+            else:
+                res = run_lm_cell(arch, shape, args.multi_pod,
+                                  overrides=dict(overrides) if overrides else None)
+            status = "SKIP: " + res["skipped"] if "skipped" in res else "OK"
+        except Exception as e:
+            res = {"arch": arch, "shape": shape, "error": str(e),
+                   "traceback": traceback.format_exc()}
+            status = f"FAIL: {e}"
+        results.append(res)
+        print(f"[dryrun] {label}: {status}", flush=True)
+        if "memory_analysis" in res:
+            print(f"  memory: {res['memory_analysis']}", flush=True)
+            print(f"  cost: {res['cost_analysis']}  hlo: {res['hlo_analysis']}",
+                  flush=True)
+            print(f"  collectives: total={res['collectives']['total_bytes']:.3e} B "
+                  f"({res['collectives']['per_kind']})", flush=True)
+            print(f"  wall: {res['wall']}", flush=True)
+        if args.out:
+            os.makedirs(args.out, exist_ok=True)
+            tag = "mp" if args.multi_pod else "sp"
+            if args.tag:
+                tag += "__" + args.tag
+            fname = f"{res['arch']}__{res['shape']}__{tag}.json".replace("/", "_")
+            with open(os.path.join(args.out, fname), "w") as f:
+                json.dump(res, f, indent=1)
+    nfail = sum("error" in r for r in results)
+    print(f"[dryrun] done: {len(results)} cells, {nfail} failures", flush=True)
+    return 0 if nfail == 0 else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

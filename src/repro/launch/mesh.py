@@ -1,0 +1,29 @@
+"""Production mesh construction.
+
+``make_production_mesh`` is a FUNCTION (not a module constant) so importing
+this module never touches jax device state; the dry-run sets
+``--xla_force_host_platform_device_count=512`` before any jax import.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax
+from jax.sharding import Mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """(16, 16) = one pod of 256 chips; (2, 16, 16) = 2 pods / 512 chips."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_flat_mesh(mesh: Mesh, axis: str = "data") -> Mesh:
+    """1-D view of the same devices (used by the FMM slab decomposition)."""
+    return Mesh(mesh.devices.reshape(-1), (axis,))
+
+
+def make_local_mesh(axes=("pod", "data", "model")) -> Mesh:
+    """Degenerate all-ones mesh for smoke tests on one device."""
+    dev = np.array(jax.devices()[:1]).reshape((1,) * len(axes))
+    return Mesh(dev, axes)

@@ -1,0 +1,61 @@
+"""Production training launcher.
+
+On a real TPU cluster each host runs:
+  python -m repro.launch.train --arch <id> --shape train_4k \
+      [--multi-pod] [--steps N] [--ckpt-dir gs://...]
+
+The launcher builds the production mesh, shards params/optimizer with the
+repo's sharding rules, restores the latest checkpoint if present, and runs
+the fault-tolerant loop (atomic async checkpoints, pipeline state included,
+straggler-feedback expert rebalancing for MoE archs).
+
+On this CPU container use --local to smoke the full path on a 1-device mesh
+with the arch's reduced config.
+"""
+import argparse
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", default="train_4k")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--local", action="store_true",
+                    help="reduced config on the local 1-device mesh")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=25)
+    ap.add_argument("--rebalance-every", type=int, default=0)
+    args = ap.parse_args()
+
+    # mesh construction must precede heavy imports only in the dry-run case;
+    # for real runs jax.distributed.initialize() is called by the host agent.
+    import jax
+    from ..configs.registry import get_config, get_smoke_config
+    from ..models.config import SHAPES, ShapeConfig
+    from ..optim.adamw import AdamWConfig
+    from ..train.loop import Trainer, TrainerConfig
+    from .mesh import make_local_mesh, make_production_mesh
+
+    if args.local:
+        cfg = get_smoke_config(args.arch)
+        shape = ShapeConfig("local", "train", 128, 4)
+        mesh = None
+    else:
+        cfg = get_config(args.arch)
+        shape = SHAPES[args.shape]
+        mesh = make_production_mesh(multi_pod=args.multi_pod)
+
+    tcfg = TrainerConfig(steps=args.steps, ckpt_every=args.ckpt_every,
+                         ckpt_dir=args.ckpt_dir,
+                         rebalance_every=args.rebalance_every)
+    tr = Trainer(cfg, shape, AdamWConfig(total_steps=args.steps), tcfg, mesh=mesh)
+    if tr.try_restore():
+        print(f"[train] resumed at step {int(tr.opt_state['step'])}")
+    log = tr.run()
+    print(f"[train] done: {len(log)} steps, final loss "
+          f"{log[-1]['loss']:.4f}" if log else "[train] nothing to do")
+
+
+if __name__ == "__main__":
+    main()

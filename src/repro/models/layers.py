@@ -1,0 +1,222 @@
+"""Shared transformer layers: RMSNorm, RoPE, GQA attention, SwiGLU MLP.
+
+Attention is *q-chunked memory-efficient* by default: a lax.scan over query
+chunks with a rematerialized exact-softmax body, so peak memory is one
+(chunk x S) score block instead of (T x S).  This is what makes the
+``prefill_32k`` cells compile within HBM; the Pallas flash kernel
+(kernels/flash_attn.py) is the TPU fast path for the same contraction.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+
+NEG_INF = -1e30
+
+
+def rms_norm(x: jnp.ndarray, scale: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    return (x.astype(jnp.float32) * jax.lax.rsqrt(var + eps)).astype(x.dtype) * scale
+
+
+def rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """Rotary embedding.  x: (B, T, H, d) with even d; positions: (T,) or (B, T)."""
+    d = x.shape[-1]
+    half = d // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freq      # (..., T, half)
+    if ang.ndim == 2:                                          # (T, half) -> broadcast B
+        ang = ang[None]
+    cos, sin = jnp.cos(ang)[:, :, None, :], jnp.sin(ang)[:, :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention core
+# ---------------------------------------------------------------------------
+
+
+def attention_core(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                   causal: bool = True, window: Optional[int] = None,
+                   q_chunk: int = 512, q_offset: int = 0,
+                   score_dtype=jnp.float32, impl: str = "chunked") -> jnp.ndarray:
+    """Exact attention, scanned over query chunks (memory-efficient).
+
+    q: (B, H, T, d);  k, v: (B, Hkv, S, d).  GQA via head-group einsum (no
+    kv repeat).  ``q_offset`` is the absolute position of q[0] (decode /
+    chunked prefill).  ``window``: local attention span (RecurrentGemma).
+
+    ``score_dtype=bfloat16`` keeps the (Tc, S) score/prob blocks — the
+    dominant HBM traffic of every train/prefill cell — in bf16: the QK dot
+    emits bf16, the max/sum reductions still run in f32 (converts fuse into
+    the producing chains, so no extra materialization).
+    """
+    B, H, T, d = q.shape
+    _, Hkv, S, _ = k.shape
+    if impl == "skip_core":
+        # HBM-accounting stand-in for the Pallas flash kernel: same q/k/v/o
+        # streams, no score-sized materialization.  NOT a real model — used
+        # by the dry-run to measure the kernel's roofline profile.
+        return (q + k.mean(axis=2, keepdims=True).repeat(H // Hkv, 1)
+                + v.mean(axis=2, keepdims=True).repeat(H // Hkv, 1)).astype(q.dtype)
+    g = H // Hkv
+    scale = 1.0 / (d ** 0.5)
+    qc = min(q_chunk, T)
+    if T % qc:
+        qc = T  # fall back to single chunk for ragged tiny shapes
+    nc = T // qc
+    qr = q.reshape(B, Hkv, g, nc, qc, d)
+    kpos = jnp.arange(S)
+    sdt = jnp.dtype(score_dtype)
+    neg = jnp.asarray(NEG_INF, sdt)   # -1e30 is representable in bf16
+
+    def chunk_fn(idx):
+        qc_ = jax.lax.dynamic_index_in_dim(qr, idx, axis=3, keepdims=False)
+        s = jnp.einsum("bkgtd,bksd->bkgts", qc_.astype(sdt), k.astype(sdt),
+                       preferred_element_type=sdt) * jnp.asarray(scale, sdt)
+        qpos = q_offset + idx * qc + jnp.arange(qc)
+        mask = jnp.ones((qc, S), dtype=bool)
+        if causal:
+            mask &= kpos[None, :] <= qpos[:, None]
+        if window is not None:
+            mask &= kpos[None, :] > qpos[:, None] - window
+        s = jnp.where(mask, s, neg)
+        # stable softmax: reductions in f32, materialized blocks in sdt
+        m = s.max(axis=-1, keepdims=True).astype(jnp.float32)
+        p = jnp.exp(s.astype(jnp.float32) - m).astype(sdt)
+        z = p.astype(jnp.float32).sum(axis=-1, keepdims=True)
+        a = (p / z.astype(sdt))
+        return jnp.einsum("bkgts,bksd->bkgtd", a, v.astype(sdt),
+                          preferred_element_type=jnp.float32)
+
+    if nc == 1:
+        out = chunk_fn(jnp.int32(0))[:, :, :, None]
+        out = jnp.moveaxis(out, 3, 0)
+    else:
+        out = jax.lax.map(jax.checkpoint(chunk_fn), jnp.arange(nc))  # (nc, B,Hkv,g,qc,d)
+    out = jnp.moveaxis(out, 0, 3)                    # (B, Hkv, g, nc, qc, d)
+    return out.reshape(B, H, T, d).astype(q.dtype)
+
+
+def decode_attention(q1: jnp.ndarray, cache_k: jnp.ndarray, cache_v: jnp.ndarray,
+                     t: jnp.ndarray, window: Optional[int] = None) -> jnp.ndarray:
+    """Single-token attention against a (B, Hkv, S, d) cache; t = current pos.
+
+    The kv-length dim stays sharded (SP decode); softmax over a sharded axis
+    lowers to small max/sum collectives under GSPMD (flash-decoding style).
+    """
+    B, H, _, d = q1.shape
+    _, Hkv, S, _ = cache_k.shape
+    g = H // Hkv
+    qr = q1.reshape(B, Hkv, g, 1, d)
+    s = jnp.einsum("bkgtd,bksd->bkgts", qr.astype(jnp.float32),
+                   cache_k.astype(jnp.float32)) / (d ** 0.5)
+    kpos = jnp.arange(S)
+    mask = kpos <= t
+    if window is not None:
+        mask &= kpos > t - window
+    s = jnp.where(mask[None, None, None, None, :], s, NEG_INF)
+    a = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgts,bksd->bkgtd", a, cache_v.astype(jnp.float32))
+    return out.reshape(B, H, 1, d).astype(q1.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention layer (projections + rope + core/cache)
+# ---------------------------------------------------------------------------
+
+
+def init_attention(key, cfg: ModelConfig, dtype=jnp.float32):
+    D, H, Hkv, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim_
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    sc = D ** -0.5
+    p = {
+        "w_q": jax.random.normal(k1, (D, H * hd), dtype) * sc,
+        "w_k": jax.random.normal(k2, (D, Hkv * hd), dtype) * sc,
+        "w_v": jax.random.normal(k3, (D, Hkv * hd), dtype) * sc,
+        "w_o": jax.random.normal(k4, (H * hd, D), dtype) * ((H * hd) ** -0.5),
+    }
+    if cfg.qkv_bias:
+        p["b_q"] = jnp.zeros((H * hd,), dtype)
+        p["b_k"] = jnp.zeros((Hkv * hd,), dtype)
+        p["b_v"] = jnp.zeros((Hkv * hd,), dtype)
+    return p
+
+
+def attention_layer(p, x, cfg: ModelConfig, *, positions, window=None,
+                    cache=None, cache_index=None, q_chunk: int = 512):
+    """x: (B, T, D).  Returns (out, new_cache).
+
+    cache: optional (k, v) each (B, Hkv, S, d); when given with
+    ``cache_index`` (scalar), runs decode: writes k/v at the index and
+    attends to the cache.  Otherwise trains/prefills over the full T.
+    """
+    B, T, D = x.shape
+    H, Hkv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim_
+    dt = x.dtype
+    q = x @ p["w_q"].astype(dt)
+    k = x @ p["w_k"].astype(dt)
+    v = x @ p["w_v"].astype(dt)
+    if cfg.qkv_bias:
+        q = q + p["b_q"].astype(dt)
+        k = k + p["b_k"].astype(dt)
+        v = v + p["b_v"].astype(dt)
+    q = q.reshape(B, T, H, hd)
+    k = k.reshape(B, T, Hkv, hd)
+    v = v.reshape(B, T, Hkv, hd)
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+    q = q.transpose(0, 2, 1, 3)                    # (B, H, T, d)
+    k = k.transpose(0, 2, 1, 3)
+    v = v.transpose(0, 2, 1, 3)
+
+    new_cache = None
+    if cache is not None:
+        ck, cv = cache
+        if cache_index is not None:    # decode: append one token
+            ck = jax.lax.dynamic_update_slice(ck, k.astype(ck.dtype), (0, 0, cache_index, 0))
+            cv = jax.lax.dynamic_update_slice(cv, v.astype(cv.dtype), (0, 0, cache_index, 0))
+            out = decode_attention(q, ck, cv, cache_index, window=window)
+            new_cache = (ck, cv)
+        else:                          # prefill: write the whole prefix
+            ck = jax.lax.dynamic_update_slice(ck, k.astype(ck.dtype), (0, 0, 0, 0))
+            cv = jax.lax.dynamic_update_slice(cv, v.astype(cv.dtype), (0, 0, 0, 0))
+            out = attention_core(q, k, v, causal=True, window=window,
+                                 q_chunk=q_chunk,
+                                 score_dtype=jnp.dtype(cfg.score_dtype),
+                                 impl=cfg.attn_impl)
+            new_cache = (ck, cv)
+    else:
+        out = attention_core(q, k, v, causal=True, window=window, q_chunk=q_chunk,
+                             score_dtype=jnp.dtype(cfg.score_dtype),
+                             impl=cfg.attn_impl)
+
+    out = out.transpose(0, 2, 1, 3).reshape(B, T, H * hd)
+    return out @ p["w_o"].astype(dt), new_cache
+
+
+# ---------------------------------------------------------------------------
+# SwiGLU MLP
+# ---------------------------------------------------------------------------
+
+
+def init_mlp(key, d_model: int, d_ff: int, dtype=jnp.float32):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w_gate": jax.random.normal(k1, (d_model, d_ff), dtype) * d_model ** -0.5,
+        "w_in": jax.random.normal(k2, (d_model, d_ff), dtype) * d_model ** -0.5,
+        "w_out": jax.random.normal(k3, (d_ff, d_model), dtype) * d_ff ** -0.5,
+    }
+
+
+def mlp_layer(p, x):
+    dt = x.dtype
+    h = jax.nn.silu(x @ p["w_gate"].astype(dt)) * (x @ p["w_in"].astype(dt))
+    return h @ p["w_out"].astype(dt)

@@ -1,0 +1,163 @@
+"""Mamba-2 SSD (state-space duality) block, arXiv:2405.21060.
+
+Training/prefill uses the chunked SSD algorithm: intra-chunk quadratic
+(attention-like, MXU-friendly GEMMs) + inter-chunk linear recurrence over
+chunk states — O(T) compute, O(chunk^2) working memory.  Decode is the pure
+recurrence on a (heads, head_dim, d_state) state, so the ``long_500k`` cell
+is bounded-state.  Single group (G=1) as in the 1.3b config.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .layers import rms_norm
+
+
+def _dims(cfg: ModelConfig):
+    m = cfg.mamba
+    d_in = m.expand * cfg.d_model
+    nheads = d_in // m.head_dim
+    return m, d_in, nheads
+
+
+def init_mamba(key, cfg: ModelConfig, dtype=jnp.float32):
+    m, d_in, nheads = _dims(cfg)
+    conv_ch = d_in + 2 * m.d_state
+    ks = jax.random.split(key, 4)
+    proj_out = 2 * d_in + 2 * m.d_state + nheads
+    return {
+        "in_proj": jax.random.normal(ks[0], (cfg.d_model, proj_out), dtype) * cfg.d_model ** -0.5,
+        "conv_w": jax.random.normal(ks[1], (m.d_conv, conv_ch), dtype) * 0.5,
+        "conv_b": jnp.zeros((conv_ch,), dtype),
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, nheads)).astype(jnp.float32),
+        "dt_bias": jnp.zeros((nheads,), jnp.float32),
+        "d_skip": jnp.ones((nheads,), jnp.float32),
+        "norm_scale": jnp.ones((d_in,), dtype),
+        "out_proj": jax.random.normal(ks[3], (d_in, cfg.d_model), dtype) * d_in ** -0.5,
+    }
+
+
+def _segsum(a):
+    """(..., l) -> (..., l, l) lower-tri cumulative segment sums."""
+    l = a.shape[-1]
+    cs = jnp.cumsum(a, axis=-1)
+    d = cs[..., :, None] - cs[..., None, :]
+    tril = jnp.tril(jnp.ones((l, l), bool))
+    return jnp.where(tril, d, -jnp.inf)
+
+
+def _ssd_chunked(x, dt, a, Bm, Cm, chunk: int, init_state=None,
+                 big_dtype=None):
+    """Chunked SSD.  x: (B, T, H, P); dt: (B, T, H); a: (H,) (negative);
+    Bm, Cm: (B, T, N).  Returns (y, final_state (B, H, P, N)).
+
+    ``big_dtype`` (e.g. bf16) is used for the large materialized
+    intermediates (W, x*dt, chunk states); decay/cumsum math stays f32."""
+    B_, T, H, P_ = x.shape
+    N = Bm.shape[-1]
+    l = min(chunk, T)
+    if T % l:
+        l = T
+    nc = T // l
+    xr = x.reshape(B_, nc, l, H, P_)
+    dtr = dt.reshape(B_, nc, l, H)
+    Br = Bm.reshape(B_, nc, l, N)
+    Cr = Cm.reshape(B_, nc, l, N)
+
+    dA = dtr * a                                          # (b, c, l, h)
+    dA_cum = jnp.cumsum(dA, axis=2)
+
+    # 1) intra-chunk (quadratic within chunk).  Contraction order matters
+    # enormously here: a naive 4-operand einsum lets XLA materialize a
+    # (b,c,h,l,s,p) 6-D intermediate (~100x the useful traffic, see
+    # EXPERIMENTS.md §Perf).  We force the pairwise order: W = (C B^T) ∘ L
+    # then one batched (l,s)@(s,hp) GEMM.
+    bdt = big_dtype or x.dtype
+    L = jnp.exp(_segsum(jnp.moveaxis(dA, 3, 2)))          # (b, c, h, l, l)
+    S = jnp.einsum("bcln,bcsn->bcls", Cr, Br)             # (b, c, l, s)
+    W = (S[:, :, None] * L).astype(bdt)                   # (b, c, h, l, s)
+    xdt = (xr * dtr[..., None]).astype(bdt)               # (b, c, s, h, p)
+    Y = jnp.einsum("bchls,bcshp->bclhp", W, xdt,
+                   preferred_element_type=jnp.float32)
+
+    # 2) per-chunk input states (pairwise order again: weight x first)
+    decay_states = jnp.exp(dA_cum[:, :, -1:, :] - dA_cum)  # (b, c, l, h)
+    xw = (xr * (decay_states * dtr)[..., None]).astype(bdt)  # (b, c, l, h, p)
+    states = jnp.einsum("bcln,bclhp->bchpn", Br.astype(bdt), xw,
+                        preferred_element_type=jnp.float32)
+
+    # 3) inter-chunk recurrence (scan over chunks)
+    chunk_decay = jnp.exp(dA_cum[:, :, -1, :])            # (b, c, h)
+    s0 = jnp.zeros((B_, H, P_, N), x.dtype) if init_state is None else init_state
+
+    def step(s, inp):
+        dec, st = inp                                     # (b, h), (b, h, p, n)
+        s_new = s * dec[..., None, None] + st
+        return s_new, s
+    cd = jnp.moveaxis(chunk_decay, 1, 0)                  # (c, b, h)
+    st = jnp.moveaxis(states, 1, 0)                       # (c, b, h, p, n)
+    final, prev = jax.lax.scan(step, s0, (cd, st))
+    prev = jnp.moveaxis(prev, 0, 1)                       # (b, c, h, p, n)
+
+    # 4) off-diagonal: contribution of previous chunks' state
+    state_decay = jnp.exp(dA_cum)                         # (b, c, l, h)
+    Y_off = jnp.einsum("bcln,bchpn->bclhp", Cr, prev)     # (l,n)@(n,hp) GEMM
+    Y = Y + Y_off * state_decay[..., None]
+    return Y.reshape(B_, T, H, P_), final
+
+
+def mamba_layer(p, x, cfg: ModelConfig, state: Optional[dict] = None):
+    """x: (B, T, D).  state (decode): {'ssm': (B,H,P,N), 'conv': (B,dc-1,ch)}.
+
+    Returns (out, new_state)."""
+    m, d_in, nheads = _dims(cfg)
+    B_, T, D = x.shape
+    dt_ = x.dtype
+    zxbcdt = x @ p["in_proj"].astype(dt_)
+    z, xbc, dt_raw = jnp.split(zxbcdt, [d_in, 2 * d_in + 2 * m.d_state], axis=-1)
+
+    # causal depthwise conv over (x, B, C)
+    dc = m.d_conv
+    tail = (jnp.zeros((B_, dc - 1, xbc.shape[-1]), dt_) if state is None
+            else state["conv"])
+    xp = jnp.concatenate([tail, xbc], axis=1)
+    xbc = sum(xp[:, dc - 1 - j:dc - 1 - j + T] * p["conv_w"][j].astype(dt_)
+              for j in range(dc)) + p["conv_b"].astype(dt_)
+    new_conv = xp[:, -(dc - 1):]
+    xbc = jax.nn.silu(xbc)
+    xs, Bm, Cm = jnp.split(xbc, [d_in, d_in + m.d_state], axis=-1)
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])    # (B, T, H)
+    a = -jnp.exp(p["a_log"])                                           # (H,)
+    xh = xs.reshape(B_, T, nheads, m.head_dim).astype(jnp.float32)
+    Bm32, Cm32 = Bm.astype(jnp.float32), Cm.astype(jnp.float32)
+
+    if state is not None and T == 1:
+        s = state["ssm"]
+        dec = jnp.exp(dt[:, 0] * a)                                    # (B, H)
+        upd = jnp.einsum("bn,bh,bhp->bhpn", Bm32[:, 0], dt[:, 0], xh[:, 0])
+        s_new = s * dec[..., None, None] + upd
+        y = jnp.einsum("bn,bhpn->bhp", Cm32[:, 0], s_new)[:, None]     # (B,1,H,P)
+        final = s_new
+    else:
+        init = state["ssm"] if state is not None else None
+        y, final = _ssd_chunked(xh, dt, a, Bm32, Cm32, m.chunk, init,
+                                big_dtype=jnp.dtype(cfg.score_dtype))
+
+    y = y + p["d_skip"][:, None] * xh                                  # skip
+    y = y.reshape(B_, T, d_in).astype(dt_)
+    y = y * jax.nn.silu(z)
+    y = rms_norm(y, p["norm_scale"].astype(dt_), cfg.rms_eps)
+    out = y @ p["out_proj"].astype(dt_)
+    new_state = {"ssm": final, "conv": new_conv}
+    return out, new_state
+
+
+def init_mamba_state(cfg: ModelConfig, batch: int, dtype=jnp.float32):
+    m, d_in, nheads = _dims(cfg)
+    return {"ssm": jnp.zeros((batch, nheads, m.head_dim, m.d_state), jnp.float32),
+            "conv": jnp.zeros((batch, m.d_conv - 1, d_in + 2 * m.d_state), dtype)}

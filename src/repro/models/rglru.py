@@ -1,0 +1,102 @@
+"""RecurrentGemma/Griffin hybrid block: RG-LRU recurrence + local attention.
+
+Block pattern follows arXiv:2402.19427 (2 recurrent : 1 local-attn).  The
+recurrence
+
+    a_t = exp(-c * softplus(Lambda) * r_t),   r_t = sigmoid(W_a x_t)
+    h_t = a_t h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+is linear in h, so training uses ``lax.associative_scan`` (parallel prefix,
+O(T log T) span) and decode carries (h, conv tail) state — bounded memory at
+any context length, which is why this arch runs the ``long_500k`` cell.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+
+_C = 8.0  # RG-LRU temperature constant
+
+
+def init_rglru(key, cfg: ModelConfig, dtype=jnp.float32):
+    D = cfg.d_model
+    W = cfg.rglru.lru_width or D
+    ks = jax.random.split(key, 6)
+    return {
+        "w_gate": jax.random.normal(ks[0], (D, W), dtype) * D ** -0.5,
+        "w_in": jax.random.normal(ks[1], (D, W), dtype) * D ** -0.5,
+        "w_out": jax.random.normal(ks[2], (W, D), dtype) * W ** -0.5,
+        "conv_w": jax.random.normal(ks[3], (4, W), dtype) * 0.5,
+        "lru_wa": jax.random.normal(ks[4], (W, W), dtype) * W ** -0.5,
+        "lru_wi": jax.random.normal(ks[5], (W, W), dtype) * W ** -0.5,
+        "lru_lambda": jnp.linspace(0.5, 4.0, W).astype(dtype),  # softplus^-1 spread
+        "lru_ba": jnp.zeros((W,), dtype),
+        "lru_bi": jnp.zeros((W,), dtype),
+    }
+
+
+def _causal_conv4(x, w, state=None):
+    """Depthwise causal conv, width 4.  x: (B, T, W); w: (4, W).
+
+    state: (B, 3, W) trailing inputs from the previous segment (decode).
+    Returns (y, new_state).
+    """
+    B, T, W = x.shape
+    tail = jnp.zeros((B, 3, W), x.dtype) if state is None else state
+    xp = jnp.concatenate([tail, x], axis=1)            # (B, T+3, W)
+    y = sum(xp[:, 3 - j:3 - j + T] * w[j] for j in range(4))
+    return y, xp[:, -3:]
+
+
+def _lru_scan(a, b, h0=None):
+    """h_t = a_t h_{t-1} + b_t via associative scan.  a, b: (B, T, W)."""
+    if h0 is not None:
+        # fold initial state into the first step
+        b = b.at[:, 0].add(a[:, 0] * h0)
+    def combine(x, y):
+        a1, b1 = x
+        a2, b2 = y
+        return a1 * a2, a2 * b1 + b2
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return h
+
+
+def rglru_layer(p, x, cfg: ModelConfig, state: Optional[dict] = None):
+    """x: (B, T, D).  state (decode): {'h': (B, W), 'conv': (B, 3, W)}.
+
+    Returns (out, new_state).
+    """
+    dt = x.dtype
+    u = jax.nn.gelu(x @ p["w_gate"].astype(dt))
+    c = x @ p["w_in"].astype(dt)
+    conv_state = state["conv"] if state is not None else None
+    c, new_conv = _causal_conv4(c, p["conv_w"].astype(dt), conv_state)
+
+    cf = c.astype(jnp.float32)
+    r = jax.nn.sigmoid(cf @ p["lru_wa"].astype(jnp.float32) + p["lru_ba"])
+    i = jax.nn.sigmoid(cf @ p["lru_wi"].astype(jnp.float32) + p["lru_bi"])
+    log_a = -_C * jax.nn.softplus(p["lru_lambda"].astype(jnp.float32)) * r
+    a = jnp.exp(log_a)
+    b = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * (i * cf)
+
+    if state is not None and x.shape[1] == 1:          # decode single step
+        h = a[:, 0] * state["h"] + b[:, 0]
+        hseq = h[:, None]
+        new_state = {"h": h, "conv": new_conv}
+    else:
+        h0 = state["h"] if state is not None else None
+        hseq = _lru_scan(a, b, h0)
+        new_state = {"h": hseq[:, -1], "conv": new_conv}
+
+    out = (u * hseq.astype(dt)) @ p["w_out"].astype(dt)
+    return out, new_state
+
+
+def init_rglru_state(cfg: ModelConfig, batch: int, dtype=jnp.float32):
+    W = cfg.rglru.lru_width or cfg.d_model
+    return {"h": jnp.zeros((batch, W), jnp.float32),
+            "conv": jnp.zeros((batch, 3, W), dtype)}

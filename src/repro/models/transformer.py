@@ -1,0 +1,366 @@
+"""Model assembly: block dispatch per family, scan-over-layers, caches, loss.
+
+Families:
+  dense/audio/vlm : [attn + SwiGLU MLP] x L          (audio = small-vocab LM;
+                    vlm prepends projected patch embeddings from the stub)
+  moe             : [attn + MoE FFN] x L
+  hybrid          : Griffin pattern (rglru, rglru, local-attn) cycled
+  ssm             : [mamba2 SSD] x L
+
+Layers are stacked and traversed with ``lax.scan`` (rematerialized bodies),
+which keeps HLO size O(1) in depth — essential for the 94-layer dry-runs.
+Decode maintains a cache pytree per family (KV cache / ring-buffer window
+cache / SSM + conv states).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh
+
+from jax.ad_checkpoint import checkpoint_name
+from .config import ModelConfig
+from . import layers as ll
+from .layers import attention_layer, init_attention, init_mlp, mlp_layer, rms_norm
+from .mamba2 import init_mamba, init_mamba_state, mamba_layer
+from .moe import init_moe, moe_layer
+from .rglru import init_rglru, init_rglru_state, rglru_layer
+
+
+# ---------------------------------------------------------------------------
+# Layer plan
+# ---------------------------------------------------------------------------
+
+
+def layer_kinds(cfg: ModelConfig) -> list[str]:
+    if cfg.family == "ssm":
+        return ["mamba"] * cfg.num_layers
+    if cfg.family == "moe":
+        return ["moe"] * cfg.num_layers
+    if cfg.family == "hybrid":
+        pat = cfg.rglru.pattern
+        return [pat[i % len(pat)] for i in range(cfg.num_layers)]
+    return ["attn"] * cfg.num_layers
+
+
+def _scan_groups(kinds: list[str]) -> list[tuple[list[str], int]]:
+    """Group layers into (pattern, repeats) so each group scans uniformly.
+
+    Uniform stacks -> one group; hybrid -> (pattern, L // len) + remainder
+    groups of single layers.
+    """
+    if len(set(kinds)) == 1:
+        return [([kinds[0]], len(kinds))]
+    # periodic pattern
+    for plen in range(1, len(kinds) + 1):
+        pat = kinds[:plen]
+        reps = len(kinds) // plen
+        if pat * reps == kinds[:plen * reps]:
+            groups = [(pat, reps)] if reps > 0 else []
+            rest = kinds[plen * reps:]
+            groups += [([k], 1) for k in rest]
+            if plen * reps + len(rest) == len(kinds) and reps > 1:
+                return groups
+    return [([k], 1) for k in kinds]
+
+
+# ---------------------------------------------------------------------------
+# Parameter init
+# ---------------------------------------------------------------------------
+
+
+def _init_one(key, cfg: ModelConfig, kind: str, dtype):
+    D = cfg.d_model
+    if kind == "mamba":
+        return {"ln": jnp.ones((D,), dtype), "mamba": init_mamba(key, cfg, dtype)}
+    if kind == "rglru":
+        k1, k2 = jax.random.split(key)
+        return {"ln1": jnp.ones((D,), dtype), "rec": init_rglru(k1, cfg, dtype),
+                "ln2": jnp.ones((D,), dtype),
+                "mlp": init_mlp(k2, D, cfg.d_ff, dtype)}
+    if kind == "moe":
+        k1, k2 = jax.random.split(key)
+        return {"ln1": jnp.ones((D,), dtype), "attn": init_attention(k1, cfg, dtype),
+                "ln2": jnp.ones((D,), dtype), "moe": init_moe(k2, cfg, dtype)}
+    # attn (dense / local-attn hybrid block)
+    k1, k2 = jax.random.split(key)
+    return {"ln1": jnp.ones((D,), dtype), "attn": init_attention(k1, cfg, dtype),
+            "ln2": jnp.ones((D,), dtype), "mlp": init_mlp(k2, D, cfg.d_ff, dtype)}
+
+
+def init_params(key, cfg: ModelConfig, dtype=jnp.float32) -> dict:
+    kinds = layer_kinds(cfg)
+    keys = jax.random.split(key, len(kinds) + 3)
+    params: dict[str, Any] = {
+        "embed": jax.random.normal(keys[-1], (cfg.vocab, cfg.d_model), dtype) * 0.02,
+        "final_norm": jnp.ones((cfg.d_model,), dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = jax.random.normal(
+            keys[-2], (cfg.vocab, cfg.d_model), dtype) * 0.02
+    if cfg.num_patches:
+        params["patch_proj"] = jax.random.normal(
+            keys[-3], (cfg.patch_dim, cfg.d_model), dtype) * cfg.patch_dim ** -0.5
+
+    groups = _scan_groups(kinds)
+    gparams = []
+    li = 0
+    for pat, reps in groups:
+        if reps == 1:
+            gparams.append([_init_one(keys[li + j], cfg, k, dtype)
+                            for j, k in enumerate(pat)])
+            li += len(pat)
+        else:
+            stacked = []
+            for j, k in enumerate(pat):
+                ks = jnp.stack([jax.random.fold_in(keys[li + j], r) for r in range(reps)])
+                stacked.append(jax.vmap(lambda kk: _init_one(kk, cfg, k, dtype))(ks))
+            gparams.append(stacked)
+            li += len(pat) * reps
+    params["groups"] = gparams
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Caches / recurrent state
+# ---------------------------------------------------------------------------
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
+    """Decode-state pytree mirroring the group structure of the params."""
+    kinds = layer_kinds(cfg)
+    groups = _scan_groups(kinds)
+    Hkv, hd = cfg.num_kv_heads, cfg.head_dim_
+
+    def one(kind):
+        if kind == "mamba":
+            return init_mamba_state(cfg, batch, dtype)
+        if kind == "rglru":
+            return init_rglru_state(cfg, batch, dtype)
+        wlen = max_len
+        if kind == "attn" and cfg.rglru is not None:
+            wlen = min(max_len, cfg.rglru.window)   # ring-buffer window cache
+        return {"k": jnp.zeros((batch, Hkv, wlen, hd), dtype),
+                "v": jnp.zeros((batch, Hkv, wlen, hd), dtype),
+                "pos": jnp.full((wlen,), -1, jnp.int32)}
+
+    gcaches = []
+    for pat, reps in groups:
+        if reps == 1:
+            gcaches.append([one(k) for k in pat])
+        else:
+            gcaches.append([jax.tree.map(lambda x: jnp.broadcast_to(
+                x, (reps,) + x.shape), one(k)) for k in pat])
+    return gcaches
+
+
+# ---------------------------------------------------------------------------
+# Blocks
+# ---------------------------------------------------------------------------
+
+
+def _attn_block(p, h, cfg, mesh, *, positions, window, cache, pos_scalar, q_chunk):
+    """Attention with optional ring-buffer cache.  Returns (h, new_cache)."""
+    x = rms_norm(h, p["ln1"].astype(h.dtype), cfg.rms_eps)
+    if cache is None:
+        out, _ = attention_layer(p["attn"], x, cfg, positions=positions,
+                                 window=window, q_chunk=q_chunk)
+        out = checkpoint_name(out, "attn_out")
+        return h + out, None
+
+    B, T, D = x.shape
+    H, Hkv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim_
+    dt = x.dtype
+    q = (x @ p["attn"]["w_q"].astype(dt)).reshape(B, T, H, hd)
+    k = (x @ p["attn"]["w_k"].astype(dt)).reshape(B, T, Hkv, hd)
+    v = (x @ p["attn"]["w_v"].astype(dt)).reshape(B, T, Hkv, hd)
+    if cfg.qkv_bias:
+        q += p["attn"]["b_q"].astype(dt).reshape(H, hd)
+        k += p["attn"]["b_k"].astype(dt).reshape(Hkv, hd)
+        v += p["attn"]["b_v"].astype(dt).reshape(Hkv, hd)
+    q = ll.rope(q, positions, cfg.rope_theta).transpose(0, 2, 1, 3)
+    k = ll.rope(k, positions, cfg.rope_theta).transpose(0, 2, 1, 3)
+    v = v.transpose(0, 2, 1, 3)
+
+    wlen = cache["k"].shape[2]
+    if T == 1:  # decode: ring-buffer write at pos % wlen
+        slot = pos_scalar % wlen
+        ck = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype),
+                                          (0, 0, slot, 0))
+        cv = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype),
+                                          (0, 0, slot, 0))
+        cpos = jax.lax.dynamic_update_slice(cache["pos"],
+                                            pos_scalar[None].astype(jnp.int32), (slot,))
+        out = _masked_decode_attn(q, ck, cv, cpos, pos_scalar, window)
+    else:       # prefill: write last wlen tokens at their slots
+        ntail = min(T, wlen)
+        ktail = k[:, :, T - ntail:]
+        vtail = v[:, :, T - ntail:]
+        ptail = positions[T - ntail:]
+        slots = (ptail % wlen).astype(jnp.int32)
+        ck = cache["k"].at[:, :, slots].set(ktail.astype(cache["k"].dtype))
+        cv = cache["v"].at[:, :, slots].set(vtail.astype(cache["v"].dtype))
+        cpos = cache["pos"].at[slots].set(ptail.astype(jnp.int32))
+        out = ll.attention_core(q, k, v, causal=True, window=window,
+                                q_chunk=q_chunk,
+                                score_dtype=jnp.dtype(cfg.score_dtype),
+                                impl=cfg.attn_impl)
+
+    out = out.transpose(0, 2, 1, 3).reshape(B, T, H * hd)
+    out = out @ p["attn"]["w_o"].astype(dt)
+    out = checkpoint_name(out, "attn_out")
+    return h + out, {"k": ck, "v": cv, "pos": cpos}
+
+
+def _masked_decode_attn(q1, ck, cv, kpos, t, window):
+    B, H, _, d = q1.shape
+    Hkv = ck.shape[1]
+    g = H // Hkv
+    s = jnp.einsum("bkgtd,bksd->bkgts", q1.reshape(B, Hkv, g, 1, d).astype(jnp.float32),
+                   ck.astype(jnp.float32)) / (d ** 0.5)
+    mask = (kpos >= 0) & (kpos <= t)
+    if window is not None:
+        mask &= kpos > t - window
+    s = jnp.where(mask[None, None, None, None, :], s, ll.NEG_INF)
+    a = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgts,bksd->bkgtd", a, cv.astype(jnp.float32))
+    return out.reshape(B, H, 1, d).astype(q1.dtype)
+
+
+def _ffn_block(p, h, cfg, mesh, kind):
+    x = rms_norm(h, p["ln2"].astype(h.dtype), cfg.rms_eps)
+    if kind == "moe":
+        out = moe_layer(p["moe"], x, cfg, mesh)
+        # named so remat_policy='save_block_out' keeps the psum+FSDP-gather
+        # result: backward then skips the expert re-gather (§Perf iter)
+        out = checkpoint_name(out, "moe_out")
+        return h + out
+    return h + mlp_layer(p["mlp"], x)
+
+
+def apply_layer(p, h, cfg, mesh, kind, *, positions, cache, pos_scalar, q_chunk):
+    """One block.  Returns (h, new_cache)."""
+    if kind == "mamba":
+        x = rms_norm(h, p["ln"].astype(h.dtype), cfg.rms_eps)
+        out, st = mamba_layer(p["mamba"], x, cfg, cache)
+        return h + out, st
+    if kind == "rglru":
+        x = rms_norm(h, p["ln1"].astype(h.dtype), cfg.rms_eps)
+        out, st = rglru_layer(p["rec"], x, cfg, cache)
+        h = h + out
+        return _ffn_block(p, h, cfg, mesh, "mlp"), st
+    window = cfg.rglru.window if (cfg.rglru is not None and kind == "attn") else None
+    h, st = _attn_block(p, h, cfg, mesh, positions=positions, window=window,
+                        cache=cache, pos_scalar=pos_scalar, q_chunk=q_chunk)
+    return _ffn_block(p, h, cfg, mesh, kind), st
+
+
+# ---------------------------------------------------------------------------
+# Forward
+# ---------------------------------------------------------------------------
+
+
+def forward(params, tokens, cfg: ModelConfig, mesh: Optional[Mesh] = None, *,
+            patch_embeds=None, caches=None, pos_scalar=None,
+            q_chunk: int = 512, remat: bool = True):
+    """Returns (hidden (B, T, D), new_caches).
+
+    tokens: (B, T_text) int32.  For vlm, ``patch_embeds`` (B, P, patch_dim)
+    is prepended after projection (T = P + T_text).  ``caches``/``pos_scalar``
+    select decode (T == 1) or prefill behaviour.
+    """
+    dt = jnp.dtype(cfg.dtype)
+    h = params["embed"].astype(dt)[tokens]
+    if cfg.num_patches and patch_embeds is not None:
+        pe = patch_embeds.astype(dt) @ params["patch_proj"].astype(dt)
+        h = jnp.concatenate([pe, h], axis=1)
+    B, T, D = h.shape
+    if pos_scalar is not None and T == 1:
+        positions = jnp.full((B, 1), pos_scalar, jnp.int32)
+    else:
+        positions = jnp.arange(T, dtype=jnp.int32)
+
+    kinds = layer_kinds(cfg)
+    groups = _scan_groups(kinds)
+    gparams = params["groups"]
+    new_caches = []
+
+    for gi, (pat, reps) in enumerate(groups):
+        gp = gparams[gi]
+        gc = caches[gi] if caches is not None else [None] * len(pat)
+
+        if reps == 1:
+            ncs = []
+            for j, kind in enumerate(pat):
+                h, nc = apply_layer(gp[j], h, cfg, mesh, kind, positions=positions,
+                                    cache=gc[j], pos_scalar=pos_scalar,
+                                    q_chunk=q_chunk)
+                ncs.append(nc)
+            new_caches.append(ncs)
+            continue
+
+        def body(hc, xs):
+            pslices, cslices = xs
+            ncs = []
+            for j, kind in enumerate(pat):
+                hc, nc = apply_layer(pslices[j], hc, cfg, mesh, kind,
+                                     positions=positions, cache=cslices[j],
+                                     pos_scalar=pos_scalar, q_chunk=q_chunk)
+                ncs.append(nc if nc is not None else 0)
+            return hc, ncs
+
+        if remat:
+            if cfg.remat_policy == "save_block_out":
+                pol = jax.checkpoint_policies.save_only_these_names(
+                    "moe_out", "attn_out")
+                body = jax.checkpoint(body, policy=pol)
+            else:
+                body = jax.checkpoint(body)
+        h, stacked_nc = jax.lax.scan(body, h, (gp, gc))
+        new_caches.append(stacked_nc if caches is not None else [None] * len(pat))
+
+    h = rms_norm(h, params["final_norm"].astype(dt), cfg.rms_eps)
+    return h, (new_caches if caches is not None else None)
+
+
+def unembed(params, h, cfg: ModelConfig):
+    W = params["embed"] if cfg.tie_embeddings else params["lm_head"]
+    return h.astype(jnp.float32) @ W.astype(jnp.float32).T
+
+
+# ---------------------------------------------------------------------------
+# Loss: chunked cross-entropy (never materializes (B, T, V))
+# ---------------------------------------------------------------------------
+
+
+def lm_loss(params, hidden, labels, cfg: ModelConfig, chunk: int = 256):
+    """Mean NLL over labels >= 0.  hidden (B, T, D); labels (B, T).
+
+    Scans T in chunks with a rematerialized body: the (B, c, V) logits block
+    exists only transiently (forward) and is recomputed in backward.
+    """
+    B, T, D = hidden.shape
+    W = (params["embed"] if cfg.tie_embeddings else params["lm_head"])
+    c = min(chunk, T)
+    if T % c:
+        c = T
+    nc = T // c
+
+    def body(carry, idx):
+        nll_sum, cnt = carry
+        hc = jax.lax.dynamic_slice_in_dim(hidden, idx * c, c, axis=1)
+        lc = jax.lax.dynamic_slice_in_dim(labels, idx * c, c, axis=1)
+        logits = hc.astype(jnp.float32) @ W.astype(jnp.float32).T   # (B, c, V)
+        lse = jax.scipy.special.logsumexp(logits, axis=-1)
+        lsafe = jnp.maximum(lc, 0)
+        tgt = jnp.take_along_axis(logits, lsafe[..., None], axis=-1)[..., 0]
+        m = (lc >= 0).astype(jnp.float32)
+        return (nll_sum + ((lse - tgt) * m).sum(), cnt + m.sum()), None
+
+    (nll, cnt), _ = jax.lax.scan(jax.checkpoint(body), (jnp.float32(0), jnp.float32(0)),
+                                 jnp.arange(nc))
+    return nll / jnp.maximum(cnt, 1.0)

@@ -1,0 +1,124 @@
+"""Sharding rules: map parameter/activation names onto the (pod, data, model) mesh.
+
+Scheme (DESIGN.md §6):
+  * DP/FSDP: batch over ('pod', 'data'); parameters sharded over 'data'
+    (and 'pod' too — full FSDP — whenever the dim divides);
+  * TP: attention heads / FFN hidden / vocab over 'model';
+  * EP: MoE experts over 'model';
+  * SP: decode KV caches sequence-sharded over 'model' when kv-heads don't
+    divide the model axis.
+
+Everything degrades gracefully: if a dim does not divide the axis size the
+spec falls back to replication on that dim (never an error at lowering).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+BATCH_AXES = ("pod", "data")     # logical data-parallel axes
+FSDP_AXIS = "data"
+TP_AXIS = "model"
+
+
+def batch_axes(mesh: Mesh) -> tuple[str, ...]:
+    return tuple(a for a in BATCH_AXES if a in mesh.axis_names)
+
+
+def axis_size(mesh: Mesh, axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        axes = (axes,)
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+def _maybe(mesh: Mesh, dim: int, axes) -> Optional[object]:
+    """Return ``axes`` if ``dim`` divides their product, else None."""
+    return axes if dim % axis_size(mesh, axes) == 0 else None
+
+
+def param_spec(mesh: Mesh, name: str, shape: tuple[int, ...]) -> P:
+    """PartitionSpec for a parameter by convention on its name/rank.
+
+    Conventions (leaf path name contains):
+      'embed'   (V, D): vocab over TP, D over FSDP
+      'w_q','w_in','w_gate'  (D, X): D over FSDP, X over TP
+      'w_o','w_out'          (X, D): X over TP, D over FSDP
+      'experts'              (E, D, F) / (E, F, D): E over TP(=EP), D over FSDP
+      bias/scale 1-D: replicated
+
+    Parameters living under a scanned layer stack ('groups/...') carry a
+    leading (L,) dim: the rule applies to shape[1:], L stays unsharded.
+    """
+    if "groups" in name and len(shape) >= 2:
+        inner = param_spec(mesh, name.replace("groups", "_g_"), shape[1:])
+        return P(None, *inner)
+    dp = batch_axes(mesh)
+    if len(shape) <= 1:
+        return P()
+    if "router" in name:
+        return P(*([None] * len(shape)))
+    if "experts" in name:
+        # EP over model on the expert dim + FSDP on dim 1 over every data
+        # axis that divides (the MoE body all-gathers dim 1 per layer).
+        e_ax = _maybe(mesh, shape[0], TP_AXIS)
+        d_ax = _maybe(mesh, shape[1], dp) or _maybe(mesh, shape[1], FSDP_AXIS)
+        return P(e_ax, d_ax, *([None] * (len(shape) - 2)))
+    if "embed" in name or "lm_head" in name:
+        v_ax = _maybe(mesh, shape[0], TP_AXIS)
+        d_ax = _maybe(mesh, shape[1], FSDP_AXIS)
+        return P(v_ax, d_ax)
+    if any(k in name for k in ("w_o", "w_out", "out_proj")):
+        x_ax = _maybe(mesh, shape[0], TP_AXIS)
+        d_ax = _maybe(mesh, shape[1], FSDP_AXIS)
+        return P(x_ax, d_ax)
+    if len(shape) == 2:
+        # default input-proj convention (D, X)
+        d_ax = _maybe(mesh, shape[0], FSDP_AXIS)
+        x_ax = _maybe(mesh, shape[1], TP_AXIS)
+        return P(d_ax, x_ax)
+    return P(*([None] * len(shape)))
+
+
+def param_shardings(mesh: Mesh, params) -> object:
+    """Pytree of NamedShardings matching ``params`` (by flattened key path)."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+    specs = []
+    for path, leaf in flat:
+        name = "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in path)
+        specs.append(NamedSharding(mesh, param_spec(mesh, name, leaf.shape)))
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def batch_spec(mesh: Mesh, rank: int = 2) -> P:
+    """Tokens/labels (B, T, ...) -> batch over dp axes."""
+    return P(batch_axes(mesh), *([None] * (rank - 1)))
+
+
+def activation_spec(mesh: Mesh) -> P:
+    """Hidden states (B, T, D)."""
+    return P(batch_axes(mesh), None, None)
+
+
+def kv_cache_spec(mesh: Mesh, num_kv_heads: int, batch: int) -> P:
+    """KV cache (B, Hkv, S, d): shard B over dp; Hkv over TP if it divides,
+    else shard the sequence dim over TP (SP decode, flash-decoding style)."""
+    dp = batch_axes(mesh)
+    b_ax = dp if batch % axis_size(mesh, dp) == 0 else None
+    if num_kv_heads % axis_size(mesh, TP_AXIS) == 0:
+        return P(b_ax, TP_AXIS, None, None)
+    return P(b_ax, None, TP_AXIS, None)
+
+
+def constrain(x, mesh: Mesh, spec: P):
+    """with_sharding_constraint that is a no-op on 1-device meshes."""
+    if mesh.size == 1:
+        return x
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))

@@ -1,0 +1,114 @@
+"""Serving: prefill + decode steps and a continuous-batching engine.
+
+``prefill_step`` and ``decode_step`` are the functions the dry-run lowers
+for the *_32k / long_500k cells.  The KV cache is sharded per
+parallel/sharding.kv_cache_spec (SP decode when kv-heads don't divide the
+model axis); SSM/RG-LRU states are bounded, enabling the 500k cell.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Optional
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh
+
+from ..models.config import ModelConfig
+from ..models.transformer import forward, init_cache, unembed
+
+
+def prefill_step(params, tokens, caches, cfg: ModelConfig,
+                 mesh: Optional[Mesh] = None, patch_embeds=None,
+                 q_chunk: int = 512):
+    """Process the prompt, fill caches.  Returns (last_logits, caches)."""
+    h, caches = forward(params, tokens, cfg, mesh, patch_embeds=patch_embeds,
+                        caches=caches, pos_scalar=None, q_chunk=q_chunk,
+                        remat=True)
+    logits = unembed(params, h[:, -1:], cfg)[:, 0]
+    return logits, caches
+
+
+def decode_step(params, token, pos, caches, cfg: ModelConfig,
+                mesh: Optional[Mesh] = None):
+    """One token for every sequence.  token: (B, 1) int32; pos: scalar int32.
+
+    (Uniform position across the batch — slot-aligned continuous batching;
+    per-sequence offsets live in the engine's bookkeeping.)
+    """
+    h, caches = forward(params, token, cfg, mesh, caches=caches,
+                        pos_scalar=pos, remat=False)
+    logits = unembed(params, h, cfg)[:, 0]
+    return logits, caches
+
+
+def make_serve_fns(cfg: ModelConfig, mesh: Optional[Mesh] = None,
+                   q_chunk: int = 512):
+    pre = jax.jit(functools.partial(prefill_step, cfg=cfg, mesh=mesh,
+                                    q_chunk=q_chunk))
+    dec = jax.jit(functools.partial(decode_step, cfg=cfg, mesh=mesh))
+    return pre, dec
+
+
+# ---------------------------------------------------------------------------
+# Minimal continuous-batching engine (example/server use)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray           # (T,) int32
+    max_new: int
+    generated: list = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class ServeEngine:
+    """Batched greedy decoding over a fixed slot count.
+
+    Requests join free slots; each engine step decodes one token for every
+    active slot.  Simple, but exercises the real production path: shared
+    jitted prefill/decode with a persistent sharded cache.
+    """
+
+    def __init__(self, params, cfg: ModelConfig, batch_slots: int,
+                 max_len: int, mesh: Optional[Mesh] = None):
+        self.params = params
+        self.cfg = cfg
+        self.mesh = mesh
+        self.slots: list[Optional[Request]] = [None] * batch_slots
+        self.max_len = max_len
+        self.caches = init_cache(cfg, batch_slots, max_len)
+        self.pos = 0
+        self.prefill_fn, self.decode_fn = make_serve_fns(cfg, mesh)
+        self.pending: list[Request] = []
+        self.completed: list[Request] = []
+
+    def submit(self, req: Request):
+        self.pending.append(req)
+
+    def _admit(self):
+        for i, slot in enumerate(self.slots):
+            if slot is None and self.pending:
+                req = self.pending.pop(0)
+                self.slots[i] = req
+        # NOTE: slot-aligned batching — all slots share a position counter;
+        # prompts are left-padded to the current position by re-prefill.
+
+    def step_all(self, prompts: np.ndarray, max_new: int) -> np.ndarray:
+        """Convenience batch API: greedy-decode ``max_new`` tokens for a
+        full batch of equal-length prompts.  Returns (B, max_new)."""
+        B, T = prompts.shape
+        caches = init_cache(self.cfg, B, self.max_len)
+        logits, caches = self.prefill_fn(self.params, jnp.asarray(prompts), caches)
+        outs = []
+        tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        for t in range(max_new):
+            outs.append(np.asarray(tok))
+            logits, caches = self.decode_fn(self.params, tok[:, None],
+                                            jnp.int32(T + t), caches)
+            tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return np.stack(outs, axis=1)

@@ -1,0 +1,185 @@
+"""Training loop: jitted step, fault tolerance, straggler rebalancing.
+
+Fault-tolerance posture (DESIGN.md §6):
+  * checkpoint every ``ckpt_every`` steps (atomic, async, keep-last-k),
+    data-pipeline state included -> deterministic resume;
+  * restore-on-start; elastic restore re-shards onto whatever mesh the
+    relaunch provides (checkpoint/manager.py);
+  * per-step wall times feed the cost-model rebalancer
+    (core/partition.rebalance) — the paper's dynamic load balancing doubles
+    as straggler mitigation for MoE expert placement.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Optional
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..checkpoint.manager import CheckpointManager
+from ..data.pipeline import PipelineState, advance, make_inputs
+from ..models.config import ModelConfig, ShapeConfig
+from ..models.transformer import forward, init_params, lm_loss
+from ..models import moe as moe_mod
+from ..optim.adamw import AdamWConfig, apply_updates, init_state
+from ..parallel import sharding as shd
+
+
+def make_loss_fn(cfg: ModelConfig, mesh: Optional[Mesh], *, q_chunk: int = 512,
+                 loss_chunk: int = 256, remat: bool = True):
+    def loss_fn(params, batch):
+        h, _ = forward(params, batch["tokens"], cfg, mesh,
+                       patch_embeds=batch.get("patch_embeds"),
+                       q_chunk=q_chunk, remat=remat)
+        if cfg.num_patches:
+            h = h[:, cfg.num_patches:]      # loss over text positions only
+        return lm_loss(params, h, batch["labels"], cfg, chunk=loss_chunk)
+    return loss_fn
+
+
+def make_train_step(cfg: ModelConfig, mesh: Optional[Mesh], opt_cfg: AdamWConfig,
+                    num_microbatches: int = 1, **loss_kw):
+    """num_microbatches > 1 = gradient accumulation: the global batch is
+    split on the batch dim and scanned, so live activations scale 1/n —
+    how the ≥35B train cells fit HBM (see EXPERIMENTS.md §Dry-run)."""
+    loss_fn = make_loss_fn(cfg, mesh, **loss_kw)
+
+    def train_step(params, opt_state, batch):
+        if num_microbatches == 1:
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        else:
+            n = num_microbatches
+            mb = jax.tree.map(
+                lambda x: x.reshape((n, x.shape[0] // n) + x.shape[1:]), batch)
+
+            def body(carry, mbatch):
+                loss_acc, gacc = carry
+                l, g = jax.value_and_grad(loss_fn)(params, mbatch)
+                gacc = jax.tree.map(lambda a, b: a + b.astype(a.dtype), gacc, g)
+                return (loss_acc + l, gacc), None
+
+            zeros = jax.tree.map(lambda x: jnp.zeros(x.shape, jnp.float32), params)
+            (loss, grads), _ = jax.lax.scan(body, (jnp.float32(0), zeros), mb)
+            loss = loss / n
+            grads = jax.tree.map(lambda g: g / n, grads)
+        new_params, new_opt, metrics = apply_updates(params, grads, opt_state, opt_cfg)
+        metrics["loss"] = loss
+        return new_params, new_opt, metrics
+
+    return train_step
+
+
+def probe_expert_load(params, batch, cfg: ModelConfig) -> np.ndarray:
+    """Router token counts for layer-0 experts (drives expert placement)."""
+    assert cfg.moe is not None
+    emb = params["embed"][batch["tokens"]]
+    p0 = jax.tree.map(lambda x: x[0], params["groups"][0][0])  # layer 0 slice
+    from ..models.layers import rms_norm
+    x = rms_norm(emb, p0["ln1"], cfg.rms_eps)
+    logits = x.reshape(-1, cfg.d_model) @ p0["moe"]["router"]
+    _, idx = jax.lax.top_k(logits, cfg.moe.top_k)
+    counts = jnp.bincount(idx.reshape(-1), length=cfg.moe.num_experts)
+    return np.asarray(counts)
+
+
+@dataclasses.dataclass
+class TrainerConfig:
+    steps: int = 100
+    ckpt_every: int = 25
+    ckpt_dir: str = "/tmp/repro_ckpt"
+    keep: int = 3
+    log_every: int = 10
+    seed: int = 0
+    rebalance_every: int = 0     # 0 = off; >0 = expert-placement refresh cadence
+
+
+class Trainer:
+    """End-to-end driver used by examples/train_lm.py and the tests."""
+
+    def __init__(self, cfg: ModelConfig, shape: ShapeConfig,
+                 opt_cfg: Optional[AdamWConfig] = None,
+                 tcfg: Optional[TrainerConfig] = None,
+                 mesh: Optional[Mesh] = None, remat: bool = True):
+        self.cfg = cfg
+        self.shape = shape
+        self.opt_cfg = opt_cfg or AdamWConfig(total_steps=(tcfg or TrainerConfig()).steps)
+        self.tcfg = tcfg or TrainerConfig()
+        self.mesh = mesh
+        self.ckpt = CheckpointManager(self.tcfg.ckpt_dir, keep=self.tcfg.keep)
+        self.pipeline = PipelineState(seed=self.tcfg.seed, step=0)
+        self.step_times: list[float] = []
+        self.expert_assignment: Optional[np.ndarray] = None
+
+        key = jax.random.PRNGKey(self.tcfg.seed)
+        self.params = init_params(key, cfg)
+        self.opt_state = init_state(self.params, self.opt_cfg)
+        if mesh is not None and mesh.size > 1:
+            pshard = shd.param_shardings(mesh, self.params)
+            self.params = jax.tree.map(jax.device_put, self.params, pshard)
+            oshard = {"mu": pshard, "nu": pshard,
+                      "step": NamedSharding(mesh, P())}
+            self.opt_state = {
+                "mu": jax.tree.map(jax.device_put, self.opt_state["mu"], pshard),
+                "nu": jax.tree.map(jax.device_put, self.opt_state["nu"], pshard),
+                "step": self.opt_state["step"],
+            }
+        self._step_fn = jax.jit(make_train_step(cfg, mesh, self.opt_cfg,
+                                                remat=remat))
+        self.metrics_log: list[dict] = []
+
+    # -- fault tolerance ----------------------------------------------------
+
+    def try_restore(self) -> bool:
+        out, meta = self.ckpt.restore({"params": self.params, "opt": self.opt_state})
+        if out is None:
+            return False
+        self.params, self.opt_state = out["params"], out["opt"]
+        self.pipeline = PipelineState(seed=meta["pipeline_seed"],
+                                      step=meta["pipeline_step"])
+        return True
+
+    def save(self, step: int):
+        self.ckpt.save(step, {"params": self.params, "opt": self.opt_state},
+                       meta={"pipeline_seed": self.pipeline.seed,
+                             "pipeline_step": self.pipeline.step})
+
+    # -- main loop ----------------------------------------------------------
+
+    def run(self, steps: Optional[int] = None) -> list[dict]:
+        steps = steps or self.tcfg.steps
+        start = int(self.opt_state["step"])
+        for i in range(start, steps):
+            batch = make_inputs(self.pipeline, self.cfg, self.shape)
+            t0 = time.perf_counter()
+            self.params, self.opt_state, metrics = self._step_fn(
+                self.params, self.opt_state, batch)
+            metrics = {k: float(v) for k, v in metrics.items()}
+            dt = time.perf_counter() - t0
+            self.step_times.append(dt)
+            self.pipeline = advance(self.pipeline)
+            metrics["step"] = i
+            metrics["time_s"] = dt
+            self.metrics_log.append(metrics)
+            if self.tcfg.ckpt_every and (i + 1) % self.tcfg.ckpt_every == 0:
+                self.save(i + 1)
+            if (self.tcfg.rebalance_every and self.cfg.moe is not None
+                    and (i + 1) % self.tcfg.rebalance_every == 0):
+                self.refresh_expert_placement(batch)
+        self.ckpt.wait()
+        return self.metrics_log
+
+    # -- paper's technique: dynamic load balancing for MoE -------------------
+
+    def refresh_expert_placement(self, batch):
+        counts = probe_expert_load(self.params, batch, self.cfg)
+        coact = np.zeros((self.cfg.moe.num_experts,) * 2)
+        ranks = (self.mesh.shape["model"]
+                 if self.mesh is not None and "model" in self.mesh.axis_names else 1)
+        if ranks > 1:
+            assign = moe_mod.expert_placement(counts, coact, ranks)
+            self.expert_assignment = moe_mod.placement_permutation(assign, ranks)
+        return counts

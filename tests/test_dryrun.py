@@ -1,0 +1,89 @@
+"""Dry-run machinery tests (1-device variants; the 512-device campaign runs
+via `python -m repro.launch.dryrun --all`).
+
+The HLO analyzer is validated against XLA's own cost_analysis on unrolled
+graphs, and against analytic counts on scanned graphs (where XLA's flat
+analysis is known to undercount loop bodies).
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.launch.hlo_analysis import analyze_hlo
+
+
+def test_analyzer_matches_cost_analysis_unrolled():
+    D = 256
+
+    def f(x, w1, w2):
+        return jnp.tanh(x @ w1) @ w2
+
+    args = [jax.ShapeDtypeStruct(s, jnp.float32)
+            for s in ((32, D), (D, D), (D, D))]
+    comp = jax.jit(f).lower(*args).compile()
+    cost = comp.cost_analysis()
+    cost = cost[0] if isinstance(cost, (list, tuple)) else cost
+    mine = analyze_hlo(comp.as_text())
+    expect = 2 * 32 * D * D * 2          # two matmuls
+    assert abs(mine["flops"] - expect) / expect < 0.05
+    # XLA counts elementwise tanh flops too; ours counts dots — within 2%
+    assert abs(mine["flops"] - cost["flops"]) / cost["flops"] < 0.05
+
+
+def test_analyzer_scales_with_scan_trip_count():
+    D = 128
+
+    def model(h, ws):
+        h, _ = jax.lax.scan(lambda c, w: (jnp.tanh(c @ w), None), h, ws)
+        return h.sum()
+
+    flops = {}
+    for L in (2, 8):
+        args = (jax.ShapeDtypeStruct((16, D), jnp.float32),
+                jax.ShapeDtypeStruct((L, D, D), jnp.float32))
+        comp = jax.jit(model).lower(*args).compile()
+        flops[L] = analyze_hlo(comp.as_text())["flops"]
+    per_layer = 2 * 16 * D * D
+    assert abs(flops[2] - 2 * per_layer) / (2 * per_layer) < 0.1
+    assert abs(flops[8] - 8 * per_layer) / (8 * per_layer) < 0.1
+    # XLA's flat analysis would report flops[2] == flops[8]; ours must not.
+    assert flops[8] > 3 * flops[2]
+
+
+def test_input_specs_cover_all_cells():
+    from repro.configs.registry import get_config, lm_archs
+    from repro.launch.dryrun import input_specs
+    from repro.models.config import SHAPES, shape_applicable
+
+    n_cells = 0
+    for arch in lm_archs():
+        cfg = get_config(arch)
+        for shape in SHAPES.values():
+            n_cells += 1
+            ok, why = shape_applicable(cfg, shape)
+            if not ok:
+                continue
+            specs = input_specs(cfg, shape)
+            assert all(hasattr(v, "shape") for v in specs.values())
+            if shape.kind == "train":
+                assert specs["tokens"].shape[0] == shape.global_batch
+                total = specs["tokens"].shape[1] + (cfg.num_patches or 0)
+                assert total == shape.seq_len
+            elif shape.kind == "decode":
+                assert specs["token"].shape == (shape.global_batch, 1)
+    assert n_cells == 40  # 10 archs x 4 shapes
+
+
+def test_cache_shardings_cover_cache_tree():
+    from repro.configs.registry import get_config
+    from repro.launch.dryrun import abstract_cache, cache_shardings
+    from jax.sharding import Mesh
+
+    mesh = Mesh(np.array(jax.devices()[:1]).reshape(1, 1), ("data", "model"))
+    for arch in ("yi_6b", "mamba2_13b", "recurrentgemma_2b"):
+        cfg = get_config(arch)
+        caches = abstract_cache(cfg, 4, 128)
+        shards = cache_shardings(mesh, cfg, caches)
+        n_leaves = len(jax.tree.leaves(caches))
+        n_specs = len(jax.tree.leaves(shards))
+        assert n_leaves == n_specs

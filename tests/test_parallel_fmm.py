@@ -1,0 +1,62 @@
+"""Parallel FMM == serial FMM, on 8 forced host devices.
+
+Runs in a subprocess because jax locks the device count at first init and
+the rest of the suite must see exactly 1 CPU device.
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+
+from repro.core.fmm import fmm_velocity
+from repro.core.parallel_fmm import parallel_fmm_velocity
+from repro.core.quadtree import build_tree
+
+_SUBPROCESS_BODY = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import numpy as np
+    import jax
+    from jax.sharding import Mesh
+    from repro.core.fmm import fmm_velocity
+    from repro.core.parallel_fmm import parallel_fmm_velocity
+    from repro.core.quadtree import build_tree
+
+    assert len(jax.devices()) == 8
+    rng = np.random.default_rng(0)
+    pos = rng.uniform(0.02, 0.98, size=(3000, 2))
+    gamma = rng.normal(size=3000)
+    tree, _ = build_tree(pos, gamma, level=5, sigma=0.02)
+
+    serial = np.asarray(fmm_velocity(tree, p=12))
+    for ndev in (2, 4, 8):
+        mesh = Mesh(np.array(jax.devices()[:ndev]), ("data",))
+        par = np.asarray(parallel_fmm_velocity(tree, 12, mesh))
+        err = np.linalg.norm(par - serial) / np.linalg.norm(serial)
+        print(f"ndev={ndev} rel_err={err:.3e}")
+        assert err < 1e-5, (ndev, err)
+    print("OK")
+""")
+
+
+def test_parallel_matches_serial_multidevice():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.abspath(os.path.join(os.path.dirname(__file__), "..", "src"))
+    proc = subprocess.run([sys.executable, "-c", _SUBPROCESS_BODY],
+                          capture_output=True, text=True, env=env, timeout=600)
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    assert "OK" in proc.stdout
+
+
+def test_parallel_single_device_matches_serial():
+    """Same code path with a 1-device mesh (runs in-process)."""
+    rng = np.random.default_rng(1)
+    pos = rng.uniform(0.02, 0.98, size=(1500, 2))
+    gamma = rng.normal(size=1500)
+    tree, _ = build_tree(pos, gamma, level=4, sigma=0.02)
+    serial = np.asarray(fmm_velocity(tree, p=10))
+    par = np.asarray(parallel_fmm_velocity(tree, 10, None))
+    err = np.linalg.norm(par - serial) / np.linalg.norm(serial)
+    assert err < 1e-5

@@ -1,0 +1,66 @@
+"""Numerics of the §Perf optimization paths vs their baselines."""
+import dataclasses
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.configs.registry import get_smoke_config
+from repro.data.pipeline import PipelineState, make_inputs
+from repro.models.config import ShapeConfig
+from repro.models.layers import attention_core
+from repro.models.transformer import forward, init_params
+from repro.train.loop import make_loss_fn
+
+TINY = ShapeConfig("tiny", "train", 64, 2)
+
+
+def test_bf16_scores_close_to_f32():
+    rng = np.random.default_rng(0)
+    q = jnp.asarray(rng.normal(size=(2, 8, 128, 64)), jnp.bfloat16)
+    k = jnp.asarray(rng.normal(size=(2, 2, 128, 64)), jnp.bfloat16)
+    v = jnp.asarray(rng.normal(size=(2, 2, 128, 64)), jnp.bfloat16)
+    a32 = attention_core(q, k, v, causal=True, q_chunk=64,
+                         score_dtype=jnp.float32).astype(jnp.float32)
+    a16 = attention_core(q, k, v, causal=True, q_chunk=64,
+                         score_dtype=jnp.bfloat16).astype(jnp.float32)
+    rel = np.linalg.norm(np.asarray(a16 - a32)) / np.linalg.norm(np.asarray(a32))
+    assert rel < 3e-2, rel     # bf16 probs: ~1% relative, fine for training
+
+
+def test_bf16_scores_loss_close():
+    cfg = get_smoke_config("yi_6b")
+    cfg16 = dataclasses.replace(cfg, score_dtype="bfloat16")
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    batch = make_inputs(PipelineState(seed=0, step=0), cfg, TINY)
+    l32 = float(make_loss_fn(cfg, None, q_chunk=32, loss_chunk=32)(params, batch))
+    l16 = float(make_loss_fn(cfg16, None, q_chunk=32, loss_chunk=32)(params, batch))
+    assert abs(l32 - l16) < 0.02 * abs(l32), (l32, l16)
+
+
+def test_save_block_out_remat_same_gradients():
+    cfg = get_smoke_config("granite_moe_1b_a400m")
+    cfgS = dataclasses.replace(cfg, remat_policy="save_block_out")
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    batch = make_inputs(PipelineState(seed=0, step=0), cfg, TINY)
+    g1 = jax.grad(make_loss_fn(cfg, None, q_chunk=32, loss_chunk=32))(params, batch)
+    g2 = jax.grad(make_loss_fn(cfgS, None, q_chunk=32, loss_chunk=32))(params, batch)
+    for a, b in zip(jax.tree.leaves(g1), jax.tree.leaves(g2)):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32),
+                                   rtol=1e-4, atol=1e-5)
+
+
+def test_mamba_chunk_size_invariance():
+    """SSD output must not depend on the chunk length (pure perf knob)."""
+    cfg = get_smoke_config("mamba2_13b")
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    batch = make_inputs(PipelineState(seed=0, step=0), cfg, TINY)
+    outs = []
+    for chunk in (8, 16, 64):
+        c = dataclasses.replace(cfg, mamba=dataclasses.replace(cfg.mamba,
+                                                               chunk=chunk))
+        h, _ = forward(params, batch["tokens"], c, None, q_chunk=32)
+        outs.append(np.asarray(h, np.float32))
+    np.testing.assert_allclose(outs[0], outs[1], rtol=2e-2, atol=2e-3)
+    np.testing.assert_allclose(outs[0], outs[2], rtol=2e-2, atol=2e-3)

@@ -1,0 +1,127 @@
+"""Property-based tests (hypothesis) for the system's invariants."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import cost_model as cm
+from repro.core.partition import (Graph, build_subtree_graph,
+                                  load_balance_metric, morton_order, partition)
+from repro.core.quadtree import (build_tree, gather_particle_values,
+                                 morton_decode, morton_encode)
+
+
+# ---------------------------------------------------------------------------
+# Morton indexing
+# ---------------------------------------------------------------------------
+
+
+@given(st.lists(st.tuples(st.integers(0, 2**15 - 1), st.integers(0, 2**15 - 1)),
+                min_size=1, max_size=64))
+def test_morton_roundtrip(coords):
+    ix = np.array([c[0] for c in coords], dtype=np.uint32)
+    iy = np.array([c[1] for c in coords], dtype=np.uint32)
+    dx, dy = morton_decode(morton_encode(ix, iy))
+    np.testing.assert_array_equal(dx, ix)
+    np.testing.assert_array_equal(dy, iy)
+
+
+@given(st.integers(1, 5))
+def test_morton_order_locality(k):
+    """Consecutive z-order ids at any level stay within the same parent quad
+    for 3 of every 4 steps (z-curve locality)."""
+    n = 1 << k
+    order = morton_order(n)
+    iy, ix = np.divmod(order, n)
+    same_parent = ((ix[1:] // 2 == ix[:-1] // 2) &
+                   (iy[1:] // 2 == iy[:-1] // 2))
+    assert same_parent.sum() >= len(order) * 3 // 4 - 1
+
+
+# ---------------------------------------------------------------------------
+# Tree build / gather
+# ---------------------------------------------------------------------------
+
+
+@given(st.integers(1, 400), st.integers(2, 5), st.integers(0, 2**31 - 1))
+@settings(max_examples=20, deadline=None)
+def test_tree_roundtrip_property(n, level, seed):
+    rng = np.random.default_rng(seed)
+    pos = rng.uniform(0.001, 0.999, size=(n, 2))
+    gamma = rng.normal(size=n)
+    tree, index = build_tree(pos, gamma, level, sigma=0.02)
+    assert int(np.asarray(tree.mask).sum()) == n           # no particle lost
+    back = gather_particle_values(np.asarray(tree.z), index)
+    np.testing.assert_allclose(back.real, pos[:, 0], atol=1e-6)
+    np.testing.assert_allclose(back.imag, pos[:, 1], atol=1e-6)
+    # charges preserved: sum of q equals sum(gamma)/(2 pi i)
+    total_q = np.asarray(tree.q)[np.asarray(tree.mask)].sum()
+    np.testing.assert_allclose(total_q, gamma.sum() / (2j * np.pi), rtol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# Cost model
+# ---------------------------------------------------------------------------
+
+
+@given(st.integers(0, 1000), st.integers(2, 40))
+def test_leaf_work_monotone_in_particles(n_i, p):
+    assert cm.work_leaf(np.array([n_i + 1.0]), p)[0] > \
+        cm.work_leaf(np.array([float(n_i)]), p)[0]
+
+
+@given(st.integers(3, 6), st.integers(2, 3), st.integers(0, 2**31 - 1))
+@settings(max_examples=15, deadline=None)
+def test_subtree_work_conserves_total(level, cut, seed):
+    """Sum of per-subtree work == work of the whole tree (no leakage)."""
+    rng = np.random.default_rng(seed)
+    n = 1 << level
+    counts = rng.integers(0, 6, size=(n, n))
+    params = cm.ModelParams(level=level, cut=cut, p=8,
+                            slots=max(int(counts.max()), 1))
+    per_subtree = cm.work_subtree(counts, params)
+    nonleaf_boxes = sum(4 ** (l - cut) for l in range(cut, level)) * 4 ** cut
+    direct = (cm.work_leaf(counts.astype(float), 8,
+                           neighbor_counts=cm.neighbor_count_sum(counts)).sum()
+              + nonleaf_boxes * cm.work_nonleaf(8))
+    np.testing.assert_allclose(per_subtree.sum(), direct, rtol=1e-12)
+
+
+# ---------------------------------------------------------------------------
+# Partitioner
+# ---------------------------------------------------------------------------
+
+
+@given(st.integers(2, 4), st.integers(2, 16), st.integers(0, 2**31 - 1))
+@settings(max_examples=20, deadline=None)
+def test_partition_invariants(cut, nparts, seed):
+    rng = np.random.default_rng(seed)
+    n = 1 << (cut + 2)
+    counts = rng.integers(0, 8, size=(n, n))
+    params = cm.ModelParams(level=cut + 2, cut=cut, p=8,
+                            slots=max(int(counts.max()), 1))
+    g = build_subtree_graph(counts, params)
+    if nparts > g.num_vertices:
+        return
+    for method in ("uniform-sfc", "sfc", "model"):
+        a = partition(g, nparts, method=method)
+        assert a.shape == (g.num_vertices,)
+        assert a.min() >= 0 and a.max() < nparts
+        # every part non-empty (required for SPMD shard assignment)
+        assert len(np.unique(a)) == nparts
+        assert 0.0 < load_balance_metric(g, a, nparts) <= 1.0
+
+
+@given(st.integers(0, 2**31 - 1))
+@settings(max_examples=15, deadline=None)
+def test_refinement_never_hurts_balance_much(seed):
+    """model refinement stays within the imbalance tolerance of its seed."""
+    rng = np.random.default_rng(seed)
+    counts = rng.integers(0, 20, size=(32, 32))
+    params = cm.ModelParams(level=5, cut=3, p=8,
+                            slots=max(int(counts.max()), 1))
+    g = build_subtree_graph(counts, params)
+    seed_a = partition(g, 4, method="sfc")
+    model_a = partition(g, 4, method="model")
+    loads = g.part_loads(model_a, 4)
+    # refined max load stays under (1 + tol) * avg (the FM cap)
+    assert loads.max() <= 1.06 * loads.mean() or \
+        g.part_loads(seed_a, 4).max() <= loads.max() + 1e-9
