@@ -2,12 +2,19 @@
 
 Prints ``name,us_per_call,derived`` CSV rows (the scaffold contract).
 ``derived`` carries the figure-specific metric (efficiency, LB, GB/s, ...).
-Run: PYTHONPATH=src python -m benchmarks.run [--quick]
+Run: PYTHONPATH=src python -m benchmarks.run [--quick] [--json PATH]
+
+``--json PATH`` additionally writes the rows as a JSON list of
+``{"name", "us_per_call", "derived"}`` objects — the machine-readable
+baseline the perf acceptance criteria diff against (BENCH_fmm.json).
 """
 from __future__ import annotations
 
+import json
 import os
+import subprocess
 import sys
+import textwrap
 import time
 
 import numpy as np
@@ -44,8 +51,13 @@ def bench_fig6_stage_timings(rows, quick=False):
                  "P2M+M2M"))
     me = upward_sweep(tree, p)
     m2l = jax.jit(lambda g: ex.m2l_reference(g, level, p))
-    rows.append(("fig6_m2l_leaf_level",
-                 _time(lambda: jax.block_until_ready(m2l(me[level]))), "M2L"))
+    m2l_t = _time(lambda: jax.block_until_ready(m2l(me[level])))
+    rows.append(("fig6_m2l_leaf_level", m2l_t, "M2L_parity_folded"))
+    # same-op comparison: the pre-folding 40-offset masked formulation
+    m2l40 = jax.jit(lambda g: ex.m2l_masked40(g, level, p))
+    m2l40_t = _time(lambda: jax.block_until_ready(m2l40(me[level])))
+    rows.append(("fig6_m2l_leaf_level_masked40", m2l40_t,
+                 f"folded_speedup={m2l40_t / max(m2l_t, 1e-9):.2f}x"))
     nearf = jax.jit(near_field)
     rows.append(("fig6_p2p_near_field",
                  _time(lambda: jax.block_until_ready(nearf(tree))), "P2P"))
@@ -87,10 +99,12 @@ def bench_table12_memory(rows, quick=False):
 
 
 def bench_kernels(rows, quick=False):
-    """Pallas kernels vs jnp reference (CPU: ref timed; kernels run in the
-    interpreter for correctness, so 'derived' reports the validation error)."""
+    """Pallas kernels vs jnp reference, same op on both sides (CPU: the
+    kernels run in the Pallas interpreter, so their wall time is a
+    validation-mode number; 'derived' reports the oracle error)."""
     import jax
     import jax.numpy as jnp
+    from repro.core import expansions as ex
     from repro.kernels import ref
     from repro.kernels.m2l import m2l_pallas
     from repro.kernels.p2p import p2p_pallas
@@ -104,19 +118,28 @@ def bench_kernels(rows, quick=False):
     q = jnp.asarray(rng.normal(size=(ny, nx, s)) + 0j, jnp.complex64)
     mask = jnp.ones((ny, nx, s), bool)
     expect = np.asarray(ref.p2p_ref(z, q, mask, 0.05))
-    p2p_ref_t = _time(lambda: jax.block_until_ready(ref.p2p_ref(z, q, mask, 0.05)))
+    p2p_jit = jax.jit(lambda a, b, c: ref.p2p_ref(a, b, c, 0.05))
+    p2p_ref_t = _time(lambda: jax.block_until_ready(p2p_jit(z, q, mask)))
     err = float(np.linalg.norm(np.asarray(p2p_pallas(z, q, mask, 0.05)) - expect) /
                 np.linalg.norm(expect))
     rows.append(("kernel_p2p_ref_jnp", p2p_ref_t, f"pallas_relerr={err:.1e}"))
+    p2p_k_t = _time(lambda: jax.block_until_ready(p2p_pallas(z, q, mask, 0.05)))
+    rows.append(("kernel_p2p_pallas_interpret", p2p_k_t,
+                 f"same_op_ref_us={p2p_ref_t:.1f}"))
 
     p = 17
+    level = 4
     me = jnp.asarray(rng.normal(size=(ny, nx, p)) + 1j * rng.normal(size=(ny, nx, p)),
                      jnp.complex64)
-    expect = np.asarray(ref.m2l_ref(me, 4, p))
-    m2l_t = _time(lambda: jax.block_until_ready(ref.m2l_ref(me, 4, p)))
-    err = float(np.linalg.norm(np.asarray(m2l_pallas(me, 4, p)) - expect) /
+    expect = np.asarray(ref.m2l_ref(me, level, p))          # masked-40 oracle
+    m2l_fold = jax.jit(lambda g: ex.m2l_reference(g, level, p))
+    m2l_t = _time(lambda: jax.block_until_ready(m2l_fold(me)))
+    err = float(np.linalg.norm(np.asarray(m2l_pallas(me, level, p)) - expect) /
                 np.linalg.norm(expect))
     rows.append(("kernel_m2l_ref_jnp", m2l_t, f"pallas_relerr={err:.1e}"))
+    m2l_k_t = _time(lambda: jax.block_until_ready(m2l_pallas(me, level, p)))
+    rows.append(("kernel_m2l_pallas_interpret", m2l_k_t,
+                 f"same_op_ref_us={m2l_t:.1f}"))
 
     qq = jnp.asarray(rng.normal(size=(1, 4, 128, 64)), jnp.float32)
     kk = jnp.asarray(rng.normal(size=(1, 2, 128, 64)), jnp.float32)
@@ -126,6 +149,85 @@ def bench_kernels(rows, quick=False):
         np.asarray(flash_attention(qq, kk, kk, block_q=64, block_k=64)) - expect) /
         np.linalg.norm(expect))
     rows.append(("kernel_flash_attn_ref_jnp", fa_t, f"pallas_relerr={err:.1e}"))
+
+
+def bench_m2l_staging_bytes(rows, quick=False):
+    """hlo_analysis check that parity folding dropped the M2L HBM traffic.
+
+    Walks the optimized HLO of the folded reference, the pre-folding
+    masked-40 formulation, and the Pallas kernel wrapper.  The folded paths
+    must move fewer bytes AND contain no ``40p``-wide staging buffer (the
+    old wrapper's (nb, 40p) gather tensor)."""
+    import jax
+    import jax.numpy as jnp
+    from repro.core import expansions as ex
+    from repro.kernels import ops as kops
+    from repro.launch.hlo_analysis import analyze_hlo, shape_dim_pattern
+
+    rng = np.random.default_rng(0)
+    level, p = (3, 12) if quick else (4, 17)
+    n = 1 << level
+    me = jnp.asarray(rng.normal(size=(n, n, p)) + 1j * rng.normal(size=(n, n, p)),
+                     jnp.complex64)
+
+    def hlo(fn):
+        return jax.jit(fn).lower(me).compile().as_text()
+
+    b_old = analyze_hlo(hlo(lambda g: ex.m2l_masked40(g, level, p)))["bytes"]
+    b_new = analyze_hlo(hlo(lambda g: ex.m2l_reference(g, level, p)))["bytes"]
+    t_kern = hlo(lambda g: kops.m2l_apply(g, level, p))
+    b_kern = analyze_hlo(t_kern)["bytes"]
+    n40 = len(shape_dim_pattern(40 * p).findall(t_kern))
+    rows.append(("m2l_hbm_bytes_masked40", 0.0, f"{b_old:.3e}"))
+    rows.append(("m2l_hbm_bytes_folded", 0.0,
+                 f"{b_new:.3e}_drop={b_old / max(b_new, 1.0):.2f}x"))
+    rows.append(("m2l_kernel_wrapper_staging", 0.0,
+                 f"bytes={b_kern:.3e}_40p_buffers={n40}"))
+
+
+def bench_parallel_multidevice(rows, quick=False):
+    """Sharded FMM wall time on forced host devices (subprocess: jax locks
+    the device count at first init, and the parent runs single-device)."""
+    ndev = 2 if quick else 4
+    level, p = (4, 8) if quick else (5, 12)
+    body = textwrap.dedent(f"""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count={ndev}"
+        import time
+        import numpy as np
+        import jax
+        from jax.sharding import Mesh
+        from repro.core.parallel_fmm import parallel_fmm_velocity
+        from repro.core.quadtree import build_tree
+
+        rng = np.random.default_rng(0)
+        n_particles = {4000 if quick else 20000}
+        pos = rng.uniform(0.02, 0.98, size=(n_particles, 2))
+        tree, _ = build_tree(pos, rng.normal(size=n_particles), {level}, 0.02)
+        mesh = Mesh(np.array(jax.devices()[:{ndev}]), ("data",))
+        fn = lambda: jax.block_until_ready(parallel_fmm_velocity(tree, {p}, mesh))
+        fn()
+        t0 = time.perf_counter()
+        for _ in range(3):
+            fn()
+        print("US", (time.perf_counter() - t0) / 3 * 1e6)
+    """)
+    env = dict(os.environ)
+    src_dir = os.path.abspath(os.path.join(os.path.dirname(__file__), "..", "src"))
+    old_pp = env.get("PYTHONPATH", "")
+    env["PYTHONPATH"] = src_dir + (os.pathsep + old_pp if old_pp else "")
+    try:
+        proc = subprocess.run([sys.executable, "-c", body], capture_output=True,
+                              text=True, env=env, timeout=600)
+        us = [float(l.split()[1]) for l in proc.stdout.splitlines()
+              if l.startswith("US")]
+        if proc.returncode != 0 or not us:
+            raise RuntimeError(proc.stderr[-300:])
+        rows.append((f"parallel_fmm_P{ndev}", us[0], f"L={level}_p={p}"))
+    except Exception as e:  # report, never abort the whole harness
+        detail = " ".join(str(e).split())[-160:].replace(",", ";")
+        rows.append((f"parallel_fmm_P{ndev}", 0.0,
+                     f"failed:{type(e).__name__}:{detail}"))
 
 
 def bench_moe_placement(rows, quick=False):
@@ -145,13 +247,25 @@ def bench_moe_placement(rows, quick=False):
 
 def main() -> None:
     quick = "--quick" in sys.argv
+    json_path = None
+    if "--json" in sys.argv:
+        i = sys.argv.index("--json")
+        if i + 1 >= len(sys.argv) or sys.argv[i + 1].startswith("--"):
+            sys.exit("usage: python -m benchmarks.run [--quick] [--json PATH]")
+        json_path = sys.argv[i + 1]
     rows: list[tuple[str, float, str]] = []
     for bench in (bench_fig6_stage_timings, bench_fig7_9_scaling,
-                  bench_table12_memory, bench_kernels, bench_moe_placement):
+                  bench_table12_memory, bench_kernels, bench_m2l_staging_bytes,
+                  bench_parallel_multidevice, bench_moe_placement):
         bench(rows, quick=quick)
     print("name,us_per_call,derived")
     for name, us, derived in rows:
         print(f"{name},{us:.1f},{derived}")
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump([{"name": n, "us_per_call": round(u, 1), "derived": d}
+                       for n, u, d in rows], f, indent=2)
+        print(f"# wrote {json_path}", file=sys.stderr)
 
 
 if __name__ == "__main__":

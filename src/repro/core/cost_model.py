@@ -21,6 +21,15 @@ N_ND = 9              # near-domain boxes (3x3 stencil incl. self)
 PARTICLE_BYTES = 28   # B, paper §5.3
 ARROW_BYTES = 108     # A, overlap arrow size, paper §5.3
 
+# Halo widths of the dense slab implementation (rows of ghost data exchanged
+# per sharded level).  Parity folding (DESIGN.md §4) works at parent
+# granularity, so M2L needs ±1 parent row = 2 child rows — down from the ±3
+# child rows a box-granularity interaction list implies.  P2P needs ±1 leaf
+# row.  tests/test_cost_model.py pins these against expansions.M2L_HALO and
+# kernels.p2p.P2P_HALO.
+M2L_HALO_ROWS = 2
+P2P_HALO_ROWS = 1
+
 
 @dataclasses.dataclass(frozen=True)
 class ModelParams:
@@ -142,6 +151,23 @@ def comm_particles_boundary(params: ModelParams, counts_edge: float) -> float:
     counts_edge: total particles in the boundary boxes of the shared face.
     """
     return PARTICLE_BYTES * counts_edge
+
+
+def comm_halo_dense(params: ModelParams, slots: int | None = None) -> dict[str, float]:
+    """Per-device halo-exchange bytes of the dense slab implementation.
+
+    Implementation-level counterpart of Eqs (11)-(12): a row slab exchanges
+    ``M2L_HALO_ROWS`` full rows of ME coefficients per sharded level (both
+    directions) and ``P2P_HALO_ROWS`` rows of particle slots at the leaves.
+    Parity folding cuts the M2L term by ``1 - M2L_HALO_ROWS/3`` relative to
+    the box-granularity ±3 halo.
+    """
+    L, k, p = params.level, params.cut, params.p
+    s = params.slots if slots is None else slots
+    m2l = sum(2 * M2L_HALO_ROWS * (2 ** n) * p * params.coeff_bytes
+              for n in range(k + 1, L + 1))
+    p2p = 2 * P2P_HALO_ROWS * (2 ** L) * s * PARTICLE_BYTES
+    return {"m2l": float(m2l), "p2p": float(p2p), "total": float(m2l + p2p)}
 
 
 def comm_root_tree(params: ModelParams) -> float:

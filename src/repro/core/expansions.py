@@ -19,9 +19,18 @@ Local expansion (LE):
 **Scale normalization (beyond-paper, see DESIGN.md §3):** we store
 ``ahat_k = a_k r^-k`` and ``bhat_l = b_l r^l``.  All translation operators
 then become *level independent*; M2L carries a single ``1/r`` scalar (the
-kernel has dimension 1/length).  One (4,p,p) M2M tensor, one (40,p,p) M2L
-tensor and one (4,p,p) L2L tensor serve the whole tree and stay resident in
-VMEM inside the Pallas kernels.
+kernel has dimension 1/length).  One (4,p,p) M2M tensor, one parity-folded
+(8,4p,4p) M2L block operator and one (4,p,p) L2L tensor serve the whole
+tree and stay resident in VMEM inside the Pallas kernels.
+
+**Parity folding (DESIGN.md §4):** M2L works at parent granularity.  The
+leaf/level grid is relayouted into four child-parity planes stacked along
+the coefficient axis — a ``(ny/2, nx/2, 4p)`` "parent-plane" grid — and the
+whole 40-offset masked reduction collapses to 8 shifted matmuls against the
+parent-neighbor block operator, whose zero blocks *are* the parity masks.
+Every box receives exactly its 27 valid interactions; nothing is computed
+and thrown away, and the halo needed from neighbors shrinks from ±3 child
+rows to ±1 parent row (= 2 child rows).
 """
 from __future__ import annotations
 
@@ -31,7 +40,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from .quadtree import M2L_OFFSETS, M2L_VALIDITY
+from .quadtree import (M2L_OFFSETS, M2L_VALIDITY, PARENT_NEIGH8, box_size)
 
 # Child offsets within a parent, (cy, cx) in {0,1}^2; delta_hat = (c_child -
 # c_parent) / r_parent = ((cx - .5)/2, (cy - .5)/2).
@@ -149,10 +158,12 @@ def parity_mask_rect(rows: int, cols: int, validity_o: np.ndarray,
     return validity_o[np.ix_(iy, ix)]
 
 
-def m2l_reference(me: jnp.ndarray, level: int, p: int) -> jnp.ndarray:
-    """Dense M2L at one level via 40 static-slice shifted matmuls.
+def m2l_masked40(me: jnp.ndarray, level: int, p: int) -> jnp.ndarray:
+    """Dense M2L via 40 masked shifted matmuls (the pre-folding formulation).
 
-    This is the pure-jnp path (and the oracle for the Pallas kernel).
+    Kept as the independent oracle for the parity-folded path: every box
+    computes all 40 candidate offsets and the parity masks discard ~1/3 of
+    the work afterwards.  Do not use on the hot path.
     """
     n = me.shape[0]
     r = 2.0 ** (-level)
@@ -166,6 +177,131 @@ def m2l_reference(me: jnp.ndarray, level: int, p: int) -> jnp.ndarray:
         m = jnp.asarray(parity_mask(n, M2L_VALIDITY[oi]), dtype=me.dtype)
         le = le + contrib * m[..., None]
     return le / r
+
+
+# ---------------------------------------------------------------------------
+# Parity-folded M2L (parent granularity) — the hot path.
+# ---------------------------------------------------------------------------
+
+M2L_HALO = 2   # child rows/cols of ghost data needed by an even-aligned slab
+
+
+@functools.lru_cache(maxsize=None)
+def m2l_folded_operator(p: int) -> np.ndarray:
+    """(8, 4p, 4p) parent-neighbor block operator.
+
+    ``W[d, s*p + k, c*p + l]`` maps coefficient ``k`` of source child ``s``
+    of parent-neighbor ``PARENT_NEIGH8[d]`` to coefficient ``l`` of target
+    child ``c`` (children in CHILD_OFFSETS order).  Blocks for near-neighbor
+    (child-distance < 2) pairs are structurally zero — these zeros are the
+    parity masks, folded in.  Exactly 27 blocks per target child are
+    nonzero, so the contraction performs exactly the valid interactions.
+    """
+    base = m2l_operator(p)                       # (40, p, p), [o, l, k]
+    idx = {off: i for i, off in enumerate(M2L_OFFSETS)}
+    W = np.zeros((8, 4 * p, 4 * p), dtype=np.complex128)
+    for di, (Dx, Dy) in enumerate(PARENT_NEIGH8):
+        for si, (sy, sx) in enumerate(CHILD_OFFSETS):
+            for ci, (py, px) in enumerate(CHILD_OFFSETS):
+                d = (2 * Dx + sx - px, 2 * Dy + sy - py)
+                if max(abs(d[0]), abs(d[1])) >= 2:
+                    # bhat_tgt[l] = sum_k Op[o, l, k] ahat_src[k]
+                    W[di, si * p:(si + 1) * p, ci * p:(ci + 1) * p] = base[idx[d]].T
+    return W
+
+
+def to_parent_planes(grid: jnp.ndarray, p: int) -> jnp.ndarray:
+    """(2R, 2C, p) even-aligned child grid -> (R, C, 4p) parent planes.
+
+    Plane ``c = cy*2 + cx`` (CHILD_OFFSETS order) holds the child with local
+    parity (cy, cx); row 0 of ``grid`` must have even global parity.
+    """
+    R, C = grid.shape[0] // 2, grid.shape[1] // 2
+    g = grid.reshape(R, 2, C, 2, p).transpose(0, 2, 1, 3, 4)
+    return g.reshape(R, C, 4 * p)
+
+
+def from_parent_planes(stack: jnp.ndarray, p: int) -> jnp.ndarray:
+    """(R, C, 4p) parent planes -> (2R, 2C, p) child grid (inverse layout)."""
+    R, C = stack.shape[0], stack.shape[1]
+    g = stack.reshape(R, C, 2, 2, p).transpose(0, 2, 1, 3, 4)
+    return g.reshape(2 * R, 2 * C, p)
+
+
+def m2l_slab_geometry(rows: int, row0: int, halo: int) -> tuple[int, int, int]:
+    """Index algebra shared by the jnp and Pallas folded M2L paths.
+
+    Returns ``(lo, PR, shift)``: ``lo`` is the local index (into the halo'd
+    slab) of the first source child row, ``PR`` the number of parent rows
+    covering the interior, ``shift`` the interior's offset within its first
+    parent cell.  Raises if ``halo`` ghost rows cannot cover the ±1 parent
+    source neighborhood (even-aligned even-length slabs need 2; odd
+    alignment or odd length needs 3).
+    """
+    g0, g1 = row0, row0 + rows - 1
+    Ps, Pe = g0 // 2, g1 // 2
+    PR = Pe - Ps + 1
+    shift = g0 - 2 * Ps
+    lo = (2 * Ps - 2) - g0 + halo            # first needed source child row
+    hi = (2 * Pe + 3) - g0 + halo            # last needed source child row
+    if lo < 0 or hi > rows + 2 * halo - 1:
+        raise ValueError(
+            f"halo={halo} too small for rows={rows}, row0={row0}: the ±1 "
+            f"parent source window needs rows [{lo}, {hi}] of the slab")
+    return lo, PR, shift
+
+
+def m2l_slab_stack(me_halo: jnp.ndarray, p: int, row0: int,
+                   halo: int) -> tuple[jnp.ndarray, int, int]:
+    """Stage a halo'd row slab into the parent-plane layout.
+
+    Shared, parity-critical front end of both the jnp and Pallas folded
+    M2L paths: slices the ±1-parent source window out of the slab, pads
+    the columns, and relayouts to parent planes.  Returns
+    ``(stack, PR, shift)`` with ``stack`` of shape (PR+2, PC+2, 4p).
+    """
+    rows = me_halo.shape[0] - 2 * halo
+    cols = me_halo.shape[1]
+    if cols % 2:
+        raise ValueError("M2L slab columns must span the full (even) width")
+    lo, PR, shift = m2l_slab_geometry(rows, row0, halo)
+    sub = jax.lax.slice_in_dim(me_halo, lo, lo + 2 * (PR + 2), axis=0)
+    sub = jnp.pad(sub, ((0, 0), (2, 2), (0, 0)))
+    return to_parent_planes(sub, p), PR, shift
+
+
+def m2l_folded(me_halo: jnp.ndarray, level: int, p: int, row0: int = 0,
+               halo: int = M2L_HALO) -> jnp.ndarray:
+    """Parity-folded M2L over a row slab with ghost rows attached.
+
+    ``me_halo``: (rows + 2*halo, cols, p) — the slab's interior rows plus
+    ``halo`` ghost rows above and below (zeros at domain edges, exchanged
+    halos under ``shard_map``).  Columns span the full grid width (even).
+    ``row0`` is the global row index of the first interior row and anchors
+    the parity pattern; any alignment is supported given enough halo.
+    Returns the (rows, cols, p) LE slab.
+
+    This is the single M2L implementation behind the serial driver, the
+    sharded driver, and the jnp reference; the Pallas kernel
+    (kernels/m2l.py) computes the same contraction tile by tile.
+    """
+    rows = me_halo.shape[0] - 2 * halo
+    PC = me_halo.shape[1] // 2
+    stack, PR, shift = m2l_slab_stack(me_halo, p, row0, halo)
+    W = m2l_folded_operator(p)
+    acc = jnp.zeros((PR, PC, 4 * p), dtype=me_halo.dtype)
+    for d, (Dx, Dy) in enumerate(PARENT_NEIGH8):
+        src = stack[1 + Dy:1 + Dy + PR, 1 + Dx:1 + Dx + PC, :]
+        acc = acc + jnp.einsum("yxa,ab->yxb", src,
+                               jnp.asarray(W[d], dtype=me_halo.dtype))
+    le = from_parent_planes(acc, p)                        # (2PR, cols, p)
+    return jax.lax.slice_in_dim(le, shift, shift + rows, axis=0) / box_size(level)
+
+
+def m2l_reference(me: jnp.ndarray, level: int, p: int) -> jnp.ndarray:
+    """Dense M2L over a full (n, n, p) grid — parity-folded jnp path."""
+    me_halo = jnp.pad(me, ((M2L_HALO, M2L_HALO), (0, 0), (0, 0)))
+    return m2l_folded(me_halo, level, p, row0=0, halo=M2L_HALO)
 
 
 def l2l(le_parent: jnp.ndarray, p: int) -> jnp.ndarray:

@@ -3,18 +3,85 @@
 Mirrors the paper's bird's-eye view (Fig 2): upward sweep (P2M, M2M),
 downward sweep (M2L, L2L), evaluation (L2P + near-field P2P).  All stages
 operate on dense level grids; see DESIGN.md §3 for the TPU-native layout.
+
+The M2L and P2P hot paths go through ONE slab-oriented implementation each
+(``m2l_slab_fn`` / ``p2p_slab_fn``): the serial driver attaches zero ghost
+rows, the ``shard_map`` driver (core/parallel_fmm.py) attaches exchanged
+halos — same math, same kernels, same parity-folded operators either way
+(DESIGN.md §4-§5).
 """
 from __future__ import annotations
 
 import functools
-from typing import Optional
 
-import numpy as np
 import jax
 import jax.numpy as jnp
 
 from . import expansions as ex
 from .quadtree import P2P_OFFSETS, Tree, box_centers, box_size
+
+
+# ---------------------------------------------------------------------------
+# Unified slab dispatchers — the one M2L / P2P path for both drivers.
+# ---------------------------------------------------------------------------
+
+
+def m2l_slab_fn(p: int, use_kernels: bool = False):
+    """Returns ``fn(me_halo, level, row0=0, halo=M2L_HALO) -> le_slab``.
+
+    ``me_halo`` carries ``halo`` ghost rows top and bottom (zeros at domain
+    edges, exchanged halos under ``shard_map``); ``row0`` anchors the global
+    row parity.  Both the jnp path and the Pallas kernel path implement the
+    same parity-folded contraction (exactly 27 interactions per box).
+    """
+    if use_kernels:
+        from ..kernels import ops as kops
+
+        def fn(me_halo, level, row0=0, halo=ex.M2L_HALO):
+            return kops.m2l_apply_slab(me_halo, level, p, row0=row0, halo=halo)
+        return fn
+
+    def fn(me_halo, level, row0=0, halo=ex.M2L_HALO):
+        return ex.m2l_folded(me_halo, level, p, row0=row0, halo=halo)
+    return fn
+
+
+def m2l_grid_fn(p: int, use_kernels: bool = False):
+    """Grid form of ``m2l_slab_fn``: ``fn(grid, level)`` over a full
+    (ny, nx, p) level grid, zero ghost rows attached here.  Used by the
+    serial driver and for the replicated root-tree levels of the sharded
+    driver."""
+    slab = m2l_slab_fn(p, use_kernels)
+    hpad = ((ex.M2L_HALO, ex.M2L_HALO), (0, 0), (0, 0))
+
+    def fn(grid, level):
+        return slab(jnp.pad(grid, hpad), level)
+    return fn
+
+
+def p2p_slab_reference(z_halo, q_halo, mask_halo, sigma):
+    """Pure-jnp P2P over a slab with ±1 ghost rows/cols attached."""
+    from .vortex import pairwise_w
+
+    rows, cols = z_halo.shape[0] - 2, z_halo.shape[1] - 2
+    z = z_halo[1:1 + rows, 1:1 + cols]
+    w = jnp.zeros_like(z)
+    for (dx, dy) in P2P_OFFSETS:
+        zs = z_halo[1 + dy:1 + dy + rows, 1 + dx:1 + dx + cols]
+        qs = q_halo[1 + dy:1 + dy + rows, 1 + dx:1 + dx + cols]
+        ms = mask_halo[1 + dy:1 + dy + rows, 1 + dx:1 + dx + cols]
+        w = w + pairwise_w(z, zs, qs, ms, sigma)
+    return w
+
+
+def p2p_slab_fn(use_kernels: bool = False):
+    """Returns ``fn(z_halo, q_halo, mask_halo, sigma) -> w`` over a slab
+    with ±1 ghost rows/cols already attached."""
+    if use_kernels:
+        from ..kernels import ops as kops
+
+        return kops.p2p_apply_slab
+    return p2p_slab_reference
 
 
 def upward_sweep(tree: Tree, p: int) -> list[jnp.ndarray]:
@@ -43,21 +110,10 @@ def downward_sweep(me: list[jnp.ndarray], p: int,
 
 def near_field(tree: Tree, p2p_fn=None) -> jnp.ndarray:
     """P2P over the 3x3 stencil with the regularized kernel. -> (n,n,s) W."""
-    if p2p_fn is not None:
-        return p2p_fn(tree)
-    from .vortex import pairwise_w
-
-    n, s = tree.nside, tree.slots
-    zp = jnp.pad(tree.z, ((1, 1), (1, 1), (0, 0)))
-    qp = jnp.pad(tree.q, ((1, 1), (1, 1), (0, 0)))
-    mp = jnp.pad(tree.mask, ((1, 1), (1, 1), (0, 0)))
-    w = jnp.zeros_like(tree.z)
-    for (dx, dy) in P2P_OFFSETS:
-        zs = zp[1 + dy:1 + dy + n, 1 + dx:1 + dx + n]
-        qs = qp[1 + dy:1 + dy + n, 1 + dx:1 + dx + n]
-        ms = mp[1 + dy:1 + dy + n, 1 + dx:1 + dx + n]
-        w = w + pairwise_w(tree.z, zs, qs, ms, tree.sigma)
-    return w
+    slab = p2p_fn or p2p_slab_fn(use_kernels=False)
+    pad = ((1, 1), (1, 1), (0, 0))
+    return slab(jnp.pad(tree.z, pad), jnp.pad(tree.q, pad),
+                jnp.pad(tree.mask, pad), tree.sigma)
 
 
 @functools.partial(jax.jit, static_argnames=("p", "use_kernels"))
@@ -66,23 +122,20 @@ def fmm_velocity(tree: Tree, p: int, use_kernels: bool = False) -> jnp.ndarray:
 
     ``use_kernels=True`` routes M2L and P2P through the Pallas kernels
     (interpret mode on CPU); otherwise the pure-jnp reference path runs.
+    Both routes share the parity-folded slab implementations above.
     """
     L = tree.level
+    p2p = p2p_slab_fn(use_kernels)
     if L < 2:
         # Tiny trees are all near field.
-        return near_field(tree)
-    m2l_fn = p2p_fn = None
-    if use_kernels:
-        from ..kernels import ops as kops
-
-        m2l_fn = lambda grid, level: kops.m2l_apply(grid, level, p)  # noqa: E731
-        p2p_fn = kops.p2p_apply
+        return near_field(tree, p2p_fn=p2p)
+    m2l_fn = m2l_grid_fn(p, use_kernels)
 
     me = upward_sweep(tree, p)
     le = downward_sweep(me, p, m2l_fn=m2l_fn)
     centers = jnp.asarray(box_centers(L), dtype=tree.z.dtype)
     far = ex.l2p(le[L], tree.z, centers, box_size(L), p)
-    near = near_field(tree, p2p_fn=p2p_fn)
+    near = near_field(tree, p2p_fn=p2p)
     w = far + near
     return jnp.where(tree.mask, w, 0.0)
 
@@ -99,7 +152,16 @@ def fmm_velocity_singular(tree: Tree, p: int) -> jnp.ndarray:
 
 
 def flops_estimate(tree_level: int, slots: int, p: int) -> dict:
-    """Rough FLOP census per stage (used by benchmarks & cost-model checks)."""
+    """Rough FLOP census per stage (used by benchmarks & cost-model checks).
+
+    The M2L term counts 27 (p x p) apply-accumulates per box — and since
+    the parity-folded implementation (expansions.m2l_folded) performs
+    exactly the 27 valid interactions (structural zero blocks, no runtime
+    masks), this is the work the hot path actually does, not just the
+    useful fraction of a 40-offset masked sweep.  Consistency with
+    cost_model.N_IL and the folded operator's block sparsity is asserted in
+    tests/test_cost_model.py.
+    """
     L, s = tree_level, slots
     nleaf = 4 ** L
     cmul = 6.0  # complex multiply-add ~ 6 real flops

@@ -9,9 +9,14 @@ broadcast, with no serial bottleneck).
 Communication structure (maps 1:1 onto the paper's Fig 3):
   * M2M / L2L  — subtree <-> root tree only: the single all_gather at the
     cut level (paper: "no communication between subtrees" for these ops);
-  * M2L        — lateral/diagonal neighbor subtrees: ±3-row halo exchange
-    per sharded level via ``lax.ppermute``;
+  * M2L        — lateral/diagonal neighbor subtrees: ±2-row halo exchange
+    per sharded level via ``lax.ppermute`` (parity folding shrinks the
+    paper's ±3 child-box halo to ±1 parent row — DESIGN.md §4);
   * P2P        — neighbor particles: ±1-row halo of (z, q, mask).
+
+M2L and P2P themselves are the SAME slab implementations the serial driver
+uses (core/fmm.py: ``m2l_slab_fn`` / ``p2p_slab_fn``); this module only
+adds the halo exchanges and the root-tree replication around them.
 
 The cost model (core/cost_model.py) predicts exactly these volumes; the
 partitioner chooses the slab decomposition and drives the modeled
@@ -28,17 +33,31 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
 from . import expansions as ex
-from .quadtree import M2L_OFFSETS, M2L_VALIDITY, P2P_OFFSETS, Tree, box_centers, box_size
-from .vortex import pairwise_w
+from . import fmm
+from .quadtree import Tree, box_centers, box_size
+
+# jax >= 0.6 exposes shard_map at the top level; older versions under
+# jax.experimental.  Resolve once, version-compatibly — including the name
+# of the replication-check kwarg (check_rep, renamed check_vma in jax 0.7).
+_shard_map = getattr(jax, "shard_map", None)
+if _shard_map is None:
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+import inspect as _inspect
+
+_CHECK_KW = next((k for k in ("check_rep", "check_vma")
+                  if k in _inspect.signature(_shard_map).parameters), None)
 
 
-def _halo_exchange_rows(x: jnp.ndarray, width: int, axis_name: str) -> jnp.ndarray:
+def _halo_exchange_rows(x: jnp.ndarray, width: int, axis_name: str,
+                        axis_size: int) -> jnp.ndarray:
     """Concatenate ±``width`` ghost rows from slab neighbors along axis 0.
 
     Edge devices receive zeros (consistent with the serial zero padding of
     the domain boundary).  Two ``ppermute`` calls: one up, one down.
+    (``axis_size`` is passed statically: jax 0.4 has no ``lax.axis_size``.)
     """
-    P_ = jax.lax.axis_size(axis_name)
+    P_ = axis_size
     if P_ == 1:
         zeros = jnp.zeros((width,) + x.shape[1:], x.dtype)
         return jnp.concatenate([zeros, x, zeros], axis=0)
@@ -53,56 +72,20 @@ def _halo_exchange_rows(x: jnp.ndarray, width: int, axis_name: str) -> jnp.ndarr
     return jnp.concatenate([from_above, x, from_below], axis=0)
 
 
-def _m2l_slab(me_halo: jnp.ndarray, level: int, p: int) -> jnp.ndarray:
-    """M2L over a row slab with ±3 ghost rows already attached.
-
-    me_halo: (rows+6, n, p).  Returns (rows, n, p).  Requires the slab's
-    global start row to be even (guaranteed: rows-per-device is even), so
-    the parity masks match the serial pattern.
-    """
-    rows = me_halo.shape[0] - 6
-    n = me_halo.shape[1]
-    r = box_size(level)
-    ops = ex.m2l_operator(p)
-    pad = jnp.pad(me_halo, ((0, 0), (3, 3), (0, 0)))
-    le = jnp.zeros((rows, n, p), me_halo.dtype)
-    for oi, (dx, dy) in enumerate(M2L_OFFSETS):
-        src = pad[3 + dy:3 + dy + rows, 3 + dx:3 + dx + n, :]
-        op = jnp.asarray(ops[oi], dtype=me_halo.dtype)
-        contrib = jnp.einsum("yxk,lk->yxl", src, op)
-        m = jnp.asarray(ex.parity_mask_rect(rows, n, M2L_VALIDITY[oi]),
-                        dtype=me_halo.dtype)
-        le = le + contrib * m[..., None]
-    return le / r
-
-
-def _p2p_slab(z, q, mask, sigma, axis_name: str) -> jnp.ndarray:
-    """Near-field direct interactions over a row slab with ±1 ghost rows."""
-    rows, n, s = z.shape
-    zh = _halo_exchange_rows(z, 1, axis_name)
-    qh = _halo_exchange_rows(q, 1, axis_name)
-    mh = _halo_exchange_rows(mask, 1, axis_name)
-    zp = jnp.pad(zh, ((0, 0), (1, 1), (0, 0)))
-    qp = jnp.pad(qh, ((0, 0), (1, 1), (0, 0)))
-    mp = jnp.pad(mh, ((0, 0), (1, 1), (0, 0)))
-    w = jnp.zeros_like(z)
-    for (dx, dy) in P2P_OFFSETS:
-        zs = zp[1 + dy:1 + dy + rows, 1 + dx:1 + dx + n]
-        qs = qp[1 + dy:1 + dy + rows, 1 + dx:1 + dx + n]
-        ms = mp[1 + dy:1 + dy + rows, 1 + dx:1 + dx + n]
-        w = w + pairwise_w(z, zs, qs, ms, sigma)
-    return w
-
-
-def _parallel_fmm_body(z, q, mask, *, level: int, p: int, sigma, axis_name: str):
+def _parallel_fmm_body(z, q, mask, *, level: int, p: int, sigma,
+                       axis_name: str, axis_size: int, use_kernels: bool):
     """Runs on each device over its (rows, n, s) slab of the leaf grid."""
     L = level
     n = 1 << L
-    P_ = jax.lax.axis_size(axis_name)
+    P_ = axis_size
     a = int(np.log2(P_)) if P_ > 1 else 0
-    # sharded levels: rows/device >= 4 (single-hop ±3 halo); replicated below.
+    # sharded levels: rows/device >= 4 (single-hop halo); replicated below.
     l_cut = min(L, max(2, a + 2))
     dtype = z.dtype
+
+    m2l_slab = fmm.m2l_slab_fn(p, use_kernels)
+    m2l_grid = fmm.m2l_grid_fn(p, use_kernels)
+    p2p_slab = fmm.p2p_slab_fn(use_kernels)
 
     my_row0 = jax.lax.axis_index(axis_name) * (n // P_)
     centers = jnp.asarray(box_centers(L), dtype=dtype)
@@ -121,13 +104,16 @@ def _parallel_fmm_body(z, q, mask, *, level: int, p: int, sigma, axis_name: str)
         me_rep[lv - 1] = ex.m2m(me_rep[lv], p)
 
     # ---- downward sweep ---------------------------------------------------
-    # replicated root-tree levels 2 .. l_cut
+    # replicated root-tree levels 2 .. l_cut (same folded path, zero ghosts)
     le_rep: dict[int, jnp.ndarray] = {}
     for lv in range(2, l_cut + 1):
-        le_rep[lv] = ex.m2l_reference(me_rep[lv], lv, p)
+        le_rep[lv] = m2l_grid(me_rep[lv], lv)
         if lv > 2:
             le_rep[lv] = le_rep[lv] + ex.l2l(le_rep[lv - 1], p)
-    # sharded levels l_cut+1 .. L
+    # sharded levels l_cut+1 .. L: exchange ±M2L_HALO ghost rows, then the
+    # identical slab implementation with this slab's global parity anchor.
+    # rows/device is even at every sharded level, so row0 stays even and the
+    # 2-row halo suffices (expansions.m2l_slab_geometry enforces this).
     le_prev = None  # my slab's LE at previous (coarser) level
     if l_cut >= 2 and L > l_cut:
         # slice my slab rows out of the replicated cut-level LE
@@ -135,8 +121,8 @@ def _parallel_fmm_body(z, q, mask, *, level: int, p: int, sigma, axis_name: str)
             le_rep[l_cut], jax.lax.axis_index(axis_name) * ((1 << l_cut) // P_),
             (1 << l_cut) // P_, 0)
     for lv in range(l_cut + 1, L + 1):
-        me_halo = _halo_exchange_rows(me[lv], 3, axis_name)
-        le_lv = _m2l_slab(me_halo, lv, p)
+        me_halo = _halo_exchange_rows(me[lv], ex.M2L_HALO, axis_name, P_)
+        le_lv = m2l_slab(me_halo, lv)
         if le_prev is not None:
             le_lv = le_lv + ex.l2l(le_prev, p)
         le_prev = le_lv
@@ -145,17 +131,25 @@ def _parallel_fmm_body(z, q, mask, *, level: int, p: int, sigma, axis_name: str)
 
     # ---- evaluation -------------------------------------------------------
     far = ex.l2p(le_leaf, z, my_centers, box_size(L), p)
-    near = _p2p_slab(z, q, mask, sigma, axis_name)
+    cpad = ((0, 0), (1, 1), (0, 0))
+    near = p2p_slab(jnp.pad(_halo_exchange_rows(z, 1, axis_name, P_), cpad),
+                    jnp.pad(_halo_exchange_rows(q, 1, axis_name, P_), cpad),
+                    jnp.pad(_halo_exchange_rows(mask, 1, axis_name, P_), cpad),
+                    sigma)
     return jnp.where(mask, far + near, 0.0)
 
 
-@functools.partial(jax.jit, static_argnames=("p", "mesh", "mesh_axis"))
+@functools.partial(jax.jit, static_argnames=("p", "mesh", "mesh_axis",
+                                             "use_kernels"))
 def parallel_fmm_velocity(tree: Tree, p: int, mesh: Optional[Mesh] = None,
-                          mesh_axis: str = "data") -> jnp.ndarray:
+                          mesh_axis: str = "data",
+                          use_kernels: bool = False) -> jnp.ndarray:
     """Distributed FMM evaluation. Shards the leaf grid over ``mesh_axis``.
 
     Falls back to a 1-device mesh when ``mesh`` is None.  The number of
     devices along the axis must divide 2**level with an even quotient.
+    ``use_kernels=True`` routes M2L/P2P through the same Pallas kernels the
+    serial driver uses (interpret mode off-TPU).
     """
     if mesh is None:
         mesh = Mesh(np.array(jax.devices()[:1]), ("data",))
@@ -167,8 +161,12 @@ def parallel_fmm_velocity(tree: Tree, p: int, mesh: Optional[Mesh] = None,
         raise ValueError(f"grid side {n} must split into even slabs over {P_} devices")
 
     body = functools.partial(_parallel_fmm_body, level=tree.level, p=p,
-                             sigma=tree.sigma, axis_name=mesh_axis)
+                             sigma=tree.sigma, axis_name=mesh_axis,
+                             axis_size=P_, use_kernels=use_kernels)
     spec = P(mesh_axis, None, None)
-    fn = jax.shard_map(body, mesh=mesh, in_specs=(spec, spec, spec),
-                       out_specs=spec)
+    # pallas_call has no shard_map replication rule; disable the check on
+    # the kernel route (numerics are unaffected — outputs stay sharded).
+    kwargs = {_CHECK_KW: False} if (use_kernels and _CHECK_KW) else {}
+    fn = _shard_map(body, mesh=mesh, in_specs=(spec, spec, spec),
+                    out_specs=spec, **kwargs)
     return fn(tree.z, tree.q, tree.mask)

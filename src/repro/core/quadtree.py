@@ -99,6 +99,48 @@ assert (M2L_VALIDITY.sum(axis=0) == 27).all()
 # Near-field stencil (self + 8 neighbors).
 P2P_OFFSETS: list[tuple[int, int]] = [(dx, dy) for dy in (-1, 0, 1) for dx in (-1, 0, 1)]
 
+# ---------------------------------------------------------------------------
+# Parent-granularity (parity-folded) interaction algebra.
+#
+# Key identity (DESIGN.md §4): the parity validity above only ever excludes
+# the extreme offsets d = ±3 (d = -3 needs odd parity, d = +3 even parity),
+# so the 27 valid offsets of a box with parity (py, px) form the contiguous
+# 6x6 window  dy in [-2-py, 3-py], dx in [-2-px, 3-px]  minus the 3x3 near
+# field — i.e. exactly the children of the target's parent's 3x3 parent
+# neighborhood, minus near neighbors.  Working on 2x2 child blocks therefore
+# folds every parity mask into the *structure* of the operator: each
+# (target-child, source-child, parent-offset) triple is either a valid
+# interaction or a structural zero; nothing is masked at run time.
+# ---------------------------------------------------------------------------
+
+# The 8 contributing parent offsets (the (0,0) parent holds only near
+# neighbors of every child, so its block is identically zero and dropped).
+PARENT_NEIGH8: list[tuple[int, int]] = [
+    (dx, dy) for dy in (-1, 0, 1) for dx in (-1, 0, 1) if (dx, dy) != (0, 0)
+]
+
+# M2L_PARITY_OFFSETS[py][px]: the 27 child-granularity offsets valid for
+# parity class (py, px), in (parent-offset, source-child) raster order —
+# the order the folded operator contracts them in.
+M2L_PARITY_OFFSETS: list[list[list[tuple[int, int]]]] = [[[] for _ in range(2)]
+                                                         for _ in range(2)]
+for _py in range(2):
+    for _px in range(2):
+        for (_Dx, _Dy) in PARENT_NEIGH8:
+            for _sy in range(2):
+                for _sx in range(2):
+                    _d = (2 * _Dx + _sx - _px, 2 * _Dy + _sy - _py)
+                    if max(abs(_d[0]), abs(_d[1])) >= 2:
+                        M2L_PARITY_OFFSETS[_py][_px].append(_d)
+
+# Cross-check the folded enumeration against the mask table: same 27 sets.
+for _py in range(2):
+    for _px in range(2):
+        _folded = set(M2L_PARITY_OFFSETS[_py][_px])
+        _masked = {off for _o, off in enumerate(M2L_OFFSETS)
+                   if M2L_VALIDITY[_o, _py, _px]}
+        assert _folded == _masked and len(_folded) == 27
+
 
 # ---------------------------------------------------------------------------
 # Geometry helpers

@@ -1,88 +1,117 @@
-"""Pallas TPU kernel: fused multipole-to-local (M2L) transformation.
+"""Pallas TPU kernel: halo-resident, parity-folded multipole-to-local (M2L).
 
 M2L is the second FMM hot spot (paper Eq 10, term ``c``): every box at every
-level receives up to 27 (p x p) transform-accumulates.  The naive dense path
-writes the LE accumulator to HBM 40 times (once per candidate offset); this
-kernel keeps the accumulator in VMEM and performs the whole 40-offset
-reduction as ONE GEMM:
+level receives exactly 27 (p x p) transform-accumulates.  The old kernel
+wrapper materialized a ``(nb, 40p)`` gathered ME tensor in HBM (40x the grid)
+and computed all 40 candidate offsets with parity masks folded in at gather
+time — ~1.5x excess flops plus 40x staging traffic.  This kernel does
+neither:
 
-  * the wrapper gathers, per target box, the 40 candidate source MEs
-    (validity/parity masks folded in at gather time — invalid sources are
-    zeroed, so the kernel is a pure contraction);
-  * scale normalization (DESIGN.md §3) makes the (40, p, p) operator tensor
-    level-independent, so it lives in VMEM once, reshaped to a
-    (40*p, p) matrix;
-  * per block of boxes:  LE(B, p) = ME_gathered(B, 40*p) @ Op(40*p, p),
-    a single MXU matmul with complex arithmetic expanded to 4 real GEMMs.
+  * the grid is relayouted once into **parent planes** — the 2x2 child
+    parities stacked along the coefficient axis, ``(PR+2, PC+2, 4p)`` with a
+    ±1 parent halo (= 2 child rows; see DESIGN.md §4).  Same bytes as the
+    grid itself, no 40x staging tensor;
+  * the Pallas grid tiles the parent grid into ``(BY, BX)`` blocks whose
+    BlockSpecs read **overlapping halo tiles** ``(BY+2, BX+2, 4p)`` directly
+    from the padded parent-plane grid (``pl.Unblocked`` element-offset
+    indexing), so the halo never exists as a separate HBM buffer;
+  * the parity-folded ``(8, 4p, 4p)`` block operator (scale-normalized,
+    hence level-independent — DESIGN.md §3) is VMEM-resident across the
+    whole launch; its structural zero blocks *are* the parity masks, so
+    every box receives exactly its 27 valid interactions;
+  * the LE accumulator lives in VMEM registers across the full 8-neighbor
+    reduction: per tile, 8 complex matmuls ``(BY*BX, 4p) @ (4p, 4p)``
+    (expanded to 4 real GEMMs each for the MXU), one HBM write at the end.
 
-On real hardware pad p (17) and 40*p (680) up to lane multiples; correctness
-is independent of padding.
+On real hardware pad 4p (68 for p=17) up to lane multiples; correctness is
+independent of padding.
 """
 from __future__ import annotations
 
 import functools
 
-import numpy as np
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 from ..core import expansions as ex
-from ..core.quadtree import M2L_OFFSETS, M2L_VALIDITY
+from ..core.quadtree import PARENT_NEIGH8, box_size
 
 
-def _m2l_kernel(ar_ref, ai_ref, opr_ref, opi_ref, br_ref, bi_ref):
-    ar = ar_ref[...]        # (BB, 40p)
-    ai = ai_ref[...]
-    opr = opr_ref[...]      # (40p, p)
-    opi = opi_ref[...]
-    # complex GEMM via 4 real GEMMs (MXU)
-    br_ref[...] = jnp.dot(ar, opr, preferred_element_type=jnp.float32) - \
-        jnp.dot(ai, opi, preferred_element_type=jnp.float32)
-    bi_ref[...] = jnp.dot(ar, opi, preferred_element_type=jnp.float32) + \
-        jnp.dot(ai, opr, preferred_element_type=jnp.float32)
+def _m2l_kernel(sr_ref, si_ref, wr_ref, wi_ref, or_ref, oi_ref,
+                *, BY: int, BX: int, p4: int):
+    tr = sr_ref[...]            # (BY+2, BX+2, 4p) halo tile, real
+    ti = si_ref[...]
+    wr = wr_ref[...]            # (8, 4p, 4p) folded operator, VMEM-resident
+    wi = wi_ref[...]
+    accr = jnp.zeros((BY * BX, p4), jnp.float32)
+    acci = jnp.zeros((BY * BX, p4), jnp.float32)
+    for d, (Dx, Dy) in enumerate(PARENT_NEIGH8):
+        ar = tr[1 + Dy:1 + Dy + BY, 1 + Dx:1 + Dx + BX, :].reshape(BY * BX, p4)
+        ai = ti[1 + Dy:1 + Dy + BY, 1 + Dx:1 + Dx + BX, :].reshape(BY * BX, p4)
+        # complex GEMM via 4 real GEMMs (MXU); accumulator stays in VMEM
+        accr = accr + jnp.dot(ar, wr[d], preferred_element_type=jnp.float32) \
+            - jnp.dot(ai, wi[d], preferred_element_type=jnp.float32)
+        acci = acci + jnp.dot(ar, wi[d], preferred_element_type=jnp.float32) \
+            + jnp.dot(ai, wr[d], preferred_element_type=jnp.float32)
+    or_ref[...] = accr.reshape(BY, BX, p4)
+    oi_ref[...] = acci.reshape(BY, BX, p4)
 
 
-@functools.partial(jax.jit, static_argnames=("level", "p", "block_boxes", "interpret"))
-def m2l_pallas(me: jnp.ndarray, level: int, p: int, block_boxes: int = 128,
-               interpret: bool = True) -> jnp.ndarray:
-    """Fused M2L over a (ny, nx, p) complex ME grid -> (ny, nx, p) LE grid."""
-    ny, nx = me.shape[:2]
-    nb = ny * nx
-    r = 2.0 ** (-level)
+@functools.partial(jax.jit, static_argnames=("level", "p", "row0", "halo",
+                                             "block", "interpret"))
+def m2l_pallas_slab(me_halo: jnp.ndarray, level: int, p: int, row0: int = 0,
+                    halo: int = ex.M2L_HALO, block: tuple[int, int] = (8, 8),
+                    interpret: bool = True) -> jnp.ndarray:
+    """Parity-folded M2L over a halo'd row slab — same contract as
+    ``expansions.m2l_folded``: ``me_halo`` is (rows + 2*halo, cols, p) with
+    ghost rows attached, ``row0`` anchors the global parity.  Returns the
+    (rows, cols, p) LE slab.
+    """
+    rows = me_halo.shape[0] - 2 * halo
+    cols = me_halo.shape[1]
+    PC = cols // 2
+    p4 = 4 * p
+    stack, PR, shift = ex.m2l_slab_stack(me_halo, p, row0, halo)
 
-    # --- gather the 40 candidate sources per box, masks folded in ---------
-    pad = jnp.pad(me, ((3, 3), (3, 3), (0, 0)))
-    slabs = []
-    for oi, (dx, dy) in enumerate(M2L_OFFSETS):
-        src = pad[3 + dy:3 + dy + ny, 3 + dx:3 + dx + nx, :]
-        m = jnp.asarray(ex.parity_mask_rect(ny, nx, M2L_VALIDITY[oi]),
-                        dtype=me.dtype)
-        slabs.append(src * m[..., None])
-    gathered = jnp.stack(slabs, axis=2).reshape(nb, 40 * p)   # (nb, 40p)
+    BY, BX = min(block[0], PR), min(block[1], PC)
+    PRp = -(-PR // BY) * BY
+    PCp = -(-PC // BX) * BX
+    sr = jnp.pad(stack.real.astype(jnp.float32),
+                 ((0, PRp - PR), (0, PCp - PC), (0, 0)))
+    si = jnp.pad(stack.imag.astype(jnp.float32),
+                 ((0, PRp - PR), (0, PCp - PC), (0, 0)))
 
-    ops = np.transpose(ex.m2l_operator(p), (0, 2, 1)).reshape(40 * p, p)
-    opr = jnp.asarray(ops.real, dtype=jnp.float32)
-    opi = jnp.asarray(ops.imag, dtype=jnp.float32)
+    W = ex.m2l_folded_operator(p)
+    wr = jnp.asarray(W.real, dtype=jnp.float32)
+    wi = jnp.asarray(W.imag, dtype=jnp.float32)
 
-    nb_pad = -(-nb // block_boxes) * block_boxes
-    ar = jnp.pad(gathered.real.astype(jnp.float32), ((0, nb_pad - nb), (0, 0)))
-    ai = jnp.pad(gathered.imag.astype(jnp.float32), ((0, nb_pad - nb), (0, 0)))
-
-    grid = (nb_pad // block_boxes,)
-    in_specs = [
-        pl.BlockSpec((block_boxes, 40 * p), lambda i: (i, 0)),
-        pl.BlockSpec((block_boxes, 40 * p), lambda i: (i, 0)),
-        pl.BlockSpec((40 * p, p), lambda i: (0, 0)),   # operator: VMEM-resident
-        pl.BlockSpec((40 * p, p), lambda i: (0, 0)),
-    ]
-    out_specs = [pl.BlockSpec((block_boxes, p), lambda i: (i, 0))] * 2
-    out_shape = [jax.ShapeDtypeStruct((nb_pad, p), jnp.float32)] * 2
+    grid = (PRp // BY, PCp // BX)
+    halo_spec = pl.BlockSpec((BY + 2, BX + 2, p4),
+                             lambda i, j: (i * BY, j * BX, 0),
+                             indexing_mode=pl.Unblocked())
+    op_spec = pl.BlockSpec((8, p4, p4), lambda i, j: (0, 0, 0))
+    out_spec = pl.BlockSpec((BY, BX, p4), lambda i, j: (i, j, 0))
+    out_shape = [jax.ShapeDtypeStruct((PRp, PCp, p4), jnp.float32)] * 2
 
     br, bi = pl.pallas_call(
-        _m2l_kernel, grid=grid, in_specs=in_specs, out_specs=out_specs,
-        out_shape=out_shape, interpret=interpret,
-    )(ar, ai, opr, opi)
+        functools.partial(_m2l_kernel, BY=BY, BX=BX, p4=p4),
+        grid=grid,
+        in_specs=[halo_spec, halo_spec, op_spec, op_spec],
+        out_specs=[out_spec, out_spec],
+        out_shape=out_shape,
+        interpret=interpret,
+    )(sr, si, wr, wi)
 
-    le = (br[:nb] + 1j * bi[:nb]).reshape(ny, nx, p).astype(me.dtype)
-    return le / r
+    acc = (br[:PR, :PC] + 1j * bi[:PR, :PC]).astype(me_halo.dtype)
+    le = ex.from_parent_planes(acc, p)                   # (2PR, cols, p)
+    return jax.lax.slice_in_dim(le, shift, shift + rows, axis=0) / box_size(level)
+
+
+def m2l_pallas(me: jnp.ndarray, level: int, p: int,
+               block: tuple[int, int] = (8, 8),
+               interpret: bool = True) -> jnp.ndarray:
+    """Fused M2L over a full (ny, nx, p) complex ME grid -> (ny, nx, p) LE."""
+    me_halo = jnp.pad(me, ((ex.M2L_HALO, ex.M2L_HALO), (0, 0), (0, 0)))
+    return m2l_pallas_slab(me_halo, level, p, row0=0, halo=ex.M2L_HALO,
+                           block=block, interpret=interpret)

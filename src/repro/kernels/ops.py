@@ -3,30 +3,45 @@
 ``interpret`` defaults to True off-TPU (the Pallas interpreter executes the
 kernel body on CPU for validation); on TPU backends the compiled kernels
 run natively.
+
+The M2L/P2P wrappers come in two forms with one kernel behind both: the
+grid form (serial driver — zero ghosts attached here) and the slab form
+(sharded driver — ghosts already exchanged by the caller).  See DESIGN.md
+§4/§5.
 """
 from __future__ import annotations
 
 import jax
+import jax.numpy as jnp
 
 from . import flash_attn as _fa
 from . import m2l as _m2l
 from . import p2p as _p2p
+from ..core import expansions as _ex
 
 
 def _interpret() -> bool:
     return jax.default_backend() != "tpu"
 
 
-def p2p_apply(tree, block_boxes: int = 64):
-    """P2P near field for a core.quadtree.Tree -> complex W (n, n, s)."""
-    return _p2p.p2p_pallas(tree.z, tree.q, tree.mask, sigma=tree.sigma,
-                           block_boxes=block_boxes, interpret=_interpret())
+def p2p_apply_slab(z_halo, q_halo, mask_halo, sigma,
+                   block: tuple[int, int] = (8, 8)):
+    """P2P over a slab with ±1 ghost rows/cols attached (sharded driver)."""
+    return _p2p.p2p_pallas_slab(z_halo, q_halo, mask_halo, sigma=sigma,
+                                block=block, interpret=_interpret())
 
 
-def m2l_apply(me, level: int, p: int, block_boxes: int = 128):
-    """Fused M2L for one level's (ny, nx, p) ME grid."""
-    return _m2l.m2l_pallas(me, level, p, block_boxes=block_boxes,
-                           interpret=_interpret())
+def m2l_apply(me, level: int, p: int, block: tuple[int, int] = (8, 8)):
+    """Parity-folded M2L for one level's full (ny, nx, p) ME grid."""
+    return _m2l.m2l_pallas(me, level, p, block=block, interpret=_interpret())
+
+
+def m2l_apply_slab(me_halo, level: int, p: int, row0: int = 0,
+                   halo: int = _ex.M2L_HALO,
+                   block: tuple[int, int] = (8, 8)):
+    """Parity-folded M2L over a halo'd row slab (sharded driver)."""
+    return _m2l.m2l_pallas_slab(me_halo, level, p, row0=row0, halo=halo,
+                                block=block, interpret=_interpret())
 
 
 def flash_attention(q, k, v, causal: bool = True, block_q: int = 128,

@@ -1,24 +1,28 @@
-"""Pallas TPU kernel: near-field direct interactions (P2P).
+"""Pallas TPU kernel: halo-resident near-field direct interactions (P2P).
 
 The P2P stage dominates FMM runtime (paper Eq 10, the ``d N B / P`` term),
-so it gets a hand-written kernel.  TPU adaptation of the paper's per-box
-neighbor loops:
+so it gets a hand-written kernel.  The old wrapper gathered each leaf box's
+3x3 neighborhood into a dense ``(boxes, 9s)`` source slab — 9x the particle
+data staged through HBM before the kernel even started.  This version stages
+nothing:
 
-  * the wrapper gathers each leaf box's 3x3 neighborhood into a dense
-    ``(boxes, 9*s)`` source slab (halo exchange happens *before* the kernel
-    at the shard_map level, so the kernel itself is embarrassingly local);
-  * the kernel tiles boxes into VMEM blocks and evaluates the regularized
-    Biot-Savart pairwise sum on the VPU, targets x sources fully unrolled
-    in registers;
+  * the leaf grid is padded by ±1 box (zeros at the domain edge; under
+    ``shard_map`` the ghost rows have already been exchanged by the caller)
+    and the Pallas grid tiles it into ``(BY, BX)`` blocks whose BlockSpecs
+    read **overlapping halo tiles** ``(BY+2, BX+2, s)`` directly from the
+    padded grid (``pl.Unblocked`` element-offset indexing);
+  * the kernel slices the 9 neighbor offsets out of its VMEM tile and
+    evaluates the regularized Biot-Savart pairwise sum on the VPU, keeping
+    the W accumulator in VMEM across the whole 9-offset reduction — one HBM
+    write per tile, ``(BB, s, s)`` pair temporaries instead of the old
+    ``(BB, s, 9s)``;
   * complex arithmetic is explicit real/imag (the MXU/VPU have no complex
     type): with q = qr + i*qi, dz = dx + i*dy,
         w += q / dz * moll = (qr*dx + qi*dy + i(qi*dx - qr*dy)) / r2 * moll.
 
-Block sizing: a (BB, s) target tile with its (BB, 9s) source tile and the
-(BB, s, 9s) pair temporaries must fit VMEM; ``block_boxes`` is chosen so the
-pair tensor stays under ~2 MiB (f32), and the lane dimension (9s) should be
-a multiple of 128 on real hardware (pad ``s`` accordingly; correctness does
-not depend on it).
+Block sizing: the (BY*BX, s, s) pair tensor should stay under ~2 MiB (f32),
+and the lane dimension (s) should be a multiple of 128 on real hardware (pad
+``s`` accordingly; correctness does not depend on it).
 """
 from __future__ import annotations
 
@@ -28,85 +32,93 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from ..core.quadtree import P2P_OFFSETS
 
-def _p2p_kernel(tx_ref, ty_ref, sx_ref, sy_ref, sqr_ref, sqi_ref, sm_ref,
-                wr_ref, wi_ref, *, sigma: float | None):
-    tx = tx_ref[...]            # (BB, s)
-    ty = ty_ref[...]
-    sx = sx_ref[...]            # (BB, 9s)
-    sy = sy_ref[...]
-    sqr = sqr_ref[...]
-    sqi = sqi_ref[...]
-    sm = sm_ref[...]
-
-    dx = tx[:, :, None] - sx[:, None, :]          # (BB, s, 9s)
-    dy = ty[:, :, None] - sy[:, None, :]
-    r2 = dx * dx + dy * dy
-    valid = (sm[:, None, :] > 0) & (r2 > 0.0)
-    inv_r2 = jnp.where(valid, 1.0, 0.0) / jnp.where(r2 > 0.0, r2, 1.0)
-    if sigma is not None:
-        inv_r2 = inv_r2 * (1.0 - jnp.exp(-r2 / (2.0 * sigma * sigma)))
-    qr = sqr[:, None, :]
-    qi = sqi[:, None, :]
-    wr_ref[...] = ((qr * dx + qi * dy) * inv_r2).sum(axis=-1)
-    wi_ref[...] = ((qi * dx - qr * dy) * inv_r2).sum(axis=-1)
+P2P_HALO = 1    # ghost rows/cols of particle data needed by a slab
 
 
-@functools.partial(jax.jit, static_argnames=("sigma", "block_boxes", "interpret"))
-def p2p_pallas(z, q, mask, sigma=None, block_boxes: int = 64,
+def _p2p_kernel(zr_ref, zi_ref, qr_ref, qi_ref, m_ref, wr_ref, wi_ref,
+                *, sigma: float | None, BY: int, BX: int, s: int):
+    zr = zr_ref[...]            # (BY+2, BX+2, s) halo tiles
+    zi = zi_ref[...]
+    qr = qr_ref[...]
+    qi = qi_ref[...]
+    m = m_ref[...]
+    tx = zr[1:1 + BY, 1:1 + BX, :].reshape(BY * BX, s)   # interior targets
+    ty = zi[1:1 + BY, 1:1 + BX, :].reshape(BY * BX, s)
+    accr = jnp.zeros((BY * BX, s), jnp.float32)
+    acci = jnp.zeros((BY * BX, s), jnp.float32)
+    for (dx, dy) in P2P_OFFSETS:
+        sx = zr[1 + dy:1 + dy + BY, 1 + dx:1 + dx + BX, :].reshape(BY * BX, s)
+        sy = zi[1 + dy:1 + dy + BY, 1 + dx:1 + dx + BX, :].reshape(BY * BX, s)
+        sqr = qr[1 + dy:1 + dy + BY, 1 + dx:1 + dx + BX, :].reshape(BY * BX, s)
+        sqi = qi[1 + dy:1 + dy + BY, 1 + dx:1 + dx + BX, :].reshape(BY * BX, s)
+        sm = m[1 + dy:1 + dy + BY, 1 + dx:1 + dx + BX, :].reshape(BY * BX, s)
+        ddx = tx[:, :, None] - sx[:, None, :]            # (BB, s, s)
+        ddy = ty[:, :, None] - sy[:, None, :]
+        r2 = ddx * ddx + ddy * ddy
+        valid = (sm[:, None, :] > 0) & (r2 > 0.0)
+        inv_r2 = jnp.where(valid, 1.0, 0.0) / jnp.where(r2 > 0.0, r2, 1.0)
+        if sigma is not None:
+            inv_r2 = inv_r2 * (1.0 - jnp.exp(-r2 / (2.0 * sigma * sigma)))
+        qrb = sqr[:, None, :]
+        qib = sqi[:, None, :]
+        accr = accr + ((qrb * ddx + qib * ddy) * inv_r2).sum(axis=-1)
+        acci = acci + ((qib * ddx - qrb * ddy) * inv_r2).sum(axis=-1)
+    wr_ref[...] = accr.reshape(BY, BX, s)
+    wi_ref[...] = acci.reshape(BY, BX, s)
+
+
+@functools.partial(jax.jit, static_argnames=("sigma", "block", "interpret"))
+def p2p_pallas_slab(z_halo, q_halo, mask_halo, sigma=None,
+                    block: tuple[int, int] = (8, 8), interpret: bool = True):
+    """P2P over a slab with ±1 ghost rows/cols already attached.
+
+    z_halo/q_halo: complex (rows+2, cols+2, s); mask_halo: bool.  Ghosts are
+    zeros at domain edges or exchanged halos under ``shard_map``.  Returns
+    the interior (rows, cols, s) complex W per slot.
+    """
+    rows, cols, s = (z_halo.shape[0] - 2, z_halo.shape[1] - 2,
+                     z_halo.shape[2])
+    BY, BX = min(block[0], rows), min(block[1], cols)
+    rowsP = -(-rows // BY) * BY
+    colsP = -(-cols // BX) * BX
+
+    def prep(x):
+        return jnp.pad(x.astype(jnp.float32),
+                       ((0, rowsP - rows), (0, colsP - cols), (0, 0)))
+
+    zr, zi = prep(z_halo.real), prep(z_halo.imag)
+    qr, qi = prep(q_halo.real), prep(q_halo.imag)
+    m = prep(mask_halo)
+
+    grid = (rowsP // BY, colsP // BX)
+    halo_spec = pl.BlockSpec((BY + 2, BX + 2, s),
+                             lambda i, j: (i * BY, j * BX, 0),
+                             indexing_mode=pl.Unblocked())
+    out_spec = pl.BlockSpec((BY, BX, s), lambda i, j: (i, j, 0))
+    out_shape = [jax.ShapeDtypeStruct((rowsP, colsP, s), jnp.float32)] * 2
+
+    wr, wi = pl.pallas_call(
+        functools.partial(_p2p_kernel, sigma=sigma, BY=BY, BX=BX, s=s),
+        grid=grid,
+        in_specs=[halo_spec] * 5,
+        out_specs=[out_spec, out_spec],
+        out_shape=out_shape,
+        interpret=interpret,
+    )(zr, zi, qr, qi, m)
+
+    return (wr[:rows, :cols] + 1j * wi[:rows, :cols]).astype(z_halo.dtype)
+
+
+def p2p_pallas(z, q, mask, sigma=None, block: tuple[int, int] = (8, 8),
                interpret: bool = True):
     """P2P over a (ny, nx, s) dense leaf grid.  Returns complex W per slot.
 
     z, q: complex64; mask: bool.  ``interpret=True`` runs the kernel body in
     the Pallas interpreter (CPU validation); on TPU pass False.
     """
-    ny, nx, s = z.shape
-    nb = ny * nx
-
-    # Gather 3x3 neighborhoods -> (nb, 9s).  (Static slices; on TPU this is
-    # a cheap pad+reshape, and under shard_map the halo rows have already
-    # been exchanged by the caller.)
-    zp = jnp.pad(z, ((1, 1), (1, 1), (0, 0)))
-    qp = jnp.pad(q, ((1, 1), (1, 1), (0, 0)))
-    mp = jnp.pad(mask, ((1, 1), (1, 1), (0, 0)))
-    srcs = []
-    for dy in (-1, 0, 1):
-        for dx in (-1, 0, 1):
-            srcs.append((zp[1 + dy:1 + dy + ny, 1 + dx:1 + dx + nx],
-                         qp[1 + dy:1 + dy + ny, 1 + dx:1 + dx + nx],
-                         mp[1 + dy:1 + dy + ny, 1 + dx:1 + dx + nx]))
-    sz = jnp.concatenate([a for a, _, _ in srcs], axis=-1).reshape(nb, 9 * s)
-    sq = jnp.concatenate([b for _, b, _ in srcs], axis=-1).reshape(nb, 9 * s)
-    sm = jnp.concatenate([c for _, _, c in srcs], axis=-1).reshape(nb, 9 * s)
-
-    # pad box count to a multiple of the block
-    nb_pad = -(-nb // block_boxes) * block_boxes
-    pad = nb_pad - nb
-
-    def padb(x):
-        return jnp.pad(x, ((0, pad),) + ((0, 0),) * (x.ndim - 1))
-
-    tx = padb(z.reshape(nb, s).real.astype(jnp.float32))
-    ty = padb(z.reshape(nb, s).imag.astype(jnp.float32))
-    sxr = padb(sz.real.astype(jnp.float32))
-    syr = padb(sz.imag.astype(jnp.float32))
-    sqr = padb(sq.real.astype(jnp.float32))
-    sqi = padb(sq.imag.astype(jnp.float32))
-    smf = padb(sm.astype(jnp.float32))
-
-    grid = (nb_pad // block_boxes,)
-    tspec = pl.BlockSpec((block_boxes, s), lambda i: (i, 0))
-    sspec = pl.BlockSpec((block_boxes, 9 * s), lambda i: (i, 0))
-    out_shape = [jax.ShapeDtypeStruct((nb_pad, s), jnp.float32)] * 2
-
-    wr, wi = pl.pallas_call(
-        functools.partial(_p2p_kernel, sigma=sigma),
-        grid=grid,
-        in_specs=[tspec, tspec, sspec, sspec, sspec, sspec, sspec],
-        out_specs=[tspec, tspec],
-        out_shape=out_shape,
-        interpret=interpret,
-    )(tx, ty, sxr, syr, sqr, sqi, smf)
-
-    w = (wr[:nb] + 1j * wi[:nb]).reshape(ny, nx, s).astype(z.dtype)
-    return w
+    pad = ((P2P_HALO, P2P_HALO), (P2P_HALO, P2P_HALO), (0, 0))
+    return p2p_pallas_slab(jnp.pad(z, pad), jnp.pad(q, pad),
+                           jnp.pad(mask, pad), sigma=sigma, block=block,
+                           interpret=interpret)

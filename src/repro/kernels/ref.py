@@ -25,8 +25,8 @@ def p2p_ref(z, q, mask, sigma=None):
 
 
 def m2l_ref(me, level: int, p: int):
-    """Dense 40-offset M2L (expansions.m2l_reference)."""
-    return ex.m2l_reference(me, level, p)
+    """Dense 40-offset masked M2L — the independent (pre-folding) oracle."""
+    return ex.m2l_masked40(me, level, p)
 
 
 def attention_ref(q, k, v, causal: bool = True):

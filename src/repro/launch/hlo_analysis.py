@@ -231,6 +231,14 @@ def analyze_hlo(hlo_text: str) -> dict:
     }
 
 
+def shape_dim_pattern(dim: int) -> "re.Pattern[str]":
+    """Regex matching any HLO tensor shape with a ``dim``-sized dimension,
+    e.g. ``shape_dim_pattern(680)`` hits ``f32[256,680]``.  Shared by the
+    M2L staging checks (tests/test_m2l_staging.py, benchmarks/run.py) that
+    pin the absence of ``(nb, 40p)`` gather buffers."""
+    return re.compile(r"\[(?:\d+,)*%d(?:,\d+)*\]" % dim)
+
+
 def parse_collectives(hlo_text: str) -> dict:
     """Back-compat wrapper: collective volumes only."""
     r = analyze_hlo(hlo_text)

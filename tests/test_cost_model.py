@@ -44,6 +44,61 @@ def test_work_estimates_eq13_eq14():
     assert w[0] == 2 * 3 * p + p * p * 27 + 9 * 9
 
 
+def test_flops_estimate_consistent_with_folded_m2l():
+    """fmm.flops_estimate's 27 M2L ops/box is what the parity-folded
+    implementation actually performs: the folded (8, 4p, 4p) operator has
+    exactly N_IL = 27 nonzero (p, p) blocks per target child, and the
+    per-parity offset tables enumerate the same 27 interactions the mask
+    table admits."""
+    from repro.core import expansions as ex
+    from repro.core.fmm import flops_estimate
+    from repro.core.quadtree import M2L_PARITY_OFFSETS, M2L_VALIDITY
+
+    p = 5
+    W = ex.m2l_folded_operator(p)
+    for c in range(4):                      # target child = parity class
+        blocks = W[:, :, c * p:(c + 1) * p].reshape(8, 4, p, p)
+        nonzero = int(sum(bool(np.any(blocks[d, s] != 0))
+                          for d in range(8) for s in range(4)))
+        assert nonzero == cm.N_IL == 27
+    assert (M2L_VALIDITY.sum(axis=0) == cm.N_IL).all()
+    for py in range(2):
+        for px in range(2):
+            assert len(M2L_PARITY_OFFSETS[py][px]) == cm.N_IL
+
+    # the stage census uses the same count
+    L, s, p = 5, 4, 17
+    est = flops_estimate(L, s, p)
+    expect = sum(4 ** l for l in range(2, L + 1)) * cm.N_IL * p * p * 6.0
+    assert est["m2l"] == expect
+
+
+def test_halo_constants_match_implementation():
+    """Cost-model halo widths == what the slab implementations exchange."""
+    from repro.core import expansions as ex
+    from repro.kernels.p2p import P2P_HALO
+
+    assert cm.M2L_HALO_ROWS == ex.M2L_HALO == 2
+    assert cm.P2P_HALO_ROWS == P2P_HALO == 1
+    # even-aligned even-length slabs must be coverable with exactly 2 rows
+    ex.m2l_slab_geometry(rows=4, row0=0, halo=cm.M2L_HALO_ROWS)
+    with pytest.raises(ValueError):
+        ex.m2l_slab_geometry(rows=4, row0=1, halo=cm.M2L_HALO_ROWS)
+
+
+def test_comm_halo_dense_volumes():
+    params = _params(level=6, cut=3, p=17, slots=4)
+    comm = cm.comm_halo_dense(params)
+    expect_m2l = sum(2 * 2 * (2 ** n) * 17 * 16 for n in range(4, 7))
+    assert comm["m2l"] == expect_m2l
+    assert comm["p2p"] == 2 * 1 * (2 ** 6) * 4 * cm.PARTICLE_BYTES
+    assert comm["total"] == comm["m2l"] + comm["p2p"]
+    # parity folding: strictly less volume than the box-granularity ±3-row
+    # exchange the unfolded interaction list implies
+    unfolded_m2l = sum(2 * 3 * (2 ** n) * 17 * 16 for n in range(4, 7))
+    assert comm["m2l"] < unfolded_m2l
+
+
 def test_work_subtree_uniform_equal():
     params = _params()
     counts = _uniform_counts(params.level)

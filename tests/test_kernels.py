@@ -1,13 +1,19 @@
-"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps, interpret mode."""
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps, interpret mode.
+
+The M2L oracle is the pre-folding 40-offset masked formulation
+(``expansions.m2l_masked40``), so these tests also pin the parity-folded
+math — jnp and Pallas — against an independent implementation.
+"""
 import numpy as np
 import pytest
 import jax
 import jax.numpy as jnp
 
+from repro.core import expansions as ex
 from repro.kernels import ref
 from repro.kernels.flash_attn import flash_attention
-from repro.kernels.m2l import m2l_pallas
-from repro.kernels.p2p import p2p_pallas
+from repro.kernels.m2l import m2l_pallas, m2l_pallas_slab
+from repro.kernels.p2p import p2p_pallas, p2p_pallas_slab
 from repro.core.fmm import fmm_velocity
 from repro.core.quadtree import build_tree
 
@@ -31,7 +37,7 @@ def test_p2p_kernel_sweep(ny, nx, s, sigma):
     mask = rng.uniform(size=(ny, nx, s)) > 0.3
     z, q = jnp.asarray(z, jnp.complex64), jnp.asarray(q, jnp.complex64)
     mask = jnp.asarray(mask)
-    out = p2p_pallas(z, q, mask, sigma=sigma, block_boxes=8)
+    out = p2p_pallas(z, q, mask, sigma=sigma, block=(4, 4))
     expect = ref.p2p_ref(z, q, mask, sigma=sigma)
     expect = jnp.where(mask, expect, 0)  # kernel computes everywhere; compare masked
     out = jnp.where(mask, out, 0)
@@ -39,19 +45,39 @@ def test_p2p_kernel_sweep(ny, nx, s, sigma):
 
 
 def test_p2p_kernel_block_size_invariance():
+    """(BY, BX) is a pure perf knob — outputs must agree across shapes."""
     rng = np.random.default_rng(0)
     z = jnp.asarray(rng.uniform(size=(8, 8, 4)) + 1j * rng.uniform(size=(8, 8, 4)),
                     jnp.complex64)
     q = jnp.asarray(rng.normal(size=(8, 8, 4)) + 0j, jnp.complex64)
     mask = jnp.ones((8, 8, 4), bool)
-    outs = [np.asarray(p2p_pallas(z, q, mask, sigma=0.1, block_boxes=b))
-            for b in (4, 16, 64)]
+    outs = [np.asarray(p2p_pallas(z, q, mask, sigma=0.1, block=b))
+            for b in ((2, 2), (4, 8), (8, 8), (16, 16))]
     for o in outs[1:]:
         np.testing.assert_allclose(o, outs[0], rtol=1e-6, atol=1e-6)
 
 
+def test_p2p_slab_matches_grid():
+    """The slab entry point (ghosts attached by caller) == grid wrapper."""
+    rng = np.random.default_rng(5)
+    z = jnp.asarray(rng.uniform(size=(8, 8, 3)) + 1j * rng.uniform(size=(8, 8, 3)),
+                    jnp.complex64)
+    q = jnp.asarray(rng.normal(size=(8, 8, 3)) + 0j, jnp.complex64)
+    mask = jnp.asarray(rng.uniform(size=(8, 8, 3)) > 0.2)
+    full = np.asarray(p2p_pallas(z, q, mask, sigma=0.05, block=(4, 4)))
+    # slab = grid rows 2..5; ghost rows 1 and 6 are true neighbor rows
+    cpad = ((0, 0), (1, 1), (0, 0))
+    out = np.asarray(p2p_pallas_slab(jnp.pad(z[1:7], cpad),
+                                     jnp.pad(q[1:7], cpad),
+                                     jnp.pad(mask[1:7], cpad),
+                                     sigma=0.05, block=(4, 4)))
+    m = np.asarray(mask[2:6])
+    np.testing.assert_allclose(np.where(m, out, 0), np.where(m, full[2:6], 0),
+                               rtol=2e-5, atol=1e-5)
+
+
 # ---------------------------------------------------------------------------
-# M2L kernel
+# M2L kernel (parity-folded, halo-resident)
 # ---------------------------------------------------------------------------
 
 
@@ -61,9 +87,53 @@ def test_m2l_kernel_sweep(level, p):
     n = 1 << level
     me = jnp.asarray(rng.normal(size=(n, n, p)) + 1j * rng.normal(size=(n, n, p)),
                      jnp.complex64)
-    out = m2l_pallas(me, level, p, block_boxes=16)
+    out = m2l_pallas(me, level, p, block=(4, 4))
     expect = ref.m2l_ref(me, level, p)
     assert _rel(out, expect) < 1e-5
+
+
+def test_m2l_kernel_block_size_sweep_equivalence():
+    """(BY, BX) sweep: every block shape produces the same LE grid."""
+    rng = np.random.default_rng(2)
+    level, p = 4, 17
+    n = 1 << level
+    me = jnp.asarray(rng.normal(size=(n, n, p)) + 1j * rng.normal(size=(n, n, p)),
+                     jnp.complex64)
+    outs = [np.asarray(m2l_pallas(me, level, p, block=b))
+            for b in ((1, 1), (2, 4), (4, 2), (8, 8), (16, 16))]
+    for o in outs[1:]:
+        np.testing.assert_allclose(o, outs[0], rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("row0,rows,halo", [(0, 4, 2), (4, 8, 2), (1, 5, 3),
+                                            (3, 7, 3), (5, 2, 3)])
+def test_m2l_slab_rectangular_row0_parity(row0, rows, halo):
+    """Rectangular slabs, including odd ``row0`` parity origins, match the
+    corresponding rows of the full-grid masked oracle — jnp and Pallas."""
+    rng = np.random.default_rng(row0 * 7 + rows)
+    level, p = 4, 7
+    n = 1 << level
+    me = jnp.asarray(rng.normal(size=(n, n, p)) + 1j * rng.normal(size=(n, n, p)),
+                     jnp.complex64)
+    full = np.asarray(ex.m2l_masked40(me, level, p))
+    pad = jnp.pad(me, ((3, 3), (0, 0), (0, 0)))
+    me_halo = pad[3 + row0 - halo:3 + row0 + rows + halo]
+    want = full[row0:row0 + rows]
+    got_jnp = np.asarray(ex.m2l_folded(me_halo, level, p, row0=row0, halo=halo))
+    got_pls = np.asarray(m2l_pallas_slab(me_halo, level, p, row0=row0,
+                                         halo=halo, block=(4, 4)))
+    assert _rel(got_jnp, want) < 1e-5
+    assert _rel(got_pls, want) < 1e-5
+
+
+def test_m2l_folded_reference_matches_masked40_p17():
+    """The folded jnp hot path == 40-offset masked oracle at p=17, 1e-5."""
+    rng = np.random.default_rng(17)
+    level, p = 5, 17
+    n = 1 << level
+    me = jnp.asarray(rng.normal(size=(n, n, p)) + 1j * rng.normal(size=(n, n, p)),
+                     jnp.complex64)
+    assert _rel(ex.m2l_reference(me, level, p), ex.m2l_masked40(me, level, p)) < 1e-5
 
 
 def test_fmm_end_to_end_with_kernels():
@@ -74,6 +144,17 @@ def test_fmm_end_to_end_with_kernels():
     tree, _ = build_tree(pos, gamma, level=3, sigma=0.02)
     w_ref = np.asarray(fmm_velocity(tree, p=12, use_kernels=False))
     w_k = np.asarray(fmm_velocity(tree, p=12, use_kernels=True))
+    assert _rel(w_k, w_ref) < 1e-5
+
+
+def test_fmm_end_to_end_with_kernels_p17():
+    """use_kernels=True vs reference at p=17 to 1e-5 relative error."""
+    rng = np.random.default_rng(4)
+    pos = rng.uniform(0.02, 0.98, size=(1500, 2))
+    gamma = rng.normal(size=1500)
+    tree, _ = build_tree(pos, gamma, level=4, sigma=0.02)
+    w_ref = np.asarray(fmm_velocity(tree, p=17, use_kernels=False))
+    w_k = np.asarray(fmm_velocity(tree, p=17, use_kernels=True))
     assert _rel(w_k, w_ref) < 1e-5
 
 

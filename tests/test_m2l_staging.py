@@ -1,0 +1,70 @@
+"""HLO-level guarantees of the parity-folded M2L path.
+
+The pre-folding kernel wrapper materialized a ``(nb, 40p)`` gathered ME
+tensor in HBM before the kernel ran.  These tests walk the optimized HLO
+(launch/hlo_analysis) to pin that the folded paths (a) contain no buffer
+with a 40p-wide dimension at all and (b) move strictly fewer HBM bytes
+than the masked-40 formulation.
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import expansions as ex
+from repro.core.quadtree import M2L_OFFSETS, M2L_VALIDITY
+from repro.kernels import ops as kops
+from repro.launch.hlo_analysis import analyze_hlo, shape_dim_pattern
+
+LEVEL, P = 4, 17
+N = 1 << LEVEL
+
+
+def _me():
+    rng = np.random.default_rng(0)
+    return jnp.asarray(rng.normal(size=(N, N, P)) + 1j * rng.normal(size=(N, N, P)),
+                       jnp.complex64)
+
+
+def _hlo(fn, me):
+    return jax.jit(fn).lower(me).compile().as_text()
+
+
+def _staging_pattern():
+    # any tensor shape with a 40p-sized dimension, e.g. f32[256,680]
+    return shape_dim_pattern(40 * P)
+
+
+def _old_gather_wrapper(me):
+    """The seed wrapper's staging stage (positive control for the regex):
+    gather 40 masked source slabs and flatten to (nb, 40p)."""
+    pad = jnp.pad(me, ((3, 3), (3, 3), (0, 0)))
+    slabs = []
+    for oi, (dx, dy) in enumerate(M2L_OFFSETS):
+        src = pad[3 + dy:3 + dy + N, 3 + dx:3 + dx + N, :]
+        m = jnp.asarray(ex.parity_mask_rect(N, N, M2L_VALIDITY[oi]),
+                        dtype=me.dtype)
+        slabs.append(src * m[..., None])
+    return jnp.stack(slabs, axis=2).reshape(N * N, 40 * P)
+
+
+def test_regex_detects_old_staging_tensor():
+    """Positive control: the detector fires on the seed-style gather."""
+    txt = _hlo(_old_gather_wrapper, _me())
+    assert _staging_pattern().search(txt) is not None
+
+
+def test_kernel_wrapper_has_no_40p_staging_tensor():
+    txt = _hlo(lambda g: kops.m2l_apply(g, LEVEL, P), _me())
+    assert _staging_pattern().search(txt) is None
+
+
+def test_folded_reference_has_no_40p_staging_tensor():
+    txt = _hlo(lambda g: ex.m2l_reference(g, LEVEL, P), _me())
+    assert _staging_pattern().search(txt) is None
+
+
+def test_folded_reference_moves_fewer_hbm_bytes():
+    me = _me()
+    b_old = analyze_hlo(_hlo(lambda g: ex.m2l_masked40(g, LEVEL, P), me))["bytes"]
+    b_new = analyze_hlo(_hlo(lambda g: ex.m2l_reference(g, LEVEL, P), me))["bytes"]
+    assert b_new < b_old, (b_new, b_old)

@@ -1,6 +1,10 @@
 """Property-based tests (hypothesis) for the system's invariants."""
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="optional dependency (pip install repro[hypothesis])")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import cost_model as cm
 from repro.core.partition import (Graph, build_subtree_graph,
