@@ -230,6 +230,59 @@ def bench_parallel_multidevice(rows, quick=False):
                      f"failed:{type(e).__name__}:{detail}"))
 
 
+def bench_plan_execution(rows, quick=False):
+    """Partition-driven execution plans on the Lamb-Oseen lattice (paper
+    Eq 20 next to measured step time): uniform strawman vs a-priori model
+    plan vs dynamic re-planning, on forced host devices (subprocess: jax
+    locks the device count at first init)."""
+    ndev = 4
+    m_side, p, steps = (120, 8, 2) if quick else (160, 12, 4)
+    body = textwrap.dedent(f"""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count={ndev}"
+        import time
+        import numpy as np
+        import jax
+        from jax.sharding import Mesh
+        from repro.core.stepper import VortexStepper
+        from repro.core.vortex import lamb_oseen_particles
+
+        pos, gamma, sigma = lamb_oseen_particles({m_side})
+        mesh = Mesh(np.array(jax.devices()[:{ndev}]), ("data",))
+        for mode in ("uniform", "model", "dynamic"):
+            st = VortexStepper(pos, gamma, sigma, p={p}, dt=0.004, mesh=mesh,
+                               plan_method="uniform" if mode == "uniform" else "model",
+                               dynamic=(mode == "dynamic"), replan_every=2)
+            st.step()                      # compile + warm
+            t0 = time.perf_counter()
+            for _ in range({steps}):
+                st.step()
+            us = (time.perf_counter() - t0) / {steps} * 1e6
+            s = st.stats()
+            print(f"ROW plan_{{mode}} {{us:.1f}} "
+                  f"LB={{s['load_balance']:.3f}}_min={{s['min_load']:.3g}}"
+                  f"_max={{s['max_load']:.3g}}_rows={{'/'.join(map(str, st.plan.rows))}}")
+    """)
+    env = dict(os.environ)
+    src_dir = os.path.abspath(os.path.join(os.path.dirname(__file__), "..", "src"))
+    old_pp = env.get("PYTHONPATH", "")
+    env["PYTHONPATH"] = src_dir + (os.pathsep + old_pp if old_pp else "")
+    try:
+        proc = subprocess.run([sys.executable, "-c", body], capture_output=True,
+                              text=True, env=env, timeout=900)
+        got = [l.split(maxsplit=3) for l in proc.stdout.splitlines()
+               if l.startswith("ROW")]
+        if proc.returncode != 0 or len(got) != 3:
+            raise RuntimeError(proc.stderr[-300:])
+        for _, name, us, derived in got:
+            rows.append((name, float(us), derived))
+    except Exception as e:  # report, never abort the whole harness
+        detail = " ".join(str(e).split())[-160:].replace(",", ";")
+        for mode in ("uniform", "model", "dynamic"):
+            rows.append((f"plan_{mode}", 0.0,
+                         f"failed:{type(e).__name__}:{detail}"))
+
+
 def bench_moe_placement(rows, quick=False):
     """The paper's technique transplanted: expert-placement load balance."""
     from repro.models.moe import expert_placement
@@ -256,7 +309,8 @@ def main() -> None:
     rows: list[tuple[str, float, str]] = []
     for bench in (bench_fig6_stage_timings, bench_fig7_9_scaling,
                   bench_table12_memory, bench_kernels, bench_m2l_staging_bytes,
-                  bench_parallel_multidevice, bench_moe_placement):
+                  bench_parallel_multidevice, bench_plan_execution,
+                  bench_moe_placement):
         bench(rows, quick=quick)
     print("name,us_per_call,derived")
     for name, us, derived in rows:

@@ -1,29 +1,27 @@
 """Vortex-method simulation driver (the paper's client application, §3).
 
 Advects Lamb-Oseen vortex particles with their FMM-computed Biot-Savart
-velocity (inviscid step, RK2).  The vorticity field is a steady solution of
-the Euler equations up to core diffusion, so particles should rotate about
-the vortex center on (nearly) circular orbits — we check radius drift.
+velocity (inviscid step, RK2) through :class:`repro.core.stepper.VortexStepper`:
+each step is ONE jitted device program (FMM -> half-kick -> device rebin ->
+FMM -> full kick -> rebin; no host tree rebuild), executed under the
+partition-driven :class:`SlabPlan` of choice:
+
+  --plan uniform   equal-count row bands (the DPMTA-style strawman)
+  --plan model     a-priori cost-model bands (paper §4-§5, static)
+  --plan dynamic   model bands re-planned from the drifted particle
+                   distribution every --replan-every steps (paper's title)
+
+The vorticity field is a steady Euler solution up to core diffusion, so
+particles should orbit the vortex center on (nearly) circular paths — the
+initial radius is carried through every rebinning as a step payload and
+the max radius drift is the correctness invariant.
 
 Run:  PYTHONPATH=src python examples/vortex_sim.py [--steps 10] [--n-side 80]
+          [--plan dynamic] [--devices 4]
 """
 import argparse
+import os
 import sys
-
-import numpy as np
-
-sys.path.insert(0, "src")
-
-from repro.core.fmm import fmm_velocity
-from repro.core.quadtree import build_tree, choose_level, gather_particle_values
-from repro.core.vortex import lamb_oseen_particles
-
-
-def velocity(pos, gamma, sigma, level, p):
-    tree, index = build_tree(pos, gamma, level, sigma)
-    w = np.asarray(fmm_velocity(tree, p))
-    w_at = gather_particle_values(w, index)
-    return np.stack([np.real(w_at), -np.imag(w_at)], axis=1)
 
 
 def main():
@@ -32,24 +30,62 @@ def main():
     ap.add_argument("--dt", type=float, default=0.005)
     ap.add_argument("--n-side", type=int, default=80)
     ap.add_argument("--p", type=int, default=12)
+    ap.add_argument("--plan", choices=("uniform", "model", "dynamic"),
+                    default="model")
+    ap.add_argument("--devices", type=int, default=1,
+                    help="shard over N devices (forces host devices on CPU)")
+    ap.add_argument("--replan-every", type=int, default=4)
+    ap.add_argument("--use-kernels", action="store_true")
     args = ap.parse_args()
 
+    if args.devices > 1 and "xla_force_host_platform_device_count" not in \
+            os.environ.get("XLA_FLAGS", ""):
+        os.environ["XLA_FLAGS"] = (
+            os.environ.get("XLA_FLAGS", "") +
+            f" --xla_force_host_platform_device_count={args.devices}")
+
+    sys.path.insert(0, "src")
+    import numpy as np
+    import jax
+    from jax.sharding import Mesh
+
+    from repro.core.stepper import VortexStepper
+    from repro.core.vortex import lamb_oseen_particles
+
     pos, gamma, sigma = lamb_oseen_particles(args.n_side)
-    level = choose_level(len(pos), target_per_box=8)
     r0 = np.hypot(pos[:, 0] - 0.5, pos[:, 1] - 0.5)
 
+    mesh = None
+    if args.devices > 1:
+        if len(jax.devices()) < args.devices:
+            sys.exit(f"need {args.devices} devices, have {len(jax.devices())}")
+        mesh = Mesh(np.array(jax.devices()[:args.devices]), ("data",))
+
+    stepper = VortexStepper(
+        pos, gamma, sigma, p=args.p, dt=args.dt, mesh=mesh,
+        use_kernels=args.use_kernels,
+        plan_method="uniform" if args.plan == "uniform" else "model",
+        dynamic=(args.plan == "dynamic"),
+        replan_every=args.replan_every,
+        payload={"r0": r0 + 0j})
+    s0 = stepper.stats()
+    print(f"plan={args.plan} devices={stepper.nparts} "
+          f"level={stepper.params.level} bands={stepper.plan.describe()} "
+          f"LB(min/max)={s0['load_balance']:.3f}")
+
+    drift = 0.0
     for step in range(args.steps):
-        # RK2 (midpoint) advection — the standard vortex-method time step
-        u1 = velocity(pos, gamma, sigma, level, args.p)
-        mid = pos + 0.5 * args.dt * u1
-        u2 = velocity(mid, gamma, sigma, level, args.p)
-        pos = pos + args.dt * u2
+        rec = stepper.step()
         if step % 2 == 1 or step == args.steps - 1:
-            r = np.hypot(pos[:, 0] - 0.5, pos[:, 1] - 0.5)
-            sel = r0 > 0.02
-            drift = np.abs(r[sel] - r0[sel]).max()
-            print(f"step {step + 1:3d}: max |r - r0| = {drift:.2e} "
-                  f"(circular-orbit invariant)")
+            m = np.asarray(stepper.tree.mask).reshape(-1)
+            z = np.asarray(stepper.tree.z).reshape(-1)[m]
+            rr0 = np.asarray(stepper.payload["r0"]).reshape(-1)[m].real
+            r = np.hypot(z.real - 0.5, z.imag - 0.5)
+            sel = rr0 > 0.02
+            drift = np.abs(r[sel] - rr0[sel]).max()
+            flags = ("R" if rec.replanned else "") + ("L" if rec.releveled else "")
+            print(f"step {rec.step:3d}: max |r - r0| = {drift:.2e}  "
+                  f"LB={rec.load_balance:.3f}  {rec.seconds * 1e3:7.1f} ms {flags}")
     assert drift < 5e-3, drift
     print("OK")
 

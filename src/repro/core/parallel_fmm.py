@@ -1,26 +1,35 @@
 """Distributed FMM under ``shard_map`` (paper §4, TPU-native form).
 
-Execution layout ("mode A", DESIGN.md §3): the leaf grid is sharded into
-row slabs of subtrees along y.  Levels ``l >= l_cut`` are sharded the same
-way; levels below the cut form the paper's *root tree* and are replicated
-via one ``all_gather`` (the SPMD equivalent of the paper's root-tree rank +
-broadcast, with no serial bottleneck).
+Execution layout ("mode A", DESIGN.md §3/§7): the leaf grid is sharded into
+row-slab *bands* along y, described by a static :class:`~repro.core.plan.SlabPlan`
+— contiguous, parity-even bands of unequal height, padded to ``rows_max``
+so shapes stay static.  The plan is produced by the cost-model partitioner
+(core/plan.py over core/partition.py), which makes the paper's load
+balancer actually schedule the sharded execution instead of assuming
+``n // P`` rows per device.  Levels deep enough that band boundaries stay
+aligned are sharded the same way; levels below the cut form the paper's
+*root tree* and are replicated via one ``all_gather`` (the SPMD equivalent
+of the paper's root-tree rank + broadcast, with no serial bottleneck).
 
 Communication structure (maps 1:1 onto the paper's Fig 3):
   * M2M / L2L  — subtree <-> root tree only: the single all_gather at the
-    cut level (paper: "no communication between subtrees" for these ops);
-  * M2L        — lateral/diagonal neighbor subtrees: ±2-row halo exchange
-    per sharded level via ``lax.ppermute`` (parity folding shrinks the
-    paper's ±3 child-box halo to ±1 parent row — DESIGN.md §4);
+    cut level, reassembled across unequal bands by a static owner map
+    (paper: "no communication between subtrees" for these ops);
+  * M2L        — lateral/diagonal neighbor bands: ±2-row halo exchange per
+    sharded level via ``lax.ppermute``, sliced at each band's *valid* edge
+    (parity folding shrinks the paper's ±3 child-box halo to ±1 parent
+    row — DESIGN.md §4);
   * P2P        — neighbor particles: ±1-row halo of (z, q, mask).
 
 M2L and P2P themselves are the SAME slab implementations the serial driver
 uses (core/fmm.py: ``m2l_slab_fn`` / ``p2p_slab_fn``); this module only
-adds the halo exchanges and the root-tree replication around them.
+adds the halo exchanges, the band padding, and the root-tree replication
+around them.  Padded rows carry ``mask=False`` and zero expansions and are
+masked out of the result.
 
 The cost model (core/cost_model.py) predicts exactly these volumes; the
-partitioner chooses the slab decomposition and drives the modeled
-reproduction of the paper's scaling experiments (benchmarks/fmm_scaling.py).
+partitioner chooses the band decomposition and ``core/stepper.py`` closes
+the dynamic feedback loop.
 """
 from __future__ import annotations
 
@@ -34,6 +43,7 @@ from jax.sharding import Mesh, PartitionSpec as P
 
 from . import expansions as ex
 from . import fmm
+from .plan import SlabPlan, uniform_plan
 from .quadtree import Tree, box_centers, box_size
 
 # jax >= 0.6 exposes shard_map at the top level; older versions under
@@ -49,56 +59,93 @@ _CHECK_KW = next((k for k in ("check_rep", "check_vma")
                   if k in _inspect.signature(_shard_map).parameters), None)
 
 
-def _halo_exchange_rows(x: jnp.ndarray, width: int, axis_name: str,
-                        axis_size: int) -> jnp.ndarray:
-    """Concatenate ±``width`` ghost rows from slab neighbors along axis 0.
+def _band_halo(x: jnp.ndarray, width: int, rows_valid, axis_name: str,
+               axis_size: int) -> jnp.ndarray:
+    """Attach ±``width`` ghost rows at the *valid* edges of a padded band.
 
-    Edge devices receive zeros (consistent with the serial zero padding of
-    the domain boundary).  Two ``ppermute`` calls: one up, one down.
-    (``axis_size`` is passed statically: jax 0.4 has no ``lax.axis_size``.)
+    ``x`` is a (rows_max, ...) band whose rows ``[0, rows_valid)`` are
+    valid (padding rows are zero).  Returns (rows_max + 2*width, ...): my
+    band at offset ``width``, the upper neighbor's bottom ``width`` valid
+    rows at ``[0, width)``, and the lower neighbor's top ``width`` rows
+    placed *at* ``width + rows_valid`` — i.e. immediately after my valid
+    rows, where the slab implementations expect adjacent data.  Edge
+    devices receive zeros (consistent with the serial zero padding of the
+    domain boundary).  Two ``ppermute`` calls: one up, one down.
     """
     P_ = axis_size
+    shape = (width,) + x.shape[1:]
     if P_ == 1:
-        zeros = jnp.zeros((width,) + x.shape[1:], x.dtype)
-        return jnp.concatenate([zeros, x, zeros], axis=0)
-    top_rows = x[:width]      # my top rows -> neighbor above's bottom halo
-    bot_rows = x[-width:]     # my bottom rows -> neighbor below's top halo
-    # send bottom rows to d+1 (they become d+1's top halo)
-    from_above = jax.lax.ppermute(bot_rows, axis_name,
-                                  [(d, d + 1) for d in range(P_ - 1)])
-    # send top rows to d-1 (they become d-1's bottom halo)
-    from_below = jax.lax.ppermute(top_rows, axis_name,
-                                  [(d + 1, d) for d in range(P_ - 1)])
-    return jnp.concatenate([from_above, x, from_below], axis=0)
+        recv_top = recv_bot = jnp.zeros(shape, x.dtype)
+    else:
+        bot_valid = jax.lax.dynamic_slice_in_dim(x, rows_valid - width, width, 0)
+        top_valid = x[:width]
+        # my bottom rows -> device below's top halo
+        recv_top = jax.lax.ppermute(bot_valid, axis_name,
+                                    [(d, d + 1) for d in range(P_ - 1)])
+        # my top rows -> device above's bottom halo
+        recv_bot = jax.lax.ppermute(top_valid, axis_name,
+                                    [(d + 1, d) for d in range(P_ - 1)])
+    buf = jnp.zeros((x.shape[0] + 2 * width,) + x.shape[1:], x.dtype)
+    buf = jax.lax.dynamic_update_slice_in_dim(buf, x, width, 0)
+    buf = jax.lax.dynamic_update_slice_in_dim(buf, recv_top, 0, 0)
+    buf = jax.lax.dynamic_update_slice_in_dim(buf, recv_bot, width + rows_valid, 0)
+    return buf
 
 
-def _parallel_fmm_body(z, q, mask, *, level: int, p: int, sigma,
-                       axis_name: str, axis_size: int, use_kernels: bool):
-    """Runs on each device over its (rows, n, s) slab of the leaf grid."""
-    L = level
-    n = 1 << L
+def _sharded_depth(plan: SlabPlan, min_rows: int = 4) -> int:
+    """How many levels (from the leaves up) the plan's bands can shard.
+
+    Level ``L - s`` is shardable when every band boundary stays even after
+    ``s`` halvings (halo-2 slab contract needs even-aligned, even-length
+    bands) and the smallest band keeps ``min_rows`` rows at the coarsest
+    sharded level.  Parity-even plans always support depth 1 when L >= 3.
+    """
+    if plan.level < 3:
+        return 0
+    m = 1
+    align = plan.alignment()
+    while (m + 1 <= align and plan.level - (m + 1) >= 2
+           and (min(plan.rows) >> m) >= min_rows):
+        m += 1
+    return m
+
+
+def _parallel_fmm_body(z, q, mask, *, plan: SlabPlan, l_cut: int, p: int,
+                       sigma, axis_name: str, axis_size: int,
+                       use_kernels: bool):
+    """Runs on each device over its padded (rows_max, n, s) band."""
+    L = plan.level
     P_ = axis_size
-    a = int(np.log2(P_)) if P_ > 1 else 0
-    # sharded levels: rows/device >= 4 (single-hop halo); replicated below.
-    l_cut = min(L, max(2, a + 2))
+    rows_max = plan.rows_max
     dtype = z.dtype
 
     m2l_slab = fmm.m2l_slab_fn(p, use_kernels)
     m2l_grid = fmm.m2l_grid_fn(p, use_kernels)
     p2p_slab = fmm.p2p_slab_fn(use_kernels)
 
-    my_row0 = jax.lax.axis_index(axis_name) * (n // P_)
+    # static per-device band records, looked up by device index
+    di = jax.lax.axis_index(axis_name)
+    my_row0 = jnp.asarray(np.asarray(plan.row0, np.int32))[di]
+    my_rows = jnp.asarray(np.asarray(plan.rows, np.int32))[di]
+
+    # centers padded below so the dynamic slice never clamps short bands
     centers = jnp.asarray(box_centers(L), dtype=dtype)
-    my_centers = jax.lax.dynamic_slice_in_dim(centers, my_row0, n // P_, 0)
+    centers = jnp.pad(centers, ((0, rows_max), (0, 0)))
+    my_centers = jax.lax.dynamic_slice_in_dim(centers, my_row0, rows_max, 0)
 
     # ---- upward sweep -----------------------------------------------------
+    # Padding rows have mask=False everywhere, so their MEs are exactly zero
+    # and M2M keeps them zero at every coarser band level.
     me = {L: ex.p2m(z, q, mask, my_centers, box_size(L), p)}
-    l = L
-    while l > l_cut:
-        me[l - 1] = ex.m2m(me[l], p)
-        l -= 1
-    # gather the cut level -> replicated root tree (paper's M2M to root)
-    me_cut_full = jax.lax.all_gather(me[l_cut], axis_name, axis=0, tiled=True)
+    for lv in range(L, l_cut, -1):
+        me[lv - 1] = ex.m2m(me[lv], p)
+
+    # gather the cut level -> replicated root tree (paper's M2M to root);
+    # unequal bands are reassembled by the plan's static owner/local maps.
+    cut_shift = L - l_cut
+    gathered = jax.lax.all_gather(me[l_cut], axis_name, axis=0, tiled=False)
+    owner, local = plan.band_row_maps(cut_shift)
+    me_cut_full = gathered[jnp.asarray(owner), jnp.asarray(local)]
     me_rep = {l_cut: me_cut_full}
     for lv in range(l_cut, 0, -1):
         me_rep[lv - 1] = ex.m2m(me_rep[lv], p)
@@ -110,44 +157,53 @@ def _parallel_fmm_body(z, q, mask, *, level: int, p: int, sigma,
         le_rep[lv] = m2l_grid(me_rep[lv], lv)
         if lv > 2:
             le_rep[lv] = le_rep[lv] + ex.l2l(le_rep[lv - 1], p)
-    # sharded levels l_cut+1 .. L: exchange ±M2L_HALO ghost rows, then the
-    # identical slab implementation with this slab's global parity anchor.
-    # rows/device is even at every sharded level, so row0 stays even and the
-    # 2-row halo suffices (expansions.m2l_slab_geometry enforces this).
-    le_prev = None  # my slab's LE at previous (coarser) level
-    if l_cut >= 2 and L > l_cut:
-        # slice my slab rows out of the replicated cut-level LE
-        le_prev = jax.lax.dynamic_slice_in_dim(
-            le_rep[l_cut], jax.lax.axis_index(axis_name) * ((1 << l_cut) // P_),
-            (1 << l_cut) // P_, 0)
+
+    def slice_band(grid, shift):
+        """My (rows_max >> shift)-row band out of a replicated level grid."""
+        rmax = rows_max >> shift
+        padded = jnp.pad(grid, ((0, rmax),) + ((0, 0),) * (grid.ndim - 1))
+        return jax.lax.dynamic_slice_in_dim(padded, my_row0 >> shift, rmax, 0)
+
+    # sharded levels l_cut+1 .. L: exchange ±M2L_HALO ghost rows at the
+    # valid band edges, then the identical slab implementation.  Bands are
+    # even-aligned at every sharded level (plan parity + _sharded_depth),
+    # so row0=0 anchors the correct parity and the 2-row halo suffices.
+    le_prev = None  # my band's LE at the previous (coarser) level
+    if L > l_cut:
+        le_prev = slice_band(le_rep[l_cut], cut_shift)
     for lv in range(l_cut + 1, L + 1):
-        me_halo = _halo_exchange_rows(me[lv], ex.M2L_HALO, axis_name, P_)
-        le_lv = m2l_slab(me_halo, lv)
-        if le_prev is not None:
-            le_lv = le_lv + ex.l2l(le_prev, p)
+        rv = my_rows >> (L - lv)
+        me_buf = _band_halo(me[lv], ex.M2L_HALO, rv, axis_name, P_)
+        le_lv = m2l_slab(me_buf, lv)
+        le_lv = le_lv + ex.l2l(le_prev, p)
         le_prev = le_lv
-    le_leaf = le_prev if L > l_cut else jax.lax.dynamic_slice_in_dim(
-        le_rep[L], jax.lax.axis_index(axis_name) * (n // P_), n // P_, 0)
+    le_leaf = le_prev if L > l_cut else slice_band(le_rep[L], 0)
 
     # ---- evaluation -------------------------------------------------------
     far = ex.l2p(le_leaf, z, my_centers, box_size(L), p)
     cpad = ((0, 0), (1, 1), (0, 0))
-    near = p2p_slab(jnp.pad(_halo_exchange_rows(z, 1, axis_name, P_), cpad),
-                    jnp.pad(_halo_exchange_rows(q, 1, axis_name, P_), cpad),
-                    jnp.pad(_halo_exchange_rows(mask, 1, axis_name, P_), cpad),
+    near = p2p_slab(jnp.pad(_band_halo(z, 1, my_rows, axis_name, P_), cpad),
+                    jnp.pad(_band_halo(q, 1, my_rows, axis_name, P_), cpad),
+                    jnp.pad(_band_halo(mask, 1, my_rows, axis_name, P_), cpad),
                     sigma)
+    # padded rows (mask=False) are dropped here
     return jnp.where(mask, far + near, 0.0)
 
 
 @functools.partial(jax.jit, static_argnames=("p", "mesh", "mesh_axis",
-                                             "use_kernels"))
+                                             "use_kernels", "plan"))
 def parallel_fmm_velocity(tree: Tree, p: int, mesh: Optional[Mesh] = None,
                           mesh_axis: str = "data",
-                          use_kernels: bool = False) -> jnp.ndarray:
-    """Distributed FMM evaluation. Shards the leaf grid over ``mesh_axis``.
+                          use_kernels: bool = False,
+                          plan: Optional[SlabPlan] = None) -> jnp.ndarray:
+    """Distributed FMM evaluation driven by a :class:`SlabPlan`.
 
-    Falls back to a 1-device mesh when ``mesh`` is None.  The number of
-    devices along the axis must divide 2**level with an even quotient.
+    ``plan`` maps devices to contiguous parity-even leaf-row bands (the
+    cost-model partitioner's output); ``plan=None`` falls back to the
+    uniform equal-count strawman.  The tree is resharded into the plan's
+    padded band layout, evaluated under ``shard_map``, and scattered back
+    to standard layout, so the result is independent of the plan to f32
+    roundoff.  Falls back to a 1-device mesh when ``mesh`` is None.
     ``use_kernels=True`` routes M2L/P2P through the same Pallas kernels the
     serial driver uses (interpret mode off-TPU).
     """
@@ -157,10 +213,30 @@ def parallel_fmm_velocity(tree: Tree, p: int, mesh: Optional[Mesh] = None,
     n = tree.nside
     if tree.level < 2:
         raise ValueError("parallel FMM requires tree level >= 2")
-    if n % P_ or (n // P_) % 2:
-        raise ValueError(f"grid side {n} must split into even slabs over {P_} devices")
+    if plan is None:
+        if n % P_ or (n // P_) % 2:
+            raise ValueError(
+                f"grid side {n} must split into even slabs over {P_} devices")
+        plan = uniform_plan(tree.level, P_)
+    if plan.level != tree.level:
+        raise ValueError(f"plan level {plan.level} != tree level {tree.level}")
+    if plan.nparts != P_:
+        raise ValueError(f"plan has {plan.nparts} bands for {P_} devices")
 
-    body = functools.partial(_parallel_fmm_body, level=tree.level, p=p,
+    rows_max = plan.rows_max
+    identity = plan.is_uniform and P_ * rows_max == n
+    if identity:
+        z_sh, q_sh, m_sh = tree.z, tree.q, tree.mask
+    else:
+        idx, valid = plan.gather_index()
+        idx = jnp.asarray(idx)
+        vrow = jnp.asarray(valid)[:, None, None]
+        z_sh = jnp.where(vrow, tree.z[idx], 0)
+        q_sh = jnp.where(vrow, tree.q[idx], 0)
+        m_sh = tree.mask[idx] & vrow
+
+    l_cut = plan.level - _sharded_depth(plan)
+    body = functools.partial(_parallel_fmm_body, plan=plan, l_cut=l_cut, p=p,
                              sigma=tree.sigma, axis_name=mesh_axis,
                              axis_size=P_, use_kernels=use_kernels)
     spec = P(mesh_axis, None, None)
@@ -169,4 +245,5 @@ def parallel_fmm_velocity(tree: Tree, p: int, mesh: Optional[Mesh] = None,
     kwargs = {_CHECK_KW: False} if (use_kernels and _CHECK_KW) else {}
     fn = _shard_map(body, mesh=mesh, in_specs=(spec, spec, spec),
                     out_specs=spec, **kwargs)
-    return fn(tree.z, tree.q, tree.mask)
+    w = fn(z_sh, q_sh, m_sh)
+    return w if identity else w[jnp.asarray(plan.scatter_index())]

@@ -256,21 +256,32 @@ def partition_stats(graph: Graph, assign: np.ndarray, nparts: int) -> dict:
     }
 
 
+def measured_rates(loads: np.ndarray, measured_times: np.ndarray) -> np.ndarray:
+    """Per-part slowdown rate (seconds per modeled work unit).
+
+    If part p ran ``measured_times[p]`` seconds for modeled load W_p, its
+    rate is t_p / W_p; empty or unmeasured parts inherit the mean positive
+    rate.  This is the feedback signal both ``rebalance`` (2-D subtree
+    weights) and ``plan.replan`` (1-D row-band weights) apply.
+    """
+    loads = np.asarray(loads, dtype=np.float64)
+    t = np.asarray(measured_times, dtype=np.float64)
+    rate = np.where(loads > 0, t / np.maximum(loads, 1e-30), 0.0)
+    return np.where(rate > 0, rate,
+                    rate[rate > 0].mean() if (rate > 0).any() else 1.0)
+
+
 def rebalance(graph: Graph, assign: np.ndarray, nparts: int,
               measured_times: np.ndarray,
               imbalance_tol: float = 0.05) -> np.ndarray:
     """Dynamic feedback: fold measured per-part times into the weights.
 
-    If part p ran ``measured_times[p]`` seconds for modeled load W_p, its
-    effective speed is W_p / t_p; every vertex in p gets its weight scaled
-    by the part's slowdown before re-partitioning.  This reproduces the
-    DPMTA-style measured rebalancing the paper discusses (§4) but keeps it
+    Every vertex in part p gets its weight scaled by p's ``measured_rates``
+    slowdown before re-partitioning.  This reproduces the DPMTA-style
+    measured rebalancing the paper discusses (§4) but keeps it
     model-driven, and doubles as straggler mitigation in the trainer.
     """
-    loads = graph.part_loads(assign, nparts)
-    t = np.asarray(measured_times, dtype=np.float64)
-    rate = np.where(loads > 0, t / np.maximum(loads, 1e-30), 0.0)
-    rate = np.where(rate > 0, rate, rate[rate > 0].mean() if (rate > 0).any() else 1.0)
+    rate = measured_rates(graph.part_loads(assign, nparts), measured_times)
     scaled = Graph(vertex_weight=graph.vertex_weight * rate[assign],
                    adjacency=graph.adjacency)
     return partition(scaled, nparts, method="model", imbalance_tol=imbalance_tol)

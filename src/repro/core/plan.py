@@ -1,0 +1,338 @@
+"""Execution plans: the cost model's partition mapped onto slab bands.
+
+The partitioner (core/partition.py) reproduces the paper's §4 pipeline —
+weighted subtree graph, SFC seed, FM refinement, measured-time rebalance —
+but the sharded driver executes *row slabs* of the dense leaf grid
+(DESIGN.md §3, "mode A").  A :class:`SlabPlan` is the bridge: the modeled
+per-row work (the 1-D projection of Eqs 13-15) is collapsed into contiguous,
+parity-even leaf-row bands of *unequal* height, one per device, padded to a
+common ``rows_max`` so shapes stay static under ``shard_map``.
+
+The plan is a **static** (hashable) artifact: ``parallel_fmm_velocity`` jits
+per plan, and the per-device ``row0`` / ``rows_valid`` records become
+constant lookup tables indexed by ``axis_index`` inside the shard_map body.
+
+Eq (20)'s min/max metric on modeled band loads (``plan_stats``) is the
+quantity the model plan must win on versus the uniform strawman; the
+benchmark harness and tests/test_partition.py pin this on the paper's own
+Lamb-Oseen lattice.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from . import cost_model as cm
+from .cost_model import ModelParams
+from . import partition as pt
+
+
+@dataclasses.dataclass(frozen=True)
+class SlabPlan:
+    """Contiguous, parity-even leaf-row bands, one per device.
+
+    ``row0[d]`` is the global leaf row where device ``d``'s band starts and
+    ``rows[d]`` its valid height; bands tile ``[0, 2**level)`` exactly.
+    Every ``row0``/``rows`` is even so each band is aligned to parent rows
+    (the folded M2L's 2-row halo contract, DESIGN.md §4) and M2M below the
+    band never crosses a device boundary.  Execution pads every band to
+    ``rows_max`` rows; the padding carries ``mask=False`` slots and zero
+    expansions and is masked out of P2P/L2P.
+    """
+
+    level: int
+    row0: tuple[int, ...]
+    rows: tuple[int, ...]
+
+    def __post_init__(self):
+        n = 1 << self.level
+        if len(self.row0) != len(self.rows) or not self.rows:
+            raise ValueError("row0 and rows must be equal-length, non-empty")
+        expect = 0
+        for d, (r0, r) in enumerate(zip(self.row0, self.rows)):
+            if r0 != expect:
+                raise ValueError(f"band {d} starts at {r0}, expected {expect}"
+                                 " (bands must be contiguous)")
+            if r <= 0 or r % 2 or r0 % 2:
+                raise ValueError(f"band {d} (row0={r0}, rows={r}) must be a"
+                                 " positive parity-even band")
+            expect = r0 + r
+        if expect != n:
+            raise ValueError(f"bands cover {expect} rows, grid has {n}")
+
+    # -- static geometry ----------------------------------------------------
+
+    @property
+    def nparts(self) -> int:
+        return len(self.rows)
+
+    @property
+    def nside(self) -> int:
+        return 1 << self.level
+
+    @property
+    def rows_max(self) -> int:
+        return max(self.rows)
+
+    @property
+    def is_uniform(self) -> bool:
+        return len(set(self.rows)) == 1
+
+    def alignment(self) -> int:
+        """Largest ``m`` with every band boundary divisible by ``2**m``.
+
+        The sharded driver may shard levels ``L-m+1 .. L`` (each needs the
+        band to stay even-aligned after ``L-lv`` halvings)."""
+        m = 1
+        while all(r0 % (1 << (m + 1)) == 0 for r0 in self.row0) and \
+                all(r % (1 << (m + 1)) == 0 for r in self.rows):
+            m += 1
+        return m
+
+    # -- host-side index maps (all static numpy; plan is jit-static) --------
+
+    def owner_of_row(self) -> np.ndarray:
+        """(n,) device owning each global leaf row."""
+        return np.repeat(np.arange(self.nparts), np.asarray(self.rows))
+
+    def gather_index(self) -> tuple[np.ndarray, np.ndarray]:
+        """Standard layout -> plan layout: ``(P*rows_max,)`` source row per
+        padded slot plus a validity mask (False on padding rows)."""
+        P, rmax = self.nparts, self.rows_max
+        idx = np.zeros(P * rmax, dtype=np.int64)
+        valid = np.zeros(P * rmax, dtype=bool)
+        for d, (r0, r) in enumerate(zip(self.row0, self.rows)):
+            idx[d * rmax:d * rmax + r] = r0 + np.arange(r)
+            valid[d * rmax:d * rmax + r] = True
+        return idx, valid
+
+    def scatter_index(self) -> np.ndarray:
+        """Plan layout -> standard layout: ``(n,)`` padded-slot per row."""
+        owner = self.owner_of_row()
+        r0 = np.asarray(self.row0)[owner]
+        return owner * self.rows_max + (np.arange(self.nside) - r0)
+
+    def band_row_maps(self, shift: int) -> tuple[np.ndarray, np.ndarray]:
+        """Owner and band-local index of every grid row at level ``L-shift``.
+
+        Requires all band boundaries divisible by ``2**shift`` (see
+        ``alignment``); used to reassemble unequal bands after the
+        cut-level ``all_gather``."""
+        n_lv = self.nside >> shift
+        owner = self.owner_of_row()[np.arange(n_lv) << shift]
+        local = np.arange(n_lv) - (np.asarray(self.row0)[owner] >> shift)
+        return owner, local
+
+    def describe(self) -> str:
+        return " ".join(f"[{r0}:{r0 + r})" for r0, r in zip(self.row0, self.rows))
+
+
+# ---------------------------------------------------------------------------
+# Plan construction from the cost model
+# ---------------------------------------------------------------------------
+
+
+def uniform_plan(level: int, nparts: int) -> SlabPlan:
+    """The strawman: equal-count parity-even bands (DPMTA-style split)."""
+    R = (1 << level) // 2                      # parent rows
+    if nparts > R:
+        raise ValueError(f"{nparts} parts need >= {2 * nparts} leaf rows"
+                         f" (level {level} has {2 * R})")
+    base, extra = divmod(R, nparts)
+    rows = tuple(2 * (base + (1 if d < extra else 0)) for d in range(nparts))
+    row0 = tuple(int(x) for x in np.concatenate([[0], np.cumsum(rows)[:-1]]))
+    return SlabPlan(level=level, row0=row0, rows=rows)
+
+
+def row_loads(counts: np.ndarray, params: ModelParams) -> np.ndarray:
+    """Modeled work per *parent* leaf-row pair — Eqs (13)-(15) projected 1-D.
+
+    Leaf work uses the exact per-box Eq (14) (with the true 3x3 neighbor
+    P2P product); non-leaf work at levels ``cut..L-1`` is spread uniformly
+    over the leaf rows each coarse row covers, matching ``work_subtree``'s
+    census so band loads and subtree-graph loads share units.
+    """
+    n = counts.shape[0]
+    L = params.level
+    nb = cm.neighbor_count_sum(counts)
+    per_row = cm.work_leaf(counts, params.p, neighbor_counts=nb).sum(axis=1)
+    for l in range(params.cut, L):
+        # 2^l boxes per level-l grid row, spread over 2^(L-l) leaf rows
+        per_row = per_row + (2 ** l) * cm.work_nonleaf(params.p) / (2 ** (L - l))
+    return per_row.reshape(n // 2, 2).sum(axis=1)
+
+
+def _bounds_loads(w: np.ndarray, bounds: np.ndarray) -> np.ndarray:
+    pre = np.concatenate([[0.0], np.cumsum(w)])
+    return pre[bounds[1:]] - pre[bounds[:-1]]
+
+
+def _quantile_bounds(w: np.ndarray, nparts: int) -> np.ndarray:
+    """Weight-quantile seed split (the 1-D analogue of the weighted-SFC
+    seed in core/partition.py); every part gets at least one row."""
+    assign = pt.partition_weighted_sfc(w, nparts)
+    return np.concatenate([[0], np.cumsum(np.bincount(assign,
+                                                      minlength=nparts))])
+
+
+def _balance_key(loads: np.ndarray) -> tuple[float, float]:
+    """Lexicographic objective: maximize Eq-20 min/max, then minimize the
+    bottleneck.  Smaller is better."""
+    mx = float(loads.max())
+    ratio = float(loads.min()) / mx if mx > 0 else 1.0
+    return (-ratio, mx)
+
+
+def _refine_bounds(w: np.ndarray, bounds: np.ndarray, nparts: int) -> np.ndarray:
+    """Move boundaries one row at a time while ``_balance_key`` improves
+    (the 1-D analogue of partition.refine_fm's boundary passes)."""
+    bounds = bounds.copy()
+    loads = _bounds_loads(w, bounds)
+    for _ in range(4 * len(w)):
+        best_move, best_key = None, _balance_key(loads)
+        for i in range(1, nparts):
+            for step in (-1, 1):
+                if not bounds[i - 1] < bounds[i] + step < bounds[i + 1]:
+                    continue
+                trial = loads.copy()
+                dw = w[bounds[i] - 1] if step < 0 else w[bounds[i]]
+                trial[i - 1] += step * dw
+                trial[i] -= step * dw
+                k = _balance_key(trial)
+                if k < best_key:
+                    best_move, best_key = (i, step, trial), k
+        if best_move is None:
+            break
+        i, step, loads = best_move
+        bounds[i] += step
+    return bounds
+
+
+def _split_min_max(w: np.ndarray, nparts: int) -> np.ndarray:
+    """Balanced contiguous partition of ``w`` into ``nparts`` runs.
+
+    Boundary refinement over the Eq-20 objective from two seeds — the
+    weight-quantile split and the uniform equal-count split — keeping the
+    better result.  Seeding from uniform guarantees the model plan is never
+    worse than the strawman on the modeled metric.
+    """
+    R = len(w)
+    base, extra = divmod(R, nparts)
+    uni = np.concatenate([[0], np.cumsum([base + (1 if d < extra else 0)
+                                          for d in range(nparts)])])
+    cands = [_refine_bounds(w, _quantile_bounds(w, nparts), nparts),
+             _refine_bounds(w, uni.astype(np.int64), nparts)]
+    return min(cands, key=lambda b: _balance_key(_bounds_loads(w, b)))
+
+
+def plan_from_counts(counts: np.ndarray, params: ModelParams, nparts: int,
+                     method: str = "model",
+                     row_weight_scale: np.ndarray | None = None) -> SlabPlan:
+    """Collapse the cost model onto parity-even row bands.
+
+    method='uniform'/'uniform-sfc'  equal-count bands (no cost model)
+    method='sfc'                    greedy weight-balanced quantile split
+    method='model'                  min-max optimal band boundaries
+
+    ``row_weight_scale`` (length ``2**level // 2``, parent-row granularity)
+    folds measured-feedback slowdowns into the weights — see ``replan``.
+    """
+    n = counts.shape[0]
+    if n != 1 << params.level:
+        raise ValueError(f"counts side {n} != 2**level ({1 << params.level})")
+    if nparts <= 1:
+        return SlabPlan(level=params.level, row0=(0,), rows=(n,))
+    if method in ("uniform", "uniform-sfc"):
+        return uniform_plan(params.level, nparts)
+    w = row_loads(counts, params)
+    if row_weight_scale is not None:
+        w = w * np.asarray(row_weight_scale, dtype=np.float64)
+    if nparts > len(w):
+        raise ValueError(f"{nparts} parts need >= {2 * nparts} leaf rows")
+    if method == "sfc":
+        assign = pt.partition_weighted_sfc(w, nparts)
+        bounds = np.concatenate([[0], np.cumsum(np.bincount(assign, minlength=nparts))])
+    elif method == "model":
+        bounds = _split_min_max(w, nparts)
+    else:
+        raise ValueError(f"unknown plan method: {method}")
+    rows = tuple(int(2 * (b1 - b0)) for b0, b1 in zip(bounds[:-1], bounds[1:]))
+    row0 = tuple(int(2 * b) for b in bounds[:-1])
+    return SlabPlan(level=params.level, row0=row0, rows=rows)
+
+
+# ---------------------------------------------------------------------------
+# Quality metrics and dynamic feedback (paper Eq 20 / §4 "dynamic")
+# ---------------------------------------------------------------------------
+
+
+def plan_loads(plan: SlabPlan, counts: np.ndarray, params: ModelParams,
+               row_weight_scale: np.ndarray | None = None) -> np.ndarray:
+    """Modeled work per band under the current particle distribution."""
+    w = row_loads(counts, params)
+    if row_weight_scale is not None:
+        w = w * np.asarray(row_weight_scale, dtype=np.float64)
+    bounds = np.concatenate([[0], np.cumsum(np.asarray(plan.rows) // 2)])
+    return _bounds_loads(w, bounds)
+
+
+def plan_stats(plan: SlabPlan, counts: np.ndarray, params: ModelParams) -> dict:
+    """Eq (20) min/max load balance + load summary, next to partition_stats."""
+    loads = plan_loads(plan, counts, params)
+    return {
+        "load_balance": float(loads.min() / loads.max()) if loads.max() > 0 else 1.0,
+        "max_load": float(loads.max()),
+        "mean_load": float(loads.mean()),
+        "min_load": float(loads.min()),
+        "rows": list(plan.rows),
+    }
+
+
+def replan(counts: np.ndarray, params: ModelParams, nparts: int,
+           prev_plan: SlabPlan | None = None,
+           measured_times: np.ndarray | None = None,
+           method: str = "model") -> SlabPlan:
+    """Dynamic re-planning: current counts + measured per-device times.
+
+    Without measurements this is a pure a-priori re-plan from the drifted
+    particle distribution.  With ``measured_times`` the per-band slowdown
+    rates (``partition.measured_rates`` — the same feedback ``rebalance``
+    applies to subtree vertices) scale each band's rows before the min-max
+    re-split, so a slow device sheds rows exactly as the paper's dynamic
+    rebalancing sheds subtrees.
+    """
+    scale = None
+    if measured_times is not None and prev_plan is not None:
+        scale = measured_row_scale(prev_plan, counts, params, measured_times)
+    return plan_from_counts(counts, params, nparts, method=method,
+                            row_weight_scale=scale)
+
+
+def measured_row_scale(plan: SlabPlan, counts: np.ndarray,
+                       params: ModelParams,
+                       measured_times: np.ndarray) -> np.ndarray:
+    """Per-parent-row slowdown factors implied by measured band times —
+    the weight scaling both ``replan`` and the stepper's adoption test
+    must share (diverging formulas would re-split on different weights)."""
+    loads = plan_loads(plan, counts, params)
+    rates = pt.measured_rates(loads, np.asarray(measured_times, np.float64))
+    return rates[plan.owner_of_row()[::2]]
+
+
+def assignment_from_plan(plan: SlabPlan, cut: int) -> np.ndarray:
+    """Majority-owner subtree assignment implied by the bands.
+
+    Lets the stepper keep a 2-D subtree assignment in sync with the 1-D
+    execution plan so ``partition.rebalance`` / ``partition_stats`` can run
+    on the same graph the paper partitions.
+    """
+    nsub = 1 << cut
+    sub_rows = plan.nside // nsub
+    owner = plan.owner_of_row()
+    # majority owner of the leaf rows under each cut-grid row
+    row_owner = np.empty(nsub, dtype=np.int64)
+    for t in range(nsub):
+        block = owner[t * sub_rows:(t + 1) * sub_rows]
+        row_owner[t] = np.bincount(block).argmax()
+    return np.repeat(row_owner, nsub)

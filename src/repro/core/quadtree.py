@@ -75,10 +75,6 @@ M2L_OFFSETS: list[tuple[int, int]] = [
 assert len(M2L_OFFSETS) == 40
 
 
-def _parity_valid(parity: int, d: int) -> bool:
-    return abs((parity + d) // 2) <= 1 if (parity + d) >= 0 else abs(-((-parity - d + 1) // 2)) <= 1
-
-
 def parity_valid(parity: int, d: int) -> bool:
     """True iff parent(target+d) is a neighbor of parent(target)."""
     import math
@@ -269,6 +265,58 @@ def build_tree(
     index = TreeIndex(box_of_particle=box, slot_of_particle=slot_of_particle,
                       counts=counts.reshape(n, n))
     return tree, index
+
+
+def rebuild_tree(tree: Tree, new_z: jnp.ndarray, aux=None):
+    """Device-side rebinning: scatter particles into a fresh dense tree.
+
+    The jit-able counterpart of :func:`build_tree` — a whole advection step
+    can run on device with no host round-trip (core/stepper.py).  ``new_z``
+    holds updated complex positions in ``tree``'s slot layout; charges and
+    occupancy come from ``tree``.  ``aux`` is an optional pytree of
+    per-slot ``(n, n, s)`` arrays rebinned alongside the particles (e.g.
+    the pre-step positions an RK2 midpoint stage needs).
+
+    Returns ``(new_tree, new_aux, ok)``.  Slot capacity stays fixed at
+    ``tree.slots``; when a box overflows, the surplus particles are dropped
+    from the new tree and ``ok`` is False — callers must check it and
+    rebuild at a deeper level / larger capacity on the host (the stepper's
+    occupancy guard does this before overflow is ever reached).
+
+    Positions outside the unit square are clamped into the edge boxes,
+    matching ``build_tree``'s host binning.
+    """
+    n, s = tree.nside, tree.slots
+    N = n * n * s
+    z = new_z.reshape(N)
+    q = tree.q.reshape(N)
+    m = tree.mask.reshape(N)
+
+    ix = jnp.clip((z.real * n).astype(jnp.int32), 0, n - 1)
+    iy = jnp.clip((z.imag * n).astype(jnp.int32), 0, n - 1)
+    box = jnp.where(m, iy * n + ix, n * n)        # empty slots sort last
+
+    order = jnp.argsort(box)                      # stable in jax
+    sb = box[order]
+    idx = jnp.arange(N, dtype=jnp.int32)
+    is_start = jnp.concatenate([jnp.ones((1,), bool), sb[1:] != sb[:-1]])
+    # slot = rank within the sorted box run (distance to the run's start)
+    slot = idx - jax.lax.cummax(jnp.where(is_start, idx, 0))
+    ok = jnp.all((sb == n * n) | (slot < s))
+
+    keep = (sb < n * n) & (slot < s)        # overflow slots are dropped
+    dest = jnp.where(keep, sb * s + slot, N)
+
+    def scatter(vals, fill=0):
+        flat = jnp.full((N,), fill, dtype=vals.dtype)
+        return flat.at[dest].set(vals.reshape(N)[order], mode="drop") \
+                   .reshape(n, n, s)
+
+    new_tree = Tree(z=scatter(z), q=scatter(q),
+                    mask=scatter(m.astype(jnp.bool_)),
+                    level=tree.level, sigma=tree.sigma)
+    new_aux = jax.tree_util.tree_map(scatter, aux) if aux is not None else None
+    return new_tree, new_aux, ok
 
 
 def gather_particle_values(values: np.ndarray, index: TreeIndex) -> np.ndarray:

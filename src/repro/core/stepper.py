@@ -1,0 +1,266 @@
+"""Dynamic load-balanced vortex time stepping (the paper's title, §4).
+
+:class:`VortexStepper` owns the ``(tree, plan)`` pair and closes the
+model -> execution -> measurement loop:
+
+  * each RK2 (midpoint) step is ONE jitted device program — FMM velocity,
+    half-kick, device-side rebinning (``quadtree.rebuild_tree``), second
+    FMM, full kick, rebin — no host round-trip per substep (the loop
+    ``examples/vortex_sim.py`` used to run rebuilt the tree on the host
+    twice per step);
+  * every ``replan_every`` steps the current leaf occupancy is pulled,
+    measured per-device times (when available) are folded into the weights
+    via ``partition.measured_rates`` — the same feedback ``rebalance``
+    applies to the subtree graph — and a new :class:`SlabPlan` is emitted
+    when the modeled Eq-20 bottleneck improves by more than ``replan_tol``;
+  * an occupancy guard re-levels the tree on the host *before* any leaf
+    box can overflow its slot capacity mid-run.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+import time
+from typing import Callable, Optional
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from .cost_model import ModelParams
+from . import partition as pt
+from .fmm import fmm_velocity
+from .parallel_fmm import parallel_fmm_velocity
+from .plan import (SlabPlan, assignment_from_plan, measured_row_scale,
+                   plan_from_counts, plan_loads, plan_stats, replan)
+from .quadtree import Tree, build_tree, choose_level, rebuild_tree
+
+
+def _velocity(tree, p, mesh, mesh_axis, use_kernels, plan):
+    if mesh is None:
+        return fmm_velocity(tree, p, use_kernels=use_kernels)
+    return parallel_fmm_velocity(tree, p, mesh, mesh_axis, use_kernels, plan)
+
+
+@functools.partial(jax.jit, static_argnames=("p", "mesh", "mesh_axis",
+                                             "use_kernels", "plan"))
+def rk2_step(tree: Tree, dt, payload=None, *, p: int, mesh=None,
+             mesh_axis: str = "data", use_kernels: bool = False,
+             plan: Optional[SlabPlan] = None):
+    """One jitted RK2 midpoint step; ``dz/dt = conj(W)`` (W = u - iv).
+
+    ``payload`` is an optional pytree of per-slot (n, n, s) arrays carried
+    through both rebinnings (e.g. particle labels or initial radii).
+    Returns ``(new_tree, new_payload, ok)`` with ``ok`` False iff a leaf
+    box overflowed its slots during either rebin.
+    """
+    w1 = _velocity(tree, p, mesh, mesh_axis, use_kernels, plan)
+    z_mid = jnp.where(tree.mask, tree.z + 0.5 * dt * jnp.conj(w1), tree.z)
+    aux = (tree.z, payload) if payload is not None else (tree.z,)
+    t_mid, aux, ok1 = rebuild_tree(tree, z_mid, aux=aux)
+    z0 = aux[0]
+
+    w2 = _velocity(t_mid, p, mesh, mesh_axis, use_kernels, plan)
+    z_new = jnp.where(t_mid.mask, z0 + dt * jnp.conj(w2), t_mid.z)
+    t_new, aux, ok2 = rebuild_tree(t_mid, z_new,
+                                   aux=aux[1] if payload is not None else None)
+    return t_new, aux, ok1 & ok2
+
+
+@dataclasses.dataclass
+class StepRecord:
+    step: int
+    seconds: float
+    load_balance: float      # Eq (20) min/max on modeled band loads
+    replanned: bool
+    releveled: bool
+    level: int
+
+
+class VortexStepper:
+    """Owns ``(tree, plan)`` and advances the vortex system dynamically.
+
+    ``plan_method``: 'uniform' (strawman), 'model' (a-priori cost-model
+    plan), with ``dynamic=True`` adding re-planning from drifted counts and
+    measured times.  ``measured_times_fn(stepper) -> (nparts,) seconds`` is
+    the injection point for real per-device timers (tests use it to emulate
+    heterogeneous pools); without it, dynamic re-planning is driven by the
+    particle distribution alone.
+    """
+
+    def __init__(self, positions: np.ndarray, gamma: np.ndarray, sigma: float,
+                 *, p: int = 12, dt: float = 0.005, mesh=None,
+                 mesh_axis: str = "data", use_kernels: bool = False,
+                 plan_method: str = "model", dynamic: bool = False,
+                 replan_every: int = 4, replan_tol: float = 0.05,
+                 target_per_box: float = 8.0, slots_headroom: float = 2.0,
+                 occupancy_guard: float = 0.9, cut: Optional[int] = None,
+                 payload=None,
+                 measured_times_fn: Optional[Callable[["VortexStepper"],
+                                                      np.ndarray]] = None):
+        self.p, self.dt = p, float(dt)
+        self.mesh, self.mesh_axis = mesh, mesh_axis
+        self.use_kernels = use_kernels
+        self.plan_method = plan_method
+        self.dynamic = dynamic
+        self.replan_every = max(int(replan_every), 1)
+        self.replan_tol = float(replan_tol)
+        self.target_per_box = float(target_per_box)
+        self.slots_headroom = float(slots_headroom)
+        self.occupancy_guard = float(occupancy_guard)
+        self._cut = cut
+        self.sigma = float(sigma)
+        self.measured_times_fn = measured_times_fn
+        self.step_count = 0
+        self.history: list[StepRecord] = []
+
+        self._build_host(np.asarray(positions, np.float64),
+                         np.asarray(gamma, np.float64),
+                         payload_values=None if payload is None else payload)
+
+    # -- host-side (re)construction -----------------------------------------
+
+    @property
+    def nparts(self) -> int:
+        return 1 if self.mesh is None else self.mesh.shape[self.mesh_axis]
+
+    def _min_level(self) -> int:
+        # every device needs at least one parent row (2 leaf rows)
+        need = max(2 * self.nparts, 4)
+        return max(2, math.ceil(math.log2(need)))
+
+    def _build_host(self, positions, gamma, payload_values=None):
+        level = max(choose_level(len(positions), self.target_per_box),
+                    self._min_level())
+        n = 1 << level
+        ij = np.clip((positions * n).astype(np.int64), 0, n - 1)
+        occ = np.bincount(ij[:, 1] * n + ij[:, 0], minlength=n * n).max()
+        slots = max(int(math.ceil(occ * self.slots_headroom)), 2)
+        self.tree, self.index = build_tree(positions, gamma, level,
+                                           self.sigma, slots=slots)
+        if payload_values is not None:
+            def scatter(v):
+                flat = np.zeros((n * n, slots), dtype=np.asarray(v).dtype)
+                flat[self.index.box_of_particle,
+                     self.index.slot_of_particle] = v
+                return jnp.asarray(flat.reshape(n, n, slots))
+            self.payload = jax.tree_util.tree_map(scatter, payload_values)
+        else:
+            self.payload = None
+        cut = self._cut if self._cut is not None else min(level - 1, 4)
+        self.params = ModelParams(level=level, cut=max(cut, 1), p=self.p,
+                                  slots=slots)
+        counts = self.index.counts
+        self.plan = plan_from_counts(counts, self.params, self.nparts,
+                                     method=self.plan_method)
+        self.subtree_assign = assignment_from_plan(self.plan, self.params.cut)
+        self._cached_lb = plan_stats(self.plan, counts,
+                                     self.params)["load_balance"]
+
+    def counts(self) -> np.ndarray:
+        return np.asarray(self.tree.mask.sum(axis=-1))
+
+    def particles(self) -> tuple[np.ndarray, np.ndarray]:
+        """(positions, gamma) of the live particles, host-side."""
+        m = np.asarray(self.tree.mask).reshape(-1)
+        z = np.asarray(self.tree.z).reshape(-1)[m]
+        q = np.asarray(self.tree.q).reshape(-1)[m]
+        pos = np.stack([z.real, z.imag], axis=1)
+        return pos, np.real(q * 2j * np.pi)
+
+    def _relevel(self):
+        """Host rebuild at a freshly chosen level/capacity (overflow guard)."""
+        pos, gamma = self.particles()
+        payload_values = None
+        if self.payload is not None:
+            m = np.asarray(self.tree.mask).reshape(-1)
+            payload_values = jax.tree_util.tree_map(
+                lambda a: np.asarray(a).reshape(-1)[m], self.payload)
+        self._build_host(pos, gamma, payload_values=payload_values)
+
+    # -- the dynamic loop ----------------------------------------------------
+
+    def maybe_replan(self, measured_times: Optional[np.ndarray] = None) -> bool:
+        """Re-level if occupancy approaches capacity; re-plan if it pays.
+
+        Returns True when a new plan (or tree level) was adopted."""
+        counts = self.counts()
+        if counts.max() >= self.occupancy_guard * self.params.slots:
+            self._relevel()
+            return True
+        self._cached_lb = plan_stats(self.plan, counts,
+                                     self.params)["load_balance"]
+        if not self.dynamic:
+            return False
+        if measured_times is None and self.measured_times_fn is not None:
+            measured_times = self.measured_times_fn(self)
+        new_plan = replan(counts, self.params, self.nparts,
+                          prev_plan=self.plan, measured_times=measured_times,
+                          method=self.plan_method)
+        if new_plan == self.plan:
+            return False
+        # adopt when the modeled bottleneck (measured-rate-weighted when
+        # times are available) improves by more than the tolerance
+        scale = None
+        if measured_times is not None:
+            scale = measured_row_scale(self.plan, counts, self.params,
+                                       measured_times)
+        old_max = plan_loads(self.plan, counts, self.params, scale).max()
+        new_max = plan_loads(new_plan, counts, self.params, scale).max()
+        if new_max > (1.0 - self.replan_tol) * old_max:
+            return False
+        self.plan = new_plan
+        self._cached_lb = plan_stats(new_plan, counts,
+                                     self.params)["load_balance"]
+        # keep the paper's 2-D subtree assignment in sync (graph stats /
+        # rebalance parity with §4)
+        graph = pt.build_subtree_graph(counts, self.params)
+        if measured_times is not None:
+            self.subtree_assign = pt.rebalance(
+                graph, assignment_from_plan(new_plan, self.params.cut),
+                self.nparts, measured_times)
+        else:
+            self.subtree_assign = assignment_from_plan(new_plan,
+                                                       self.params.cut)
+        return True
+
+    def step(self) -> StepRecord:
+        """Advance one RK2 step; time it; periodically re-plan."""
+        t0 = time.perf_counter()
+        tree, payload, ok = rk2_step(
+            self.tree, self.dt, self.payload, p=self.p, mesh=self.mesh,
+            mesh_axis=self.mesh_axis, use_kernels=self.use_kernels,
+            plan=None if self.mesh is None else self.plan)
+        jax.block_until_ready(tree.z)
+        releveled = not bool(ok)
+        if releveled:
+            # a box overflowed during rebinning: the old tree is still
+            # intact — re-level on the host and redo the step safely.
+            self._relevel()
+            tree, payload, ok = rk2_step(
+                self.tree, self.dt, self.payload, p=self.p, mesh=self.mesh,
+                mesh_axis=self.mesh_axis, use_kernels=self.use_kernels,
+                plan=None if self.mesh is None else self.plan)
+            jax.block_until_ready(tree.z)
+            if not bool(ok):
+                raise RuntimeError(
+                    "leaf box overflow persists after re-leveling; "
+                    "increase slots_headroom or lower target_per_box")
+        # the timer covers everything the step actually cost, including a
+        # re-level + recompile when one happened
+        seconds = time.perf_counter() - t0
+        self.tree, self.payload = tree, payload
+        self.step_count += 1
+        replanned = False
+        if self.step_count % self.replan_every == 0:
+            replanned = self.maybe_replan()
+        rec = StepRecord(step=self.step_count, seconds=seconds,
+                         load_balance=self._cached_lb,
+                         replanned=replanned, releveled=releveled,
+                         level=self.params.level)
+        self.history.append(rec)
+        return rec
+
+    def stats(self) -> dict:
+        return plan_stats(self.plan, self.counts(), self.params)

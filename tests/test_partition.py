@@ -1,0 +1,188 @@
+"""Partitioner + execution-plan coverage (paper §4-§5, Eq 20).
+
+Pins the PR-2 acceptance criteria: the cost-model pipeline beats the
+uniform strawman on the paper's own Lamb-Oseen lattice, measured-time
+rebalancing sheds load from a slowed part, and SlabPlan bands obey the
+contracts the sharded driver depends on (contiguous, parity-even, exact
+row cover).
+"""
+import numpy as np
+import pytest
+
+from repro.core import partition as pt
+from repro.core.cost_model import ModelParams
+from repro.core.plan import (SlabPlan, assignment_from_plan, plan_from_counts,
+                             plan_loads, plan_stats, replan, row_loads,
+                             uniform_plan)
+from repro.core.vortex import lamb_oseen_particles
+
+
+def lamb_oseen_counts(level: int, m_side: int = 120) -> np.ndarray:
+    pos, _, _ = lamb_oseen_particles(m_side)
+    n = 1 << level
+    ij = np.clip((pos * n).astype(int), 0, n - 1)
+    counts = np.zeros((n, n), dtype=np.int64)
+    np.add.at(counts, (ij[:, 1], ij[:, 0]), 1)
+    return counts
+
+
+# ---------------------------------------------------------------------------
+# FM refinement vs the uniform-SFC strawman on the paper's test case
+# ---------------------------------------------------------------------------
+
+
+def test_fm_beats_uniform_sfc_on_lamb_oseen():
+    """Paper Figs 7-9 on the Lamb-Oseen lattice: the full model pipeline
+    (weighted SFC seed + FM refinement) beats the equal-count SFC split on
+    BOTH the edge cut and the Eq-20 min/max load metric."""
+    params = ModelParams(level=6, cut=4, p=12, slots=4)
+    counts = lamb_oseen_counts(params.level)
+    g = pt.build_subtree_graph(counts, params)
+    nparts = 6
+    base = pt.partition(g, nparts, method="uniform-sfc")
+    model = pt.partition(g, nparts, method="model")
+    s_base = pt.partition_stats(g, base, nparts)
+    s_model = pt.partition_stats(g, model, nparts)
+    assert s_model["load_balance"] > s_base["load_balance"]
+    assert s_model["edge_cut"] < s_base["edge_cut"]
+
+
+def test_rebalance_sheds_load_from_slowed_part_lamb_oseen():
+    params = ModelParams(level=6, cut=3, p=12, slots=4)
+    counts = lamb_oseen_counts(params.level)
+    g = pt.build_subtree_graph(counts, params)
+    nparts = 4
+    a0 = pt.partition(g, nparts, method="model")
+    loads0 = g.part_loads(a0, nparts)
+    slow = 2
+    times = loads0.copy()
+    times[slow] *= 3.0
+    a1 = pt.rebalance(g, a0, nparts, times)
+    loads1 = g.part_loads(a1, nparts)
+    assert loads1[slow] < loads0[slow] * 0.75
+
+
+def test_measured_rates_fills_empty_parts():
+    rates = pt.measured_rates(np.array([10.0, 0.0, 20.0]),
+                              np.array([10.0, 5.0, 40.0]))
+    assert rates[0] == pytest.approx(1.0)
+    assert rates[2] == pytest.approx(2.0)
+    assert rates[1] == pytest.approx(1.5)   # mean positive rate
+
+
+# ---------------------------------------------------------------------------
+# SlabPlan invariants — the contract the sharded driver depends on
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("method", ["uniform", "sfc", "model"])
+@pytest.mark.parametrize("nparts", [2, 3, 4, 7])
+def test_slab_plan_bands_cover_grid(method, nparts):
+    params = ModelParams(level=5, cut=3, p=12, slots=4)
+    counts = lamb_oseen_counts(params.level, m_side=100)
+    plan = plan_from_counts(counts, params, nparts, method=method)
+    assert plan.nparts == nparts
+    covered = []
+    for r0, r in zip(plan.row0, plan.rows):
+        assert r0 % 2 == 0 and r % 2 == 0 and r > 0     # parity-even
+        covered.extend(range(r0, r0 + r))
+    assert covered == list(range(1 << params.level))     # exact cover, in order
+    # index maps round-trip
+    idx, valid = plan.gather_index()
+    assert sorted(idx[valid].tolist()) == covered
+    scatter = plan.scatter_index()
+    owner = plan.owner_of_row()
+    assert (idx[scatter] == np.arange(1 << params.level)).all()
+    assert (np.bincount(owner) == np.asarray(plan.rows)).all()
+
+
+def test_slab_plan_rejects_bad_bands():
+    with pytest.raises(ValueError):
+        SlabPlan(level=4, row0=(0, 8), rows=(8, 6))       # short cover
+    with pytest.raises(ValueError):
+        SlabPlan(level=4, row0=(0, 6), rows=(8, 8))       # overlap/gap
+    with pytest.raises(ValueError):
+        SlabPlan(level=4, row0=(0, 5), rows=(5, 11))      # odd band
+    with pytest.raises(ValueError):
+        uniform_plan(level=2, nparts=3)                   # too many parts
+
+
+def test_plan_is_static_and_hashable():
+    a = uniform_plan(5, 4)
+    b = uniform_plan(5, 4)
+    assert a == b and hash(a) == hash(b)
+    assert a != SlabPlan(level=5, row0=(0, 4, 10, 20), rows=(4, 6, 10, 12))
+
+
+# ---------------------------------------------------------------------------
+# Model plan beats the uniform strawman on Lamb-Oseen (acceptance-pinned)
+# ---------------------------------------------------------------------------
+
+
+def test_model_plan_beats_uniform_on_lamb_oseen():
+    """Eq (20) min/max modeled load: model bands strictly beat equal-count
+    bands on the Lamb-Oseen lattice (the acceptance criterion's pinned
+    configuration — 4 parts, level 5, p=12, m_side=160)."""
+    params = ModelParams(level=5, cut=4, p=12, slots=8)
+    counts = lamb_oseen_counts(params.level, m_side=160)
+    model = plan_from_counts(counts, params, 4, method="model")
+    uniform = plan_from_counts(counts, params, 4, method="uniform")
+    lb_model = plan_stats(model, counts, params)["load_balance"]
+    lb_uniform = plan_stats(uniform, counts, params)["load_balance"]
+    assert lb_model > lb_uniform
+    assert not model.is_uniform
+
+
+@pytest.mark.parametrize("nparts", [2, 4, 8])
+def test_model_plan_never_loses_to_uniform(nparts):
+    """Refinement seeds from the uniform split, so the model plan dominates
+    the strawman on the modeled metric for every part count."""
+    params = ModelParams(level=6, cut=4, p=8, slots=8)
+    counts = lamb_oseen_counts(params.level, m_side=160)
+    model = plan_from_counts(counts, params, nparts, method="model")
+    uniform = uniform_plan(params.level, nparts)
+    assert plan_stats(model, counts, params)["load_balance"] >= \
+        plan_stats(uniform, counts, params)["load_balance"]
+
+
+def test_row_loads_match_band_loads():
+    params = ModelParams(level=5, cut=3, p=10, slots=4)
+    counts = lamb_oseen_counts(params.level, m_side=100)
+    w = row_loads(counts, params)
+    assert w.shape == ((1 << params.level) // 2,)
+    plan = plan_from_counts(counts, params, 4, method="model")
+    loads = plan_loads(plan, counts, params)
+    assert loads.sum() == pytest.approx(w.sum())
+    assert plan_stats(plan, counts, params)["max_load"] == pytest.approx(loads.max())
+
+
+# ---------------------------------------------------------------------------
+# Dynamic feedback at plan level
+# ---------------------------------------------------------------------------
+
+
+def test_replan_shifts_rows_off_slowed_device():
+    """A 3x-slower device must end up with fewer rows after measured-time
+    feedback (the paper's dynamic rebalancing, at band granularity)."""
+    params = ModelParams(level=6, cut=4, p=12, slots=8)
+    counts = lamb_oseen_counts(params.level, m_side=160)
+    nparts = 4
+    plan0 = plan_from_counts(counts, params, nparts, method="model")
+    loads0 = plan_loads(plan0, counts, params)
+    slow = 1
+    times = loads0.copy()
+    times[slow] *= 3.0
+    plan1 = replan(counts, params, nparts, prev_plan=plan0,
+                   measured_times=times, method="model")
+    assert plan1.rows[slow] < plan0.rows[slow]
+    # modeled load on the slow device drops too
+    assert plan_loads(plan1, counts, params)[slow] < loads0[slow]
+    # without measurements, replan reproduces the a-priori plan
+    assert replan(counts, params, nparts, prev_plan=plan0) == plan0
+
+
+def test_assignment_from_plan_majority():
+    plan = SlabPlan(level=4, row0=(0, 8), rows=(8, 8))
+    assign = assignment_from_plan(plan, cut=2)   # 4x4 subtree grid
+    assert assign.shape == (16,)
+    assert (assign[:8] == 0).all() and (assign[8:] == 1).all()

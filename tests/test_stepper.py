@@ -1,0 +1,172 @@
+"""Device-side rebinning + the dynamic RK2 stepper (paper §3 + §4 dynamic).
+
+Pins the acceptance criterion: a jitted RK2 step via ``rebuild_tree`` +
+``VortexStepper`` reproduces the host-rebuild loop it replaces to f32
+tolerance, overflow is reported (never silently corrupted), and the
+occupancy guard re-levels before ``build_tree`` could die mid-run.
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core.fmm import fmm_velocity
+from repro.core.quadtree import (build_tree, gather_particle_values,
+                                 rebuild_tree)
+from repro.core.stepper import VortexStepper, rk2_step
+from repro.core.vortex import lamb_oseen_particles
+
+
+def _random_tree(n=500, level=4, slots=12, seed=0):
+    rng = np.random.default_rng(seed)
+    pos = rng.uniform(0.01, 0.99, (n, 2))
+    gamma = rng.normal(size=n)
+    tree, index = build_tree(pos, gamma, level, sigma=0.02, slots=slots)
+    return tree, index, pos, gamma
+
+
+# ---------------------------------------------------------------------------
+# rebuild_tree: the jit-able build_tree
+# ---------------------------------------------------------------------------
+
+
+def test_rebuild_identity_matches_build_tree():
+    tree, index, _, _ = _random_tree()
+    new_tree, aux, ok = jax.jit(rebuild_tree)(tree, tree.z)
+    assert bool(ok) and aux is None
+    assert (np.asarray(new_tree.mask.sum(-1)) == index.counts).all()
+    # same multiset of particles per box (slot order may differ)
+    for a, b in ((new_tree.z, tree.z), (new_tree.q, tree.q)):
+        assert np.allclose(np.sort(np.asarray(a), axis=-1),
+                           np.sort(np.asarray(b), axis=-1))
+
+
+def test_rebuild_moved_matches_host_binning():
+    tree, index, pos, gamma = _random_tree(seed=1)
+    rng = np.random.default_rng(2)
+    pos2 = (pos + rng.normal(0, 0.05, pos.shape)).clip(0.001, 0.999)
+    host_tree, host_index = build_tree(pos2, gamma, tree.level, sigma=0.02,
+                                       slots=tree.slots)
+    n = tree.nside
+    newz = np.zeros((n * n, tree.slots), dtype=np.complex64)
+    newz[index.box_of_particle, index.slot_of_particle] = \
+        pos2[:, 0] + 1j * pos2[:, 1]
+    new_tree, _, ok = rebuild_tree(tree, jnp.asarray(newz.reshape(n, n, -1)))
+    assert bool(ok)
+    assert (np.asarray(new_tree.mask.sum(-1)) == host_index.counts).all()
+    assert np.asarray(new_tree.q).sum() == pytest.approx(
+        np.asarray(host_tree.q).sum(), rel=1e-5)
+
+
+def test_rebuild_reports_overflow():
+    tree, _, _, _ = _random_tree(slots=None)   # slots == max occupancy
+    clumped = jnp.full_like(tree.z, 0.5 + 0.5j)
+    overflowed, _, ok = rebuild_tree(tree, clumped)
+    assert not bool(ok)
+    # capacity is respected even under overflow (surplus dropped, not UB)
+    assert int(overflowed.mask.sum()) <= overflowed.slots
+
+
+def test_rebuild_carries_aux_payload():
+    tree, _, _, _ = _random_tree(seed=5)
+    labels = jnp.where(tree.mask,
+                       jnp.cumsum(tree.mask.reshape(-1)).reshape(tree.mask.shape),
+                       0)
+    shifted = jnp.where(tree.mask, tree.z + 0.03, tree.z)
+    new_tree, (new_labels,), ok = rebuild_tree(tree, shifted, aux=(labels,))
+    assert bool(ok)
+    # every label survives, attached to its particle
+    a = np.sort(np.asarray(labels)[np.asarray(tree.mask)])
+    b = np.sort(np.asarray(new_labels)[np.asarray(new_tree.mask)])
+    assert (a == b).all()
+
+
+# ---------------------------------------------------------------------------
+# Jitted RK2 == host-rebuild loop (acceptance-pinned)
+# ---------------------------------------------------------------------------
+
+
+def test_jitted_rk2_matches_host_rebuild_loop():
+    pos0, gamma0, sigma = lamb_oseen_particles(40)
+    p, dt, steps = 10, 0.004, 3
+    st = VortexStepper(pos0, gamma0, sigma, p=p, dt=dt,
+                       payload={"z0": pos0[:, 0] + 1j * pos0[:, 1]})
+    for _ in range(steps):
+        st.step()
+
+    # the loop examples/vortex_sim.py used to run: host build_tree twice
+    # per RK2 step at the same level / slot capacity
+    level, slots = st.params.level, st.params.slots
+    pos = pos0.copy()
+    for _ in range(steps):
+        t, ix = build_tree(pos, gamma0, level, sigma, slots=slots)
+        w = gather_particle_values(np.asarray(fmm_velocity(t, p)), ix)
+        mid = pos + 0.5 * dt * np.stack([w.real, -w.imag], 1)
+        t, ix = build_tree(mid, gamma0, level, sigma, slots=slots)
+        w = gather_particle_values(np.asarray(fmm_velocity(t, p)), ix)
+        pos = pos + dt * np.stack([w.real, -w.imag], 1)
+
+    # match trajectories via the initial-position payload
+    m = np.asarray(st.tree.mask).reshape(-1)
+    z_dev = np.asarray(st.tree.z).reshape(-1)[m]
+    z0_dev = np.asarray(st.payload["z0"]).reshape(-1)[m]
+    dev = z_dev[np.lexsort((z0_dev.imag, z0_dev.real))]
+    z0_host = pos0[:, 0] + 1j * pos0[:, 1]
+    host = (pos[:, 0] + 1j * pos[:, 1])[np.lexsort((z0_host.imag,
+                                                    z0_host.real))]
+    assert len(dev) == len(host)
+    assert np.abs(dev - host).max() < 5e-5
+
+
+def test_stepper_orbit_invariant():
+    """Lamb-Oseen particles orbit on near-circles through many rebins."""
+    pos0, gamma0, sigma = lamb_oseen_particles(40)
+    r0 = np.hypot(pos0[:, 0] - 0.5, pos0[:, 1] - 0.5)
+    st = VortexStepper(pos0, gamma0, sigma, p=10, dt=0.005,
+                       payload={"r0": r0 + 0j})
+    for _ in range(4):
+        st.step()
+    m = np.asarray(st.tree.mask).reshape(-1)
+    z = np.asarray(st.tree.z).reshape(-1)[m]
+    rr0 = np.asarray(st.payload["r0"]).reshape(-1)[m].real
+    r = np.hypot(z.real - 0.5, z.imag - 0.5)
+    sel = rr0 > 0.02
+    assert np.abs(r[sel] - rr0[sel]).max() < 5e-3
+
+
+# ---------------------------------------------------------------------------
+# Occupancy guard: re-level instead of dying inside build_tree mid-run
+# ---------------------------------------------------------------------------
+
+
+def test_occupancy_guard_relevels_before_overflow():
+    pos0, gamma0, sigma = lamb_oseen_particles(40)
+    st = VortexStepper(pos0, gamma0, sigma, p=8, dt=0.004,
+                       slots_headroom=1.0,       # no slack: occ == slots
+                       occupancy_guard=0.9,
+                       payload={"z0": pos0[:, 0] + 1j * pos0[:, 1]})
+    n_before = int(st.tree.mask.sum())
+    level_before = st.params.level
+    assert st.maybe_replan() is True              # guard fires -> re-level
+    assert int(st.tree.mask.sum()) == n_before    # no particle lost
+    assert st.params.slots >= st.counts().max()
+    # payload survived the host rebuild
+    z0 = np.asarray(st.payload["z0"]).reshape(-1)
+    assert (z0 != 0).sum() == n_before
+    assert st.params.level >= level_before
+
+
+def test_stepper_measured_times_fn_is_wired():
+    """The dynamic loop polls the injected per-device timer at replan time
+    (the hook real deployments use for heterogeneous pools)."""
+    pos0, gamma0, sigma = lamb_oseen_particles(40)
+    calls = []
+
+    def timer(stepper):
+        calls.append(stepper.step_count)
+        return np.ones(stepper.nparts)
+
+    st = VortexStepper(pos0, gamma0, sigma, p=8, dt=0.004, dynamic=True,
+                       replan_every=1, measured_times_fn=timer)
+    st.step()
+    assert calls == [1]
