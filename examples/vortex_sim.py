@@ -11,6 +11,10 @@ partition-driven :class:`SlabPlan` of choice:
   --plan dynamic   model bands re-planned from the drifted particle
                    distribution every --replan-every steps (paper's title)
 
+``--plan-grid PrxPc`` (e.g. ``2x3``) schedules a 2-D BlockPlan tile grid
+with two-axis halos instead of 1-D row bands; it implies
+``--devices Pr*Pc``.
+
 The vorticity field is a steady Euler solution up to core diffusion, so
 particles should orbit the vortex center on (nearly) circular paths — the
 initial radius is carried through every rebinning as a step payload and
@@ -32,11 +36,27 @@ def main():
     ap.add_argument("--p", type=int, default=12)
     ap.add_argument("--plan", choices=("uniform", "model", "dynamic"),
                     default="model")
+    ap.add_argument("--plan-grid", default=None, metavar="PrxPc",
+                    help="2-D BlockPlan device grid, e.g. 2x3 "
+                         "(implies --devices Pr*Pc)")
     ap.add_argument("--devices", type=int, default=1,
                     help="shard over N devices (forces host devices on CPU)")
     ap.add_argument("--replan-every", type=int, default=4)
     ap.add_argument("--use-kernels", action="store_true")
     args = ap.parse_args()
+
+    plan_grid = None
+    if args.plan_grid is not None:
+        try:
+            plan_grid = tuple(int(x) for x in args.plan_grid.lower().split("x"))
+            assert len(plan_grid) == 2 and min(plan_grid) >= 1
+        except (ValueError, AssertionError):
+            sys.exit(f"--plan-grid must look like 2x3, got {args.plan_grid!r}")
+        ndev = plan_grid[0] * plan_grid[1]
+        if args.devices not in (1, ndev):
+            sys.exit(f"--plan-grid {args.plan_grid} needs {ndev} devices, "
+                     f"--devices says {args.devices}")
+        args.devices = ndev
 
     if args.devices > 1 and "xla_force_host_platform_device_count" not in \
             os.environ.get("XLA_FLAGS", ""):
@@ -65,7 +85,7 @@ def main():
         pos, gamma, sigma, p=args.p, dt=args.dt, mesh=mesh,
         use_kernels=args.use_kernels,
         plan_method="uniform" if args.plan == "uniform" else "model",
-        dynamic=(args.plan == "dynamic"),
+        dynamic=(args.plan == "dynamic"), plan_grid=plan_grid,
         replan_every=args.replan_every,
         payload={"r0": r0 + 0j})
     s0 = stepper.stats()

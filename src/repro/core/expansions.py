@@ -251,51 +251,70 @@ def m2l_slab_geometry(rows: int, row0: int, halo: int) -> tuple[int, int, int]:
     return lo, PR, shift
 
 
-def m2l_slab_stack(me_halo: jnp.ndarray, p: int, row0: int,
-                   halo: int) -> tuple[jnp.ndarray, int, int]:
-    """Stage a halo'd row slab into the parent-plane layout.
+def m2l_slab_stack(me_halo: jnp.ndarray, p: int, row0: int, halo: int,
+                   col0: int = 0, col_halo: int = 0
+                   ) -> tuple[jnp.ndarray, tuple[int, int], tuple[int, int]]:
+    """Stage a halo'd slab (or 2-D tile) into the parent-plane layout.
 
     Shared, parity-critical front end of both the jnp and Pallas folded
-    M2L paths: slices the ±1-parent source window out of the slab, pads
-    the columns, and relayouts to parent planes.  Returns
-    ``(stack, PR, shift)`` with ``stack`` of shape (PR+2, PC+2, 4p).
+    M2L paths: slices the ±1-parent source window out of the slab and
+    relayouts to parent planes.  With ``col_halo=0`` the columns span the
+    full (even) grid width and the ±1-parent column window is zero-padded
+    here (row-slab and serial callers); with ``col_halo>0`` the slab
+    carries exchanged column ghosts too (2-D tiles under ``shard_map``)
+    and the same geometry algebra runs on the column axis, anchored at
+    ``col0``.  Returns ``(stack, (PR, rshift), (PC, cshift))`` with
+    ``stack`` of shape (PR+2, PC+2, 4p).
     """
     rows = me_halo.shape[0] - 2 * halo
-    cols = me_halo.shape[1]
-    if cols % 2:
-        raise ValueError("M2L slab columns must span the full (even) width")
-    lo, PR, shift = m2l_slab_geometry(rows, row0, halo)
+    lo, PR, rshift = m2l_slab_geometry(rows, row0, halo)
     sub = jax.lax.slice_in_dim(me_halo, lo, lo + 2 * (PR + 2), axis=0)
-    sub = jnp.pad(sub, ((0, 0), (2, 2), (0, 0)))
-    return to_parent_planes(sub, p), PR, shift
+    if col_halo == 0:
+        cols = me_halo.shape[1]
+        if cols % 2:
+            raise ValueError("M2L slab columns must span the full (even) width")
+        sub = jnp.pad(sub, ((0, 0), (2, 2), (0, 0)))
+        PC, cshift = cols // 2, 0
+    else:
+        cols = me_halo.shape[1] - 2 * col_halo
+        clo, PC, cshift = m2l_slab_geometry(cols, col0, col_halo)
+        sub = jax.lax.slice_in_dim(sub, clo, clo + 2 * (PC + 2), axis=1)
+    return to_parent_planes(sub, p), (PR, rshift), (PC, cshift)
 
 
 def m2l_folded(me_halo: jnp.ndarray, level: int, p: int, row0: int = 0,
-               halo: int = M2L_HALO) -> jnp.ndarray:
-    """Parity-folded M2L over a row slab with ghost rows attached.
+               halo: int = M2L_HALO, col0: int = 0,
+               col_halo: int = 0) -> jnp.ndarray:
+    """Parity-folded M2L over a slab/tile with ghost data attached.
 
-    ``me_halo``: (rows + 2*halo, cols, p) — the slab's interior rows plus
-    ``halo`` ghost rows above and below (zeros at domain edges, exchanged
-    halos under ``shard_map``).  Columns span the full grid width (even).
-    ``row0`` is the global row index of the first interior row and anchors
-    the parity pattern; any alignment is supported given enough halo.
-    Returns the (rows, cols, p) LE slab.
+    ``me_halo``: (rows + 2*halo, cols + 2*col_halo, p) — the interior plus
+    ``halo`` ghost rows above and below and ``col_halo`` ghost columns left
+    and right (zeros at domain edges, exchanged halos under ``shard_map``).
+    With ``col_halo=0`` columns span the full grid width (even) and the
+    column window is zero-padded internally.  ``row0``/``col0`` are the
+    global indices of the first interior row/column and anchor the parity
+    pattern; any alignment is supported given enough halo.  Returns the
+    (rows, cols, p) LE slab.
 
     This is the single M2L implementation behind the serial driver, the
-    sharded driver, and the jnp reference; the Pallas kernel
-    (kernels/m2l.py) computes the same contraction tile by tile.
+    sharded driver (1-D bands and 2-D tiles), and the jnp reference; the
+    Pallas kernel (kernels/m2l.py) computes the same contraction tile by
+    tile.
     """
     rows = me_halo.shape[0] - 2 * halo
-    PC = me_halo.shape[1] // 2
-    stack, PR, shift = m2l_slab_stack(me_halo, p, row0, halo)
+    cols = me_halo.shape[1] - 2 * col_halo
+    stack, (PR, rshift), (PC, cshift) = m2l_slab_stack(me_halo, p, row0, halo,
+                                                       col0, col_halo)
     W = m2l_folded_operator(p)
     acc = jnp.zeros((PR, PC, 4 * p), dtype=me_halo.dtype)
     for d, (Dx, Dy) in enumerate(PARENT_NEIGH8):
         src = stack[1 + Dy:1 + Dy + PR, 1 + Dx:1 + Dx + PC, :]
         acc = acc + jnp.einsum("yxa,ab->yxb", src,
                                jnp.asarray(W[d], dtype=me_halo.dtype))
-    le = from_parent_planes(acc, p)                        # (2PR, cols, p)
-    return jax.lax.slice_in_dim(le, shift, shift + rows, axis=0) / box_size(level)
+    le = from_parent_planes(acc, p)                        # (2PR, 2PC, p)
+    le = jax.lax.slice_in_dim(le, rshift, rshift + rows, axis=0)
+    le = jax.lax.slice_in_dim(le, cshift, cshift + cols, axis=1)
+    return le / box_size(level)
 
 
 def m2l_reference(me: jnp.ndarray, level: int, p: int) -> jnp.ndarray:

@@ -27,22 +27,28 @@ from .quadtree import P2P_OFFSETS, Tree, box_centers, box_size
 
 
 def m2l_slab_fn(p: int, use_kernels: bool = False):
-    """Returns ``fn(me_halo, level, row0=0, halo=M2L_HALO) -> le_slab``.
+    """Returns ``fn(me_halo, level, row0=0, halo=M2L_HALO, col0=0,
+    col_halo=0) -> le_slab``.
 
-    ``me_halo`` carries ``halo`` ghost rows top and bottom (zeros at domain
-    edges, exchanged halos under ``shard_map``); ``row0`` anchors the global
-    row parity.  Both the jnp path and the Pallas kernel path implement the
-    same parity-folded contraction (exactly 27 interactions per box).
+    ``me_halo`` carries ``halo`` ghost rows top and bottom — and, when
+    ``col_halo > 0``, ghost columns left and right (2-D tiles) — zeros at
+    domain edges, exchanged halos under ``shard_map``; ``row0``/``col0``
+    anchor the global parity.  Both the jnp path and the Pallas kernel path
+    implement the same parity-folded contraction (exactly 27 interactions
+    per box).
     """
     if use_kernels:
         from ..kernels import ops as kops
 
-        def fn(me_halo, level, row0=0, halo=ex.M2L_HALO):
-            return kops.m2l_apply_slab(me_halo, level, p, row0=row0, halo=halo)
+        def fn(me_halo, level, row0=0, halo=ex.M2L_HALO, col0=0, col_halo=0):
+            return kops.m2l_apply_slab(me_halo, level, p, row0=row0,
+                                       halo=halo, col0=col0,
+                                       col_halo=col_halo)
         return fn
 
-    def fn(me_halo, level, row0=0, halo=ex.M2L_HALO):
-        return ex.m2l_folded(me_halo, level, p, row0=row0, halo=halo)
+    def fn(me_halo, level, row0=0, halo=ex.M2L_HALO, col0=0, col_halo=0):
+        return ex.m2l_folded(me_halo, level, p, row0=row0, halo=halo,
+                             col0=col0, col_halo=col_halo)
     return fn
 
 

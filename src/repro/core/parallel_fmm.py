@@ -1,40 +1,51 @@
 """Distributed FMM under ``shard_map`` (paper §4, TPU-native form).
 
-Execution layout ("mode A", DESIGN.md §3/§7): the leaf grid is sharded into
-row-slab *bands* along y, described by a static :class:`~repro.core.plan.SlabPlan`
-— contiguous, parity-even bands of unequal height, padded to ``rows_max``
-so shapes stay static.  The plan is produced by the cost-model partitioner
-(core/plan.py over core/partition.py), which makes the paper's load
-balancer actually schedule the sharded execution instead of assuming
-``n // P`` rows per device.  Levels deep enough that band boundaries stay
+Execution layout ("mode A", DESIGN.md §3/§7/§8): the leaf grid is sharded
+into device tiles described by a static execution plan — either a 1-D
+:class:`~repro.core.plan.SlabPlan` (contiguous, parity-even row bands) or a
+2-D :class:`~repro.core.plan.BlockPlan` (a ``Pr x Pc`` tensor grid of
+parity-even row-x-column tiles).  Both kinds execute through ONE body: a
+slab is simply the ``Pr x 1`` special case of a block (``SlabPlan.as_block``),
+so there are no duplicated drivers.  The plan is produced by the cost-model
+partitioner (core/plan.py over core/partition.py), which makes the paper's
+load balancer actually schedule the sharded execution instead of assuming
+``n // P`` rows per device.  Levels deep enough that tile boundaries stay
 aligned are sharded the same way; levels below the cut form the paper's
 *root tree* and are replicated via one ``all_gather`` (the SPMD equivalent
 of the paper's root-tree rank + broadcast, with no serial bottleneck).
 
 Communication structure (maps 1:1 onto the paper's Fig 3):
   * M2M / L2L  — subtree <-> root tree only: the single all_gather at the
-    cut level, reassembled across unequal bands by a static owner map
+    cut level, reassembled across unequal tiles by static 2-D owner maps
     (paper: "no communication between subtrees" for these ops);
-  * M2L        — lateral/diagonal neighbor bands: ±2-row halo exchange per
-    sharded level via ``lax.ppermute``, sliced at each band's *valid* edge
-    (parity folding shrinks the paper's ±3 child-box halo to ±1 parent
-    row — DESIGN.md §4);
-  * P2P        — neighbor particles: ±1-row halo of (z, q, mask).
+  * M2L        — lateral/diagonal neighbor tiles: ±2-row/column halo
+    exchange per sharded level via ``lax.ppermute``, sliced at each tile's
+    *valid* edges (parity folding shrinks the paper's ±3 child-box halo to
+    ±1 parent line — DESIGN.md §4);
+  * P2P        — neighbor particles: ±1-row/column halo of (z, q, mask).
+
+The two-axis exchange runs columns first, then rows *of the column-extended
+strips*: because the tile grid is a tensor product, east/west neighbors own
+my exact row range, so the row strips carry the freshly attached column
+halos and the diagonal (corner) ghosts arrive with them — M2L's and P2P's
+corner interactions are complete with two ppermute hops per axis and no
+separate corner transfer.
 
 M2L and P2P themselves are the SAME slab implementations the serial driver
-uses (core/fmm.py: ``m2l_slab_fn`` / ``p2p_slab_fn``); this module only
-adds the halo exchanges, the band padding, and the root-tree replication
-around them.  Padded rows carry ``mask=False`` and zero expansions and are
-masked out of the result.
+uses (core/fmm.py: ``m2l_slab_fn`` / ``p2p_slab_fn``, column halos handled
+by the shared ``expansions.m2l_slab_stack`` geometry); this module only
+adds the halo exchanges, the tile padding, and the root-tree replication
+around them.  Padded rows/columns carry ``mask=False`` and zero expansions
+and are masked out of the result.
 
-The cost model (core/cost_model.py) predicts exactly these volumes; the
-partitioner chooses the band decomposition and ``core/stepper.py`` closes
-the dynamic feedback loop.
+The cost model (core/cost_model.py) predicts these volumes and
+``plan.halo_volume`` prices them per plan; the partitioner chooses the tile
+decomposition and ``core/stepper.py`` closes the dynamic feedback loop.
 """
 from __future__ import annotations
 
 import functools
-from typing import Optional
+from typing import Optional, Union
 
 import numpy as np
 import jax
@@ -43,7 +54,7 @@ from jax.sharding import Mesh, PartitionSpec as P
 
 from . import expansions as ex
 from . import fmm
-from .plan import SlabPlan, uniform_plan
+from .plan import BlockPlan, SlabPlan, uniform_plan
 from .quadtree import Tree, box_centers, box_size
 
 # jax >= 0.6 exposes shard_map at the top level; older versions under
@@ -59,93 +70,102 @@ _CHECK_KW = next((k for k in ("check_rep", "check_vma")
                   if k in _inspect.signature(_shard_map).parameters), None)
 
 
-def _band_halo(x: jnp.ndarray, width: int, rows_valid, axis_name: str,
-               axis_size: int) -> jnp.ndarray:
-    """Attach ±``width`` ghost rows at the *valid* edges of a padded band.
+def _tile_halo(x: jnp.ndarray, width: int, rows_valid, cols_valid,
+               axis_name: str, grid: tuple[int, int]) -> jnp.ndarray:
+    """Attach ±``width`` ghost rows AND columns at the *valid* tile edges.
 
-    ``x`` is a (rows_max, ...) band whose rows ``[0, rows_valid)`` are
-    valid (padding rows are zero).  Returns (rows_max + 2*width, ...): my
-    band at offset ``width``, the upper neighbor's bottom ``width`` valid
-    rows at ``[0, width)``, and the lower neighbor's top ``width`` rows
-    placed *at* ``width + rows_valid`` — i.e. immediately after my valid
-    rows, where the slab implementations expect adjacent data.  Edge
-    devices receive zeros (consistent with the serial zero padding of the
-    domain boundary).  Two ``ppermute`` calls: one up, one down.
+    ``x`` is a (rows_max, cols_max, ...) padded tile whose rows
+    ``[0, rows_valid)`` and columns ``[0, cols_valid)`` are valid (padding
+    is zero).  Returns (rows_max + 2w, cols_max + 2w, ...): my tile at
+    offset ``(w, w)``, neighbors' edge data placed immediately adjacent to
+    my valid extents (the upper/left neighbor's strips at offset 0, the
+    lower/right neighbor's at ``w + rows_valid`` / ``w + cols_valid``).
+
+    Columns are exchanged first; the row strips are then cut from the
+    column-extended buffer, so they carry the column halos and the corner
+    (diagonal-neighbor) ghosts ride along — no separate corner transfer.
+    Domain-edge tiles receive zeros (consistent with the serial zero
+    padding).  Devices are laid out ``d = i * Pc + j`` on the 1-D mesh
+    axis; all four exchanges are single-hop ``ppermute``.
     """
-    P_ = axis_size
-    shape = (width,) + x.shape[1:]
-    if P_ == 1:
-        recv_top = recv_bot = jnp.zeros(shape, x.dtype)
+    Pr, Pc = grid
+    w = width
+    rmax, cmax = x.shape[0], x.shape[1]
+    trail = x.shape[2:]
+    # -- phase 1: columns (east/west neighbors own my exact row range) -----
+    if Pc == 1:
+        recv_l = recv_r = jnp.zeros((rmax, w) + trail, x.dtype)
     else:
-        bot_valid = jax.lax.dynamic_slice_in_dim(x, rows_valid - width, width, 0)
-        top_valid = x[:width]
-        # my bottom rows -> device below's top halo
-        recv_top = jax.lax.ppermute(bot_valid, axis_name,
-                                    [(d, d + 1) for d in range(P_ - 1)])
-        # my top rows -> device above's bottom halo
-        recv_bot = jax.lax.ppermute(top_valid, axis_name,
-                                    [(d + 1, d) for d in range(P_ - 1)])
-    buf = jnp.zeros((x.shape[0] + 2 * width,) + x.shape[1:], x.dtype)
-    buf = jax.lax.dynamic_update_slice_in_dim(buf, x, width, 0)
-    buf = jax.lax.dynamic_update_slice_in_dim(buf, recv_top, 0, 0)
-    buf = jax.lax.dynamic_update_slice_in_dim(buf, recv_bot, width + rows_valid, 0)
+        right_edge = jax.lax.dynamic_slice_in_dim(x, cols_valid - w, w, 1)
+        left_edge = x[:, :w]
+        # my right edge -> east neighbor's left halo, and vice versa
+        recv_l = jax.lax.ppermute(right_edge, axis_name,
+                                  [(i * Pc + j, i * Pc + j + 1)
+                                   for i in range(Pr) for j in range(Pc - 1)])
+        recv_r = jax.lax.ppermute(left_edge, axis_name,
+                                  [(i * Pc + j, i * Pc + j - 1)
+                                   for i in range(Pr) for j in range(1, Pc)])
+    xc = jnp.zeros((rmax, cmax + 2 * w) + trail, x.dtype)
+    xc = jax.lax.dynamic_update_slice_in_dim(xc, x, w, 1)
+    xc = jax.lax.dynamic_update_slice_in_dim(xc, recv_l, 0, 1)
+    xc = jax.lax.dynamic_update_slice_in_dim(xc, recv_r, w + cols_valid, 1)
+    # -- phase 2: rows of the column-extended strips (corners ride along) --
+    if Pr == 1:
+        recv_t = recv_b = jnp.zeros((w, cmax + 2 * w) + trail, x.dtype)
+    else:
+        bot_edge = jax.lax.dynamic_slice_in_dim(xc, rows_valid - w, w, 0)
+        top_edge = xc[:w]
+        recv_t = jax.lax.ppermute(bot_edge, axis_name,
+                                  [(d, d + Pc) for d in range((Pr - 1) * Pc)])
+        recv_b = jax.lax.ppermute(top_edge, axis_name,
+                                  [(d, d - Pc) for d in range(Pc, Pr * Pc)])
+    buf = jnp.zeros((rmax + 2 * w, cmax + 2 * w) + trail, x.dtype)
+    buf = jax.lax.dynamic_update_slice_in_dim(buf, xc, w, 0)
+    buf = jax.lax.dynamic_update_slice_in_dim(buf, recv_t, 0, 0)
+    buf = jax.lax.dynamic_update_slice_in_dim(buf, recv_b, w + rows_valid, 0)
     return buf
 
 
-def _sharded_depth(plan: SlabPlan, min_rows: int = 4) -> int:
-    """How many levels (from the leaves up) the plan's bands can shard.
-
-    Level ``L - s`` is shardable when every band boundary stays even after
-    ``s`` halvings (halo-2 slab contract needs even-aligned, even-length
-    bands) and the smallest band keeps ``min_rows`` rows at the coarsest
-    sharded level.  Parity-even plans always support depth 1 when L >= 3.
-    """
-    if plan.level < 3:
-        return 0
-    m = 1
-    align = plan.alignment()
-    while (m + 1 <= align and plan.level - (m + 1) >= 2
-           and (min(plan.rows) >> m) >= min_rows):
-        m += 1
-    return m
-
-
-def _parallel_fmm_body(z, q, mask, *, plan: SlabPlan, l_cut: int, p: int,
-                       sigma, axis_name: str, axis_size: int,
-                       use_kernels: bool):
-    """Runs on each device over its padded (rows_max, n, s) band."""
+def _parallel_fmm_body(z, q, mask, *, plan: BlockPlan, l_cut: int, p: int,
+                       sigma, axis_name: str, use_kernels: bool):
+    """Runs on each device over its padded (rows_max, cols_max, s) tile."""
     L = plan.level
-    P_ = axis_size
-    rows_max = plan.rows_max
+    Pr, Pc = plan.grid
+    rows_max, cols_max = plan.rows_max, plan.cols_max
     dtype = z.dtype
 
     m2l_slab = fmm.m2l_slab_fn(p, use_kernels)
     m2l_grid = fmm.m2l_grid_fn(p, use_kernels)
     p2p_slab = fmm.p2p_slab_fn(use_kernels)
 
-    # static per-device band records, looked up by device index
+    # static per-device tile records, looked up by device index
     di = jax.lax.axis_index(axis_name)
-    my_row0 = jnp.asarray(np.asarray(plan.row0, np.int32))[di]
-    my_rows = jnp.asarray(np.asarray(plan.rows, np.int32))[di]
+    dev = np.arange(Pr * Pc)
+    my_row0 = jnp.asarray(np.asarray(plan.row0, np.int32)[dev // Pc])[di]
+    my_rows = jnp.asarray(np.asarray(plan.rows, np.int32)[dev // Pc])[di]
+    my_col0 = jnp.asarray(np.asarray(plan.col0, np.int32)[dev % Pc])[di]
+    my_cols = jnp.asarray(np.asarray(plan.cols, np.int32)[dev % Pc])[di]
 
-    # centers padded below so the dynamic slice never clamps short bands
+    # centers padded below/right so the dynamic slice never clamps
     centers = jnp.asarray(box_centers(L), dtype=dtype)
-    centers = jnp.pad(centers, ((0, rows_max), (0, 0)))
-    my_centers = jax.lax.dynamic_slice_in_dim(centers, my_row0, rows_max, 0)
+    centers = jnp.pad(centers, ((0, rows_max), (0, cols_max)))
+    my_centers = jax.lax.dynamic_slice(centers, (my_row0, my_col0),
+                                       (rows_max, cols_max))
 
     # ---- upward sweep -----------------------------------------------------
-    # Padding rows have mask=False everywhere, so their MEs are exactly zero
-    # and M2M keeps them zero at every coarser band level.
+    # Padding rows/cols have mask=False everywhere, so their MEs are exactly
+    # zero and M2M keeps them zero at every coarser tile level.
     me = {L: ex.p2m(z, q, mask, my_centers, box_size(L), p)}
     for lv in range(L, l_cut, -1):
         me[lv - 1] = ex.m2m(me[lv], p)
 
     # gather the cut level -> replicated root tree (paper's M2M to root);
-    # unequal bands are reassembled by the plan's static owner/local maps.
+    # unequal tiles are reassembled by the plan's static 2-D owner maps.
     cut_shift = L - l_cut
     gathered = jax.lax.all_gather(me[l_cut], axis_name, axis=0, tiled=False)
-    owner, local = plan.band_row_maps(cut_shift)
-    me_cut_full = gathered[jnp.asarray(owner), jnp.asarray(local)]
+    owner, loc_r, loc_c = plan.tile_maps(cut_shift)
+    me_cut_full = gathered[jnp.asarray(owner), jnp.asarray(loc_r),
+                           jnp.asarray(loc_c)]
     me_rep = {l_cut: me_cut_full}
     for lv in range(l_cut, 0, -1):
         me_rep[lv - 1] = ex.m2m(me_rep[lv], p)
@@ -158,35 +178,40 @@ def _parallel_fmm_body(z, q, mask, *, plan: SlabPlan, l_cut: int, p: int,
         if lv > 2:
             le_rep[lv] = le_rep[lv] + ex.l2l(le_rep[lv - 1], p)
 
-    def slice_band(grid, shift):
-        """My (rows_max >> shift)-row band out of a replicated level grid."""
-        rmax = rows_max >> shift
-        padded = jnp.pad(grid, ((0, rmax),) + ((0, 0),) * (grid.ndim - 1))
-        return jax.lax.dynamic_slice_in_dim(padded, my_row0 >> shift, rmax, 0)
+    def slice_tile(grid_lv, shift):
+        """My padded tile out of a replicated level grid."""
+        rmax, cmax = rows_max >> shift, cols_max >> shift
+        padded = jnp.pad(grid_lv, ((0, rmax), (0, cmax)) +
+                         ((0, 0),) * (grid_lv.ndim - 2))
+        return jax.lax.dynamic_slice(
+            padded, (my_row0 >> shift, my_col0 >> shift) +
+            (0,) * (grid_lv.ndim - 2),
+            (rmax, cmax) + grid_lv.shape[2:])
 
-    # sharded levels l_cut+1 .. L: exchange ±M2L_HALO ghost rows at the
-    # valid band edges, then the identical slab implementation.  Bands are
-    # even-aligned at every sharded level (plan parity + _sharded_depth),
-    # so row0=0 anchors the correct parity and the 2-row halo suffices.
-    le_prev = None  # my band's LE at the previous (coarser) level
+    # sharded levels l_cut+1 .. L: exchange ±M2L_HALO ghost rows/columns at
+    # the valid tile edges, then the identical slab implementation.  Tiles
+    # are even-aligned on both axes at every sharded level (plan parity +
+    # sharded_depth), so row0=col0=0 anchors the correct parity and the
+    # 2-line halo suffices.
+    le_prev = None  # my tile's LE at the previous (coarser) level
     if L > l_cut:
-        le_prev = slice_band(le_rep[l_cut], cut_shift)
+        le_prev = slice_tile(le_rep[l_cut], cut_shift)
     for lv in range(l_cut + 1, L + 1):
-        rv = my_rows >> (L - lv)
-        me_buf = _band_halo(me[lv], ex.M2L_HALO, rv, axis_name, P_)
-        le_lv = m2l_slab(me_buf, lv)
+        shift = L - lv
+        rv, cv = my_rows >> shift, my_cols >> shift
+        me_buf = _tile_halo(me[lv], ex.M2L_HALO, rv, cv, axis_name, (Pr, Pc))
+        le_lv = m2l_slab(me_buf, lv, col_halo=ex.M2L_HALO)
         le_lv = le_lv + ex.l2l(le_prev, p)
         le_prev = le_lv
-    le_leaf = le_prev if L > l_cut else slice_band(le_rep[L], 0)
+    le_leaf = le_prev if L > l_cut else slice_tile(le_rep[L], 0)
 
     # ---- evaluation -------------------------------------------------------
     far = ex.l2p(le_leaf, z, my_centers, box_size(L), p)
-    cpad = ((0, 0), (1, 1), (0, 0))
-    near = p2p_slab(jnp.pad(_band_halo(z, 1, my_rows, axis_name, P_), cpad),
-                    jnp.pad(_band_halo(q, 1, my_rows, axis_name, P_), cpad),
-                    jnp.pad(_band_halo(mask, 1, my_rows, axis_name, P_), cpad),
+    near = p2p_slab(_tile_halo(z, 1, my_rows, my_cols, axis_name, (Pr, Pc)),
+                    _tile_halo(q, 1, my_rows, my_cols, axis_name, (Pr, Pc)),
+                    _tile_halo(mask, 1, my_rows, my_cols, axis_name, (Pr, Pc)),
                     sigma)
-    # padded rows (mask=False) are dropped here
+    # padded rows/cols (mask=False) are dropped here
     return jnp.where(mask, far + near, 0.0)
 
 
@@ -195,17 +220,21 @@ def _parallel_fmm_body(z, q, mask, *, plan: SlabPlan, l_cut: int, p: int,
 def parallel_fmm_velocity(tree: Tree, p: int, mesh: Optional[Mesh] = None,
                           mesh_axis: str = "data",
                           use_kernels: bool = False,
-                          plan: Optional[SlabPlan] = None) -> jnp.ndarray:
-    """Distributed FMM evaluation driven by a :class:`SlabPlan`.
+                          plan: Optional[Union[SlabPlan, BlockPlan]] = None
+                          ) -> jnp.ndarray:
+    """Distributed FMM evaluation driven by an execution plan.
 
-    ``plan`` maps devices to contiguous parity-even leaf-row bands (the
-    cost-model partitioner's output); ``plan=None`` falls back to the
-    uniform equal-count strawman.  The tree is resharded into the plan's
-    padded band layout, evaluated under ``shard_map``, and scattered back
-    to standard layout, so the result is independent of the plan to f32
-    roundoff.  Falls back to a 1-device mesh when ``mesh`` is None.
-    ``use_kernels=True`` routes M2L/P2P through the same Pallas kernels the
-    serial driver uses (interpret mode off-TPU).
+    ``plan`` maps devices to contiguous parity-even leaf-row bands
+    (:class:`SlabPlan`) or row-x-column tiles (:class:`BlockPlan`) — the
+    cost-model partitioner's output; ``plan=None`` falls back to the
+    uniform equal-count band strawman (``uniform_plan`` handles any device
+    count, including non-dividing P, via base/extra parent rows).  The tree
+    is resharded into the plan's padded tile layout, evaluated under
+    ``shard_map``, and scattered back to standard layout, so the result is
+    independent of the plan to f32 roundoff.  Falls back to a 1-device mesh
+    when ``mesh`` is None.  ``use_kernels=True`` routes M2L/P2P through the
+    same Pallas kernels the serial driver uses (interpret mode off-TPU) on
+    both plan kinds.
     """
     if mesh is None:
         mesh = Mesh(np.array(jax.devices()[:1]), ("data",))
@@ -214,31 +243,30 @@ def parallel_fmm_velocity(tree: Tree, p: int, mesh: Optional[Mesh] = None,
     if tree.level < 2:
         raise ValueError("parallel FMM requires tree level >= 2")
     if plan is None:
-        if n % P_ or (n // P_) % 2:
-            raise ValueError(
-                f"grid side {n} must split into even slabs over {P_} devices")
         plan = uniform_plan(tree.level, P_)
     if plan.level != tree.level:
         raise ValueError(f"plan level {plan.level} != tree level {tree.level}")
     if plan.nparts != P_:
         raise ValueError(f"plan has {plan.nparts} bands for {P_} devices")
+    block = plan.as_block() if isinstance(plan, SlabPlan) else plan
 
-    rows_max = plan.rows_max
-    identity = plan.is_uniform and P_ * rows_max == n
+    rows_max, cols_max = block.rows_max, block.cols_max
+    identity = (block.grid[1] == 1 and block.is_uniform
+                and P_ * rows_max == n)
     if identity:
         z_sh, q_sh, m_sh = tree.z, tree.q, tree.mask
     else:
-        idx, valid = plan.gather_index()
-        idx = jnp.asarray(idx)
-        vrow = jnp.asarray(valid)[:, None, None]
-        z_sh = jnp.where(vrow, tree.z[idx], 0)
-        q_sh = jnp.where(vrow, tree.q[idx], 0)
-        m_sh = tree.mask[idx] & vrow
+        src_r, src_c, valid = block.gather_index()
+        src_r, src_c = jnp.asarray(src_r), jnp.asarray(src_c)
+        v = jnp.asarray(valid)[:, :, None]
+        z_sh = jnp.where(v, tree.z[src_r, src_c], 0)
+        q_sh = jnp.where(v, tree.q[src_r, src_c], 0)
+        m_sh = tree.mask[src_r, src_c] & v
 
-    l_cut = plan.level - _sharded_depth(plan)
-    body = functools.partial(_parallel_fmm_body, plan=plan, l_cut=l_cut, p=p,
+    l_cut = block.level - block.sharded_depth()
+    body = functools.partial(_parallel_fmm_body, plan=block, l_cut=l_cut, p=p,
                              sigma=tree.sigma, axis_name=mesh_axis,
-                             axis_size=P_, use_kernels=use_kernels)
+                             use_kernels=use_kernels)
     spec = P(mesh_axis, None, None)
     # pallas_call has no shard_map replication rule; disable the check on
     # the kernel route (numerics are unaffected — outputs stay sharded).
@@ -246,4 +274,7 @@ def parallel_fmm_velocity(tree: Tree, p: int, mesh: Optional[Mesh] = None,
     fn = _shard_map(body, mesh=mesh, in_specs=(spec, spec, spec),
                     out_specs=spec, **kwargs)
     w = fn(z_sh, q_sh, m_sh)
-    return w if identity else w[jnp.asarray(plan.scatter_index())]
+    if identity:
+        return w
+    sct_r, sct_c = block.scatter_index()
+    return w[jnp.asarray(sct_r), jnp.asarray(sct_c)]

@@ -83,16 +83,21 @@ class VortexStepper:
 
     ``plan_method``: 'uniform' (strawman), 'model' (a-priori cost-model
     plan), with ``dynamic=True`` adding re-planning from drifted counts and
-    measured times.  ``measured_times_fn(stepper) -> (nparts,) seconds`` is
-    the injection point for real per-device timers (tests use it to emulate
-    heterogeneous pools); without it, dynamic re-planning is driven by the
-    particle distribution alone.
+    measured times.  ``plan_grid=(Pr, Pc)`` schedules a 2-D
+    :class:`BlockPlan` tile grid (``Pr * Pc`` must equal the mesh size)
+    instead of 1-D row bands; re-planning then works on per-tile weights
+    through the same ``replan`` / ``measured_row_scale`` interface.
+    ``measured_times_fn(stepper) -> (nparts,) seconds`` is the injection
+    point for real per-device timers (tests use it to emulate heterogeneous
+    pools); without it, dynamic re-planning is driven by the particle
+    distribution alone.
     """
 
     def __init__(self, positions: np.ndarray, gamma: np.ndarray, sigma: float,
                  *, p: int = 12, dt: float = 0.005, mesh=None,
                  mesh_axis: str = "data", use_kernels: bool = False,
                  plan_method: str = "model", dynamic: bool = False,
+                 plan_grid: Optional[tuple[int, int]] = None,
                  replan_every: int = 4, replan_tol: float = 0.05,
                  target_per_box: float = 8.0, slots_headroom: float = 2.0,
                  occupancy_guard: float = 0.9, cut: Optional[int] = None,
@@ -104,6 +109,7 @@ class VortexStepper:
         self.use_kernels = use_kernels
         self.plan_method = plan_method
         self.dynamic = dynamic
+        self.plan_grid = None if plan_grid is None else tuple(plan_grid)
         self.replan_every = max(int(replan_every), 1)
         self.replan_tol = float(replan_tol)
         self.target_per_box = float(target_per_box)
@@ -126,8 +132,12 @@ class VortexStepper:
         return 1 if self.mesh is None else self.mesh.shape[self.mesh_axis]
 
     def _min_level(self) -> int:
-        # every device needs at least one parent row (2 leaf rows)
-        need = max(2 * self.nparts, 4)
+        # every device needs at least one parent row (2 leaf rows); a 2-D
+        # grid only needs that per axis
+        if self.plan_grid is not None:
+            need = max(2 * max(self.plan_grid), 4)
+        else:
+            need = max(2 * self.nparts, 4)
         return max(2, math.ceil(math.log2(need)))
 
     def _build_host(self, positions, gamma, payload_values=None):
@@ -151,9 +161,15 @@ class VortexStepper:
         cut = self._cut if self._cut is not None else min(level - 1, 4)
         self.params = ModelParams(level=level, cut=max(cut, 1), p=self.p,
                                   slots=slots)
+        if self.plan_grid is not None and \
+                self.plan_grid[0] * self.plan_grid[1] != self.nparts:
+            raise ValueError(f"plan_grid {self.plan_grid} has "
+                             f"{self.plan_grid[0] * self.plan_grid[1]} tiles"
+                             f" for {self.nparts} devices")
         counts = self.index.counts
         self.plan = plan_from_counts(counts, self.params, self.nparts,
-                                     method=self.plan_method)
+                                     method=self.plan_method,
+                                     grid=self.plan_grid)
         self.subtree_assign = assignment_from_plan(self.plan, self.params.cut)
         self._cached_lb = plan_stats(self.plan, counts,
                                      self.params)["load_balance"]
@@ -197,7 +213,7 @@ class VortexStepper:
             measured_times = self.measured_times_fn(self)
         new_plan = replan(counts, self.params, self.nparts,
                           prev_plan=self.plan, measured_times=measured_times,
-                          method=self.plan_method)
+                          method=self.plan_method, grid=self.plan_grid)
         if new_plan == self.plan:
             return False
         # adopt when the modeled bottleneck (measured-rate-weighted when

@@ -59,20 +59,23 @@ def _m2l_kernel(sr_ref, si_ref, wr_ref, wi_ref, or_ref, oi_ref,
 
 
 @functools.partial(jax.jit, static_argnames=("level", "p", "row0", "halo",
-                                             "block", "interpret"))
+                                             "col0", "col_halo", "block",
+                                             "interpret"))
 def m2l_pallas_slab(me_halo: jnp.ndarray, level: int, p: int, row0: int = 0,
-                    halo: int = ex.M2L_HALO, block: tuple[int, int] = (8, 8),
+                    halo: int = ex.M2L_HALO, col0: int = 0, col_halo: int = 0,
+                    block: tuple[int, int] = (8, 8),
                     interpret: bool = True) -> jnp.ndarray:
-    """Parity-folded M2L over a halo'd row slab — same contract as
-    ``expansions.m2l_folded``: ``me_halo`` is (rows + 2*halo, cols, p) with
-    ghost rows attached, ``row0`` anchors the global parity.  Returns the
-    (rows, cols, p) LE slab.
+    """Parity-folded M2L over a halo'd slab/tile — same contract as
+    ``expansions.m2l_folded``: ``me_halo`` is (rows + 2*halo,
+    cols + 2*col_halo, p) with ghost data attached, ``row0``/``col0``
+    anchor the global parity (``col_halo=0`` means full-width columns,
+    zero-padded internally).  Returns the (rows, cols, p) LE slab.
     """
     rows = me_halo.shape[0] - 2 * halo
-    cols = me_halo.shape[1]
-    PC = cols // 2
+    cols = me_halo.shape[1] - 2 * col_halo
     p4 = 4 * p
-    stack, PR, shift = ex.m2l_slab_stack(me_halo, p, row0, halo)
+    stack, (PR, shift), (PC, cshift) = ex.m2l_slab_stack(me_halo, p, row0,
+                                                         halo, col0, col_halo)
 
     BY, BX = min(block[0], PR), min(block[1], PC)
     PRp = -(-PR // BY) * BY
@@ -104,8 +107,10 @@ def m2l_pallas_slab(me_halo: jnp.ndarray, level: int, p: int, row0: int = 0,
     )(sr, si, wr, wi)
 
     acc = (br[:PR, :PC] + 1j * bi[:PR, :PC]).astype(me_halo.dtype)
-    le = ex.from_parent_planes(acc, p)                   # (2PR, cols, p)
-    return jax.lax.slice_in_dim(le, shift, shift + rows, axis=0) / box_size(level)
+    le = ex.from_parent_planes(acc, p)                   # (2PR, 2PC, p)
+    le = jax.lax.slice_in_dim(le, shift, shift + rows, axis=0)
+    le = jax.lax.slice_in_dim(le, cshift, cshift + cols, axis=1)
+    return le / box_size(level)
 
 
 def m2l_pallas(me: jnp.ndarray, level: int, p: int,

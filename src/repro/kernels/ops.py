@@ -37,10 +37,12 @@ def m2l_apply(me, level: int, p: int, block: tuple[int, int] = (8, 8)):
 
 
 def m2l_apply_slab(me_halo, level: int, p: int, row0: int = 0,
-                   halo: int = _ex.M2L_HALO,
+                   halo: int = _ex.M2L_HALO, col0: int = 0, col_halo: int = 0,
                    block: tuple[int, int] = (8, 8)):
-    """Parity-folded M2L over a halo'd row slab (sharded driver)."""
+    """Parity-folded M2L over a halo'd row slab or 2-D tile (sharded
+    driver); ``col_halo>0`` means column ghosts are attached too."""
     return _m2l.m2l_pallas_slab(me_halo, level, p, row0=row0, halo=halo,
+                                col0=col0, col_halo=col_halo,
                                 block=block, interpret=_interpret())
 
 

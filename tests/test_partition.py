@@ -11,9 +11,10 @@ import pytest
 
 from repro.core import partition as pt
 from repro.core.cost_model import ModelParams
-from repro.core.plan import (SlabPlan, assignment_from_plan, plan_from_counts,
-                             plan_loads, plan_stats, replan, row_loads,
-                             uniform_plan)
+from repro.core.plan import (BlockPlan, SlabPlan, assignment_from_plan,
+                             block_plan_from_counts, cell_loads, halo_volume,
+                             plan_from_counts, plan_loads, plan_stats, replan,
+                             row_loads, uniform_block_plan, uniform_plan)
 from repro.core.vortex import lamb_oseen_particles
 
 
@@ -186,3 +187,155 @@ def test_assignment_from_plan_majority():
     assign = assignment_from_plan(plan, cut=2)   # 4x4 subtree grid
     assert assign.shape == (16,)
     assert (assign[:8] == 0).all() and (assign[8:] == 1).all()
+
+
+def test_uniform_plan_applies_measured_scale():
+    """The uniform strawman must react to measured-time feedback rather
+    than silently ignoring ``row_weight_scale`` (a dynamic stepper on
+    plan_method='uniform' re-splits on the measured slowdown field)."""
+    params = ModelParams(level=5, cut=3, p=8, slots=4)
+    counts = lamb_oseen_counts(params.level, m_side=100)
+    base = plan_from_counts(counts, params, 4, method="uniform")
+    assert base == uniform_plan(5, 4)
+    scale = np.ones(16)
+    scale[:4] = 4.0            # device 0's rows measured 4x slower
+    scaled = plan_from_counts(counts, params, 4, method="uniform",
+                              row_weight_scale=scale)
+    assert scaled.rows[0] < base.rows[0]
+    # the same feedback flows through replan for a uniform-method stepper
+    times = np.ones(4)
+    times[0] = 4.0
+    replanned = replan(counts, params, 4, prev_plan=base,
+                       measured_times=times, method="uniform")
+    assert replanned.rows[0] < base.rows[0]
+
+
+# ---------------------------------------------------------------------------
+# BlockPlan invariants — the 2-D contract the sharded driver depends on
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("grid", [(2, 2), (2, 3), (4, 2), (3, 3)])
+@pytest.mark.parametrize("method", ["uniform", "model"])
+def test_block_plan_tiles_cover_grid(grid, method):
+    params = ModelParams(level=5, cut=3, p=12, slots=4)
+    counts = lamb_oseen_counts(params.level, m_side=100)
+    plan = plan_from_counts(counts, params, grid[0] * grid[1],
+                            method=method, grid=grid)
+    assert isinstance(plan, BlockPlan) and plan.grid == grid
+    n = 1 << params.level
+    for b0, bl in ((plan.row0, plan.rows), (plan.col0, plan.cols)):
+        covered = []
+        for x0, x in zip(b0, bl):
+            assert x0 % 2 == 0 and x % 2 == 0 and x > 0   # parity-even
+            covered.extend(range(x0, x0 + x))
+        assert covered == list(range(n))                  # exact cover
+    # gather -> scatter round-trips the standard layout
+    src_r, src_c, valid = plan.gather_index()
+    x = np.arange(n * n).reshape(n, n)
+    sharded = np.where(valid, x[src_r, src_c], -1)
+    sct_r, sct_c = plan.scatter_index()
+    assert (sharded[sct_r, sct_c] == x).all()
+    # every grid cell has exactly one owner slot
+    assert valid.sum() == n * n
+    # tile maps agree with the leaf owner maps at shift 0
+    owner, lr, lc = plan.tile_maps(0)
+    oi, oj = plan.owner_of_row(), plan.owner_of_col()
+    assert (owner == oi[:, None] * grid[1] + oj[None, :]).all()
+
+
+def test_block_plan_rejects_bad_tiles():
+    with pytest.raises(ValueError):
+        BlockPlan(level=4, row0=(0, 8), rows=(8, 6), col0=(0,), cols=(16,))
+    with pytest.raises(ValueError):
+        BlockPlan(level=4, row0=(0,), rows=(16,), col0=(0, 5), cols=(5, 11))
+    with pytest.raises(ValueError):
+        BlockPlan(level=4, row0=(0, 6), rows=(8, 8), col0=(0,), cols=(16,))
+    with pytest.raises(ValueError):
+        plan_from_counts(np.zeros((16, 16)), ModelParams(4, 2, 8, 4), 4,
+                         grid=(2, 3))                     # grid != nparts
+    a = uniform_block_plan(5, (2, 3))
+    assert a == uniform_block_plan(5, (2, 3)) and hash(a) is not None
+
+
+def test_block_model_beats_uniform_and_cell_loads_are_consistent():
+    """2-D Eq-20: the model block plan never loses to the uniform block
+    strawman, and the 2-D cost field projects exactly onto row_loads."""
+    params = ModelParams(level=6, cut=4, p=12, slots=8)
+    counts = lamb_oseen_counts(params.level, m_side=160)
+    W = cell_loads(counts, params)
+    np.testing.assert_allclose(W.sum(axis=1), row_loads(counts, params))
+    for grid in ((2, 2), (2, 3), (4, 2), (4, 4)):
+        model = block_plan_from_counts(counts, params, grid, method="model")
+        uni = uniform_block_plan(params.level, grid)
+        lb_m = plan_stats(model, counts, params)["load_balance"]
+        lb_u = plan_stats(uni, counts, params)["load_balance"]
+        assert lb_m >= lb_u, (grid, lb_m, lb_u)
+        loads = plan_loads(model, counts, params)
+        assert loads.shape == (grid[0] * grid[1],)
+        assert loads.sum() == pytest.approx(W.sum())
+    # and strictly beats it on a grid where equal-count splits misalign
+    # with the vortex-centered distribution
+    model = block_plan_from_counts(counts, params, (2, 3), method="model")
+    assert plan_stats(model, counts, params)["load_balance"] > \
+        plan_stats(uniform_block_plan(params.level, (2, 3)), counts,
+                   params)["load_balance"]
+
+
+def test_block_halo_volume_beats_slab():
+    """The BlockPlan's reason to exist (acceptance-pinned): modeled halo
+    volume strictly below the 1-D SlabPlan's at P >= 8 on the Lamb-Oseen
+    lattice (and, as it happens, at P = 4 too)."""
+    params = ModelParams(level=6, cut=4, p=12, slots=8)
+    counts = lamb_oseen_counts(params.level, m_side=160)
+    for nparts, grid in ((8, (4, 2)), (16, (4, 4))):
+        slab = plan_from_counts(counts, params, nparts, method="model")
+        block = block_plan_from_counts(counts, params, grid, method="model")
+        hs = halo_volume(slab, params)["total"]
+        hb = halo_volume(block, params)["total"]
+        assert hb < hs, (nparts, hs, hb)
+        # the driver-exact (padded-extent) volume wins too
+        es = halo_volume(slab, params, executed=True)["total"]
+        eb = halo_volume(block, params, executed=True)["total"]
+        assert eb < es, (nparts, es, eb)
+
+
+def test_block_replan_sheds_tiles_off_slowed_device():
+    """Measured-time feedback at tile granularity: a 3x-slower device's
+    modeled load drops after a 2-D re-plan (no 1-D collapse in the loop)."""
+    params = ModelParams(level=6, cut=4, p=12, slots=8)
+    counts = lamb_oseen_counts(params.level, m_side=160)
+    plan0 = block_plan_from_counts(counts, params, (2, 3), method="model")
+    loads0 = plan_loads(plan0, counts, params)
+    slow = 0
+    times = loads0.copy()
+    times[slow] *= 3.0
+    plan1 = replan(counts, params, 6, prev_plan=plan0, measured_times=times)
+    assert isinstance(plan1, BlockPlan) and plan1.grid == (2, 3)
+    assert plan_loads(plan1, counts, params)[slow] < loads0[slow]
+
+
+def test_replan_migrates_slab_to_grid_with_row_scale():
+    """replan(prev_plan=<SlabPlan>, grid=(Pr, Pc)) applies the 1-D row
+    slowdowns per ROW of the 2-D cell field (not broadcast along columns):
+    a slow top band must shrink the new plan's top row band."""
+    params = ModelParams(level=6, cut=4, p=12, slots=8)
+    counts = lamb_oseen_counts(params.level, m_side=160)
+    slab = plan_from_counts(counts, params, 6, method="model")
+    times = plan_loads(slab, counts, params)
+    times[0] *= 4.0                      # device 0 owns the top rows
+    block = replan(counts, params, 6, prev_plan=slab, measured_times=times,
+                   grid=(2, 3))
+    assert isinstance(block, BlockPlan) and block.grid == (2, 3)
+    uni_rows = uniform_block_plan(params.level, (2, 3)).rows
+    assert block.rows[0] < uni_rows[0]
+
+
+def test_block_assignment_from_plan_exact_overlap():
+    plan = BlockPlan(level=4, row0=(0, 8), rows=(8, 8),
+                     col0=(0, 10), cols=(10, 6))
+    assign = assignment_from_plan(plan, cut=2).reshape(4, 4)
+    # rows split 2/2; cols split at leaf 10 -> subtree cols 0-1 (and the
+    # majority of col 2) belong to column band 0
+    assert (assign[:2, :3] == 0).all() and (assign[:2, 3] == 1).all()
+    assert (assign[2:, :3] == 2).all() and (assign[2:, 3] == 3).all()

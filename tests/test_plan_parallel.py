@@ -53,9 +53,12 @@ _SUBPROCESS_BODY = textwrap.dedent("""
     assert lb_model > lb_uniform, (lb_model, lb_uniform)
 
     # a deliberately skewed handcrafted plan exercises the unequal-band
-    # padding + halo-at-valid-edge machinery hardest
+    # padding + halo-at-valid-edge machinery hardest; the thin plan pins
+    # minimum-height (2-row) bands at both domain boundaries, where the
+    # M2L halo spans the entire neighbor band
     skewed = SlabPlan(level=5, row0=(0, 4, 10, 20), rows=(4, 6, 10, 12))
-    for plan in (uniform, model, skewed):
+    thin = SlabPlan(level=5, row0=(0, 2, 16, 30), rows=(2, 14, 14, 2))
+    for plan in (uniform, model, skewed, thin):
         for use_kernels in (False, True):
             par = np.asarray(parallel_fmm_velocity(
                 tree, 12, mesh, use_kernels=use_kernels, plan=plan))
@@ -71,6 +74,16 @@ _SUBPROCESS_BODY = textwrap.dedent("""
     print(f"P=3 rows={plan3.rows} rel_err={err:.3e}")
     assert err < 1e-5, err
 
+    # regression: plan=None with n % P != 0 must fall back to uniform_plan
+    # (which handles non-dividing device counts via base/extra bands) — the
+    # old driver raised "grid side must split into even slabs" here
+    tree3, _ = build_tree(pos[::64], gamma[::64], level=3, sigma=sigma)
+    serial3 = np.asarray(fmm_velocity(tree3, p=8))
+    par = np.asarray(parallel_fmm_velocity(tree3, 8, mesh3, plan=None))
+    err = np.linalg.norm(par - serial3) / np.linalg.norm(serial3)
+    print(f"P=3 level=3 no-plan rel_err={err:.3e}")
+    assert err < 1e-5, err
+
     # dynamic stepper runs end to end under the mesh
     st = VortexStepper(pos, gamma, sigma, p=8, dt=0.004, mesh=mesh,
                        plan_method="model", dynamic=True, replan_every=2)
@@ -81,12 +94,83 @@ _SUBPROCESS_BODY = textwrap.dedent("""
 """)
 
 
+_BLOCK_SUBPROCESS_BODY = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=6"
+    import numpy as np
+    import jax
+    from jax.sharding import Mesh
+    from repro.core.cost_model import ModelParams
+    from repro.core.fmm import fmm_velocity
+    from repro.core.parallel_fmm import parallel_fmm_velocity
+    from repro.core.plan import (BlockPlan, block_plan_from_counts,
+                                 plan_stats, uniform_block_plan)
+    from repro.core.quadtree import build_tree
+    from repro.core.stepper import VortexStepper
+    from repro.core.vortex import lamb_oseen_particles
+
+    assert len(jax.devices()) == 6
+    mesh4 = Mesh(np.array(jax.devices()[:4]), ("data",))
+    mesh6 = Mesh(np.array(jax.devices()[:6]), ("data",))
+
+    pos, gamma, sigma = lamb_oseen_particles(160)
+    tree, index = build_tree(pos, gamma, level=5, sigma=sigma)
+    serial = np.asarray(fmm_velocity(tree, p=12))
+    params = ModelParams(level=5, cut=4, p=12, slots=tree.slots)
+
+    # 2x2 (square) and 2x3 (non-square) model grids — both kernel routes;
+    # the skewed handcrafted plan pins minimum-size (2-row/2-col) tiles on
+    # the domain boundary, where the two-axis halo + corner strips span the
+    # entire neighbor tile
+    b22 = block_plan_from_counts(index.counts, params, (2, 2), method="model")
+    b23 = block_plan_from_counts(index.counts, params, (2, 3), method="model")
+    skew = BlockPlan(level=5, row0=(0, 2, 22), rows=(2, 20, 10),
+                     col0=(0, 30), cols=(30, 2))
+    lb23 = plan_stats(b23, index.counts, params)["load_balance"]
+    lbu = plan_stats(uniform_block_plan(5, (2, 3)),
+                     index.counts, params)["load_balance"]
+    print(f"LB block-2x3 model={lb23:.3f} uniform={lbu:.3f}")
+    assert lb23 >= lbu, (lb23, lbu)
+    for mesh, plan in ((mesh4, b22), (mesh6, b23), (mesh6, skew)):
+        for use_kernels in (False, True):
+            par = np.asarray(parallel_fmm_velocity(
+                tree, 12, mesh, use_kernels=use_kernels, plan=plan))
+            err = np.linalg.norm(par - serial) / np.linalg.norm(serial)
+            print(f"grid={plan.grid} rows={plan.rows} cols={plan.cols} "
+                  f"kernels={use_kernels} rel_err={err:.3e}")
+            assert err < 1e-5, (plan.grid, use_kernels, err)
+
+    # dynamic 2-D stepper runs end to end under the 2x3 mesh
+    st = VortexStepper(pos, gamma, sigma, p=8, dt=0.004, mesh=mesh6,
+                       plan_method="model", dynamic=True, plan_grid=(2, 3),
+                       replan_every=2)
+    for _ in range(2):
+        rec = st.step()
+    assert rec.step == 2 and rec.seconds > 0
+    assert st.plan.grid == (2, 3)
+    print("OK")
+""")
+
+
 def test_plan_driven_parallel_matches_serial_multidevice():
     env = dict(os.environ)
     env["PYTHONPATH"] = os.path.abspath(
         os.path.join(os.path.dirname(__file__), "..", "src"))
     env.pop("XLA_FLAGS", None)
     proc = subprocess.run([sys.executable, "-c", _SUBPROCESS_BODY],
+                          capture_output=True, text=True, env=env, timeout=900)
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    assert "OK" in proc.stdout
+
+
+def test_block_plan_parallel_matches_serial_multidevice():
+    """BlockPlan on 2x2 and 2x3 device grids == serial to f32, both kernel
+    routes, plus the dynamic 2-D stepper (acceptance-pinned)."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.abspath(
+        os.path.join(os.path.dirname(__file__), "..", "src"))
+    env.pop("XLA_FLAGS", None)
+    proc = subprocess.run([sys.executable, "-c", _BLOCK_SUBPROCESS_BODY],
                           capture_output=True, text=True, env=env, timeout=900)
     assert proc.returncode == 0, proc.stdout + proc.stderr
     assert "OK" in proc.stdout
