@@ -233,8 +233,9 @@ def bench_parallel_multidevice(rows, quick=False):
 def bench_plan_execution(rows, quick=False):
     """Partition-driven execution plans on the Lamb-Oseen lattice (paper
     Eq 20 next to measured step time): uniform strawman vs a-priori model
-    plan vs dynamic re-planning vs a 2-D block grid, on forced host devices
-    (subprocess: jax locks the device count at first init).
+    plan vs dynamic re-planning vs a 2-D block grid vs the per-axis grid
+    autotuner, on forced host devices (subprocess: jax locks the device
+    count at first init).
 
     Timing protocol: after the compile-warm step, the loop keeps stepping
     (bounded) until a step adopts no new plan/level — that step doubles as
@@ -243,69 +244,222 @@ def bench_plan_execution(rows, quick=False):
     the MINIMUM steady-state step (robust to host-device scheduling noise);
     any adoption that still happens while timing is counted and emitted in
     the derived field (releveled/replanned), keeping the trajectory
-    comparable across PRs.
+    comparable across PRs.  Modes run in small subprocess GROUPS: sharing
+    one long-lived process let allocator/jit-cache state accumulate across
+    all modes and skewed later ones (plan_dynamic read ~6% slower than
+    plan_model at identical plans and programs), while full isolation
+    exposes the parity comparison to minute-scale machine drift between
+    subprocesses.  So model+dynamic — the pair whose parity is pinned —
+    run TOGETHER with their timed steps interleaved (drift hits both
+    equally; the stepper's on-device occupancy check keeps the dynamic
+    replan check off the step path), and every other mode gets its own
+    process.  The dynamic row reports ``vs_model`` and becomes a failed
+    row (CI-fatal) outside a generous noise band.
     """
     ndev = 4
     m_side, p, steps = (120, 8, 3) if quick else (160, 12, 4)
-    modes = ("uniform", "model", "dynamic", "block")
+    groups = (("uniform",), ("model", "dynamic"), ("block",), ("auto",))
+    env = dict(os.environ)
+    src_dir = os.path.abspath(os.path.join(os.path.dirname(__file__), "..", "src"))
+    old_pp = env.get("PYTHONPATH", "")
+    env["PYTHONPATH"] = src_dir + (os.pathsep + old_pp if old_pp else "")
+    for group in groups:
+        body = textwrap.dedent(f"""
+            import os
+            os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count={ndev}"
+            import time
+            import numpy as np
+            import jax
+            from jax.sharding import Mesh
+            from repro.core.stepper import VortexStepper
+            from repro.core.vortex import lamb_oseen_particles
+
+            pos, gamma, sigma = lamb_oseen_particles({m_side})
+            mesh = Mesh(np.array(jax.devices()[:{ndev}]), ("data",))
+            sts, counts = {{}}, {{}}
+            for mode in {group!r}:
+                grid = {{"block": (2, 2), "auto": "auto"}}.get(mode)
+                st = VortexStepper(pos, gamma, sigma, p={p}, dt=0.004,
+                                   mesh=mesh,
+                                   plan_method="uniform" if mode == "uniform" else "model",
+                                   dynamic=(mode in ("dynamic", "block", "auto")),
+                                   plan_grid=grid, replan_every=2)
+                st.step()                  # compile + warm
+                for _ in range(4):         # settle: warm again after adoption
+                    rec = st.step()
+                    if not (rec.replanned or rec.releveled):
+                        break
+                sts[mode] = st
+                counts[mode] = [0, 0, []]  # releveled, replanned, timed
+            for _ in range({steps}):       # interleaved: drift is paired
+                for mode in {group!r}:
+                    rec = sts[mode].step()
+                    counts[mode][0] += rec.releveled
+                    counts[mode][1] += rec.replanned
+                    counts[mode][2].append(rec.seconds)
+            for mode in {group!r}:
+                st = sts[mode]
+                releveled, replanned, timed = counts[mode]
+                us = min(timed) * 1e6
+                s = st.stats()
+                geom = "/".join(map(str, st.plan.rows))
+                if len(getattr(st.plan, "cols", ())) > 1:
+                    geom += "x" + "/".join(map(str, st.plan.cols))
+                print(f"ROW plan_{{mode}} {{us:.1f}} "
+                      f"LB={{s['load_balance']:.3f}}_min={{s['min_load']:.3g}}"
+                      f"_max={{s['max_load']:.3g}}_rows={{geom}}"
+                      f"_releveled={{releveled}}_replanned={{replanned}}")
+        """)
+        try:
+            proc = subprocess.run([sys.executable, "-c", body],
+                                  capture_output=True, text=True, env=env,
+                                  timeout=1800)
+            got = [l.split(maxsplit=3) for l in proc.stdout.splitlines()
+                   if l.startswith("ROW")]
+            if proc.returncode != 0 or len(got) != len(group):
+                raise RuntimeError(proc.stderr[-300:])
+            by_mode = {name: (float(us), derived)
+                       for _, name, us, derived in got}
+            for name, (us, derived) in by_mode.items():
+                if name == "plan_dynamic" and "plan_model" in by_mode:
+                    ratio = us / by_mode["plan_model"][0]
+                    derived += f"_vs_model={ratio:.2f}x"
+                    # the pin: paired steady-state dynamic stepping must
+                    # stay within noise of the static model plan
+                    if not 0.75 <= ratio <= 1.33:
+                        derived = "failed:parity_" + derived
+                rows.append((name, us, derived))
+        except Exception as e:  # report, never abort the whole harness
+            detail = " ".join(str(e).split())[-160:].replace(",", ";")
+            for mode in group:
+                rows.append((f"plan_{mode}", 0.0,
+                             f"failed:{type(e).__name__}:{detail}"))
+
+
+def bench_overlap(rows, quick=False):
+    """Interior/rim overlapped execution vs the monolithic ordering
+    (DESIGN.md §9), plus the fused packed P2P exchange, on 4 forced host
+    devices (subprocess: jax locks the device count at first init).
+
+    ``overlap_on`` / ``overlap_off`` time the full sharded FMM with the
+    halo collectives hidden behind tile-interior compute vs the serial
+    exchange-then-compute ordering (interleaved reps, min per mode — the
+    two modes share one process so the comparison is paired).
+    ``p2p_exchange_fused`` times the ONE packed (z, q, mask) ``_tile_halo``
+    round against the three separate exchanges it replaced and counts the
+    ``collective-permute`` ops in the lowered HLO of each (3x reduction,
+    12 -> 4 on a 2x2 grid).
+
+    Runs at the full problem size even under ``--quick``: overlap pays off
+    when the tile interiors are big enough to hide the exchange (the
+    production regime); at toy tile sizes the extra rim launches dominate
+    and the row would misrepresent the trade.
+    """
+    ndev = 4
+    m_side, level, p = (160, 6, 12)
     body = textwrap.dedent(f"""
         import os
         os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count={ndev}"
+        import re
         import time
         import numpy as np
         import jax
-        from jax.sharding import Mesh
-        from repro.core.stepper import VortexStepper
+        import jax.numpy as jnp
+        from jax.sharding import Mesh, PartitionSpec as P
+        from repro.core import parallel_fmm as pf
+        from repro.core.cost_model import ModelParams
+        from repro.core.plan import plan_from_counts
+        from repro.core.quadtree import build_tree
         from repro.core.vortex import lamb_oseen_particles
 
-        pos, gamma, sigma = lamb_oseen_particles({m_side})
         mesh = Mesh(np.array(jax.devices()[:{ndev}]), ("data",))
-        for mode in {modes!r}:
-            st = VortexStepper(pos, gamma, sigma, p={p}, dt=0.004, mesh=mesh,
-                               plan_method="uniform" if mode == "uniform" else "model",
-                               dynamic=(mode in ("dynamic", "block")),
-                               plan_grid=(2, 2) if mode == "block" else None,
-                               replan_every=2)
-            st.step()                      # compile + warm
-            for _ in range(4):             # settle: warm again after adoption
-                rec = st.step()
-                if not (rec.replanned or rec.releveled):
-                    break
-            releveled = replanned = 0
-            timed = []
-            for _ in range({steps}):
-                rec = st.step()
-                releveled += rec.releveled
-                replanned += rec.replanned
-                timed.append(rec.seconds)
-            us = min(timed) * 1e6
-            s = st.stats()
-            geom = "/".join(map(str, st.plan.rows))
-            if mode == "block":
-                geom += "x" + "/".join(map(str, st.plan.cols))
-            print(f"ROW plan_{{mode}} {{us:.1f}} "
-                  f"LB={{s['load_balance']:.3f}}_min={{s['min_load']:.3g}}"
-                  f"_max={{s['max_load']:.3g}}_rows={{geom}}"
-                  f"_releveled={{releveled}}_replanned={{replanned}}")
+        pos, gamma, sigma = lamb_oseen_particles({m_side})
+        tree, index = build_tree(pos, gamma, level={level}, sigma=sigma)
+        params = ModelParams(level={level}, cut=4, p={p}, slots=tree.slots)
+        plan = plan_from_counts(index.counts, params, {ndev}, method="model")
+
+        fns = {{}}
+        for ov in (True, False):
+            fn = (lambda ov=ov: jax.block_until_ready(
+                pf.parallel_fmm_velocity(tree, {p}, mesh, plan=plan,
+                                         overlap=ov)))
+            fn()                               # compile + warm
+            fns[ov] = fn
+        t = {{True: [], False: []}}
+        for _ in range(6):                     # interleaved, paired reps
+            for ov in (False, True):
+                t0 = time.perf_counter()
+                fns[ov]()
+                t[ov].append(time.perf_counter() - t0)
+        on, off = min(t[True]) * 1e6, min(t[False]) * 1e6
+        # the pin: overlapped execution must not lose to the serial
+        # ordering (10% jitter allowance for shared CI runners); a
+        # violation marks the row failed, which the CI guard treats as
+        # fatal
+        tag = "" if on <= 1.10 * off else "failed:overlap_slower_"
+        print(f"ROW overlap_on {{on:.1f}} {{tag}}"
+              f"hidden_vs_serial={{off / on:.2f}}x_rows="
+              + "/".join(map(str, plan.rows)))
+        print(f"ROW overlap_off {{off:.1f}} serial_comm_baseline")
+
+        # fused packed P2P exchange vs the three separate rounds it replaced
+        # (2x2 grid: the full two-axis exchange, 4 ppermutes per round)
+        grid = (2, 2)
+        rmax = cmax = (1 << {level}) // 2
+        rv = cv = rmax
+        def fused(z, q, m):
+            buf = pf._tile_halo(pf._pack_particles(z, q, m), 1, rv, cv,
+                                "data", grid)
+            return pf._unpack_particles(buf, z.dtype)
+        def unfused(z, q, m):
+            return (pf._tile_halo(z, 1, rv, cv, "data", grid),
+                    pf._tile_halo(q, 1, rv, cv, "data", grid),
+                    pf._tile_halo(m, 1, rv, cv, "data", grid))
+        spec = P("data", None, None)
+        kw = {{pf._CHECK_KW: False}} if pf._CHECK_KW else {{}}
+        rng = np.random.default_rng(0)
+        s = tree.slots
+        shape = ({ndev} * rmax, cmax, s)
+        z = jnp.asarray(rng.normal(size=shape) + 1j * rng.normal(size=shape),
+                        jnp.complex64)
+        q = z * 0.5
+        m = jnp.asarray(rng.uniform(size=shape) > 0.3)
+        stats = {{}}
+        for name, fn in (("fused", fused), ("unfused", unfused)):
+            jfn = jax.jit(pf._shard_map(fn, mesh=mesh, in_specs=(spec,) * 3,
+                                        out_specs=(spec,) * 3, **kw))
+            nperm = len(re.findall(r"collective[-_]permute",
+                                   jfn.lower(z, q, m).as_text()))
+            jax.block_until_ready(jfn(z, q, m))
+            t0 = time.perf_counter()
+            for _ in range(20):
+                jax.block_until_ready(jfn(z, q, m))
+            stats[name] = ((time.perf_counter() - t0) / 20 * 1e6, nperm)
+        (fus, nf), (unf, nu) = stats["fused"], stats["unfused"]
+        # the pin: the packed exchange must show the deterministic 3x
+        # collective reduction in the lowered HLO
+        tag = "" if nu == 3 * nf else "failed:collective_count_"
+        print(f"ROW p2p_exchange_fused {{fus:.1f}} {{tag}}"
+              f"collectives={{nf}}_was={{nu}}_unfused_us={{unf:.1f}}")
     """)
     env = dict(os.environ)
     src_dir = os.path.abspath(os.path.join(os.path.dirname(__file__), "..", "src"))
     old_pp = env.get("PYTHONPATH", "")
     env["PYTHONPATH"] = src_dir + (os.pathsep + old_pp if old_pp else "")
+    names = ("overlap_on", "overlap_off", "p2p_exchange_fused")
     try:
         proc = subprocess.run([sys.executable, "-c", body], capture_output=True,
                               text=True, env=env, timeout=1800)
         got = [l.split(maxsplit=3) for l in proc.stdout.splitlines()
                if l.startswith("ROW")]
-        if proc.returncode != 0 or len(got) != len(modes):
+        if proc.returncode != 0 or len(got) != len(names):
             raise RuntimeError(proc.stderr[-300:])
         for _, name, us, derived in got:
             rows.append((name, float(us), derived))
     except Exception as e:  # report, never abort the whole harness
         detail = " ".join(str(e).split())[-160:].replace(",", ";")
-        for mode in modes:
-            rows.append((f"plan_{mode}", 0.0,
-                         f"failed:{type(e).__name__}:{detail}"))
+        for name in names:
+            rows.append((name, 0.0, f"failed:{type(e).__name__}:{detail}"))
 
 
 def bench_plan_halo(rows, quick=False):
@@ -365,7 +519,7 @@ def main() -> None:
     for bench in (bench_fig6_stage_timings, bench_fig7_9_scaling,
                   bench_table12_memory, bench_kernels, bench_m2l_staging_bytes,
                   bench_parallel_multidevice, bench_plan_execution,
-                  bench_plan_halo, bench_moe_placement):
+                  bench_overlap, bench_plan_halo, bench_moe_placement):
         bench(rows, quick=quick)
     print("name,us_per_call,derived")
     for name, us, derived in rows:

@@ -13,7 +13,11 @@ partition-driven :class:`SlabPlan` of choice:
 
 ``--plan-grid PrxPc`` (e.g. ``2x3``) schedules a 2-D BlockPlan tile grid
 with two-axis halos instead of 1-D row bands; it implies
-``--devices Pr*Pc``.
+``--devices Pr*Pc``.  ``--plan-grid auto`` lets the per-axis grid
+autotuner choose slab vs block and the (Pr, Pc) factorization from the
+cost model (Eq-20 balance + overlap-aware comm residue) at build time and
+every replan.  ``--no-overlap`` disables the sharded driver's interior/rim
+communication-computation overlap (DESIGN.md §9).
 
 The vorticity field is a steady Euler solution up to core diffusion, so
 particles should orbit the vortex center on (nearly) circular paths — the
@@ -36,22 +40,29 @@ def main():
     ap.add_argument("--p", type=int, default=12)
     ap.add_argument("--plan", choices=("uniform", "model", "dynamic"),
                     default="model")
-    ap.add_argument("--plan-grid", default=None, metavar="PrxPc",
-                    help="2-D BlockPlan device grid, e.g. 2x3 "
-                         "(implies --devices Pr*Pc)")
+    ap.add_argument("--plan-grid", default=None, metavar="PrxPc|auto",
+                    help="2-D BlockPlan device grid, e.g. 2x3 (implies "
+                         "--devices Pr*Pc), or 'auto' to let the per-axis "
+                         "grid autotuner pick slab vs block and (Pr, Pc) "
+                         "from the cost model at every replan")
     ap.add_argument("--devices", type=int, default=1,
                     help="shard over N devices (forces host devices on CPU)")
     ap.add_argument("--replan-every", type=int, default=4)
+    ap.add_argument("--no-overlap", action="store_true",
+                    help="disable interior/rim comm-compute overlap")
     ap.add_argument("--use-kernels", action="store_true")
     args = ap.parse_args()
 
     plan_grid = None
-    if args.plan_grid is not None:
+    if args.plan_grid is not None and args.plan_grid.lower() == "auto":
+        plan_grid = "auto"
+    elif args.plan_grid is not None:
         try:
             plan_grid = tuple(int(x) for x in args.plan_grid.lower().split("x"))
             assert len(plan_grid) == 2 and min(plan_grid) >= 1
         except (ValueError, AssertionError):
-            sys.exit(f"--plan-grid must look like 2x3, got {args.plan_grid!r}")
+            sys.exit(f"--plan-grid must look like 2x3 or auto, "
+                     f"got {args.plan_grid!r}")
         ndev = plan_grid[0] * plan_grid[1]
         if args.devices not in (1, ndev):
             sys.exit(f"--plan-grid {args.plan_grid} needs {ndev} devices, "
@@ -86,6 +97,7 @@ def main():
         use_kernels=args.use_kernels,
         plan_method="uniform" if args.plan == "uniform" else "model",
         dynamic=(args.plan == "dynamic"), plan_grid=plan_grid,
+        overlap=not args.no_overlap,
         replan_every=args.replan_every,
         payload={"r0": r0 + 0j})
     s0 = stepper.stats()

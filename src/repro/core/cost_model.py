@@ -175,6 +175,25 @@ def comm_root_tree(params: ModelParams) -> float:
     return alpha_comm(params.p, params.coeff_bytes) * 2.0
 
 
+def comm_overlap_effective(comm_bytes, hide_work, params: ModelParams,
+                           overlap: bool = True):
+    """Serial-residue cost of an overlapped halo exchange (DESIGN.md §9).
+
+    The paper's running-time model (Eqs 16-20) prices communication as a
+    serial term added to compute; the interior/rim driver instead hides the
+    exchange behind the tile-interior work, so only the residue
+    ``max(0, t_byte * bytes - t_flop * hide_work)`` is paid serially.
+    ``hide_work`` is the modeled interior work available to hide behind
+    (same units as ``work_leaf`` / ``work_subtree``); without overlap the
+    full serial price is returned.  Accepts scalars or per-device arrays.
+    """
+    t_comm = params.t_byte * np.asarray(comm_bytes, dtype=np.float64)
+    if not overlap:
+        return t_comm
+    return np.maximum(0.0, t_comm - params.t_flop *
+                      np.asarray(hide_work, dtype=np.float64))
+
+
 # ---------------------------------------------------------------------------
 # Memory estimates (paper §5.3, Tables 1 and 2)
 # ---------------------------------------------------------------------------

@@ -90,6 +90,97 @@ def p2p_slab_fn(use_kernels: bool = False):
     return p2p_slab_reference
 
 
+# ---------------------------------------------------------------------------
+# Interior/rim overlapped tile execution (DESIGN.md §9).
+#
+# A padded device tile is split into an INTERIOR — every box at least one
+# halo width from each tile edge, whose stencil reads only local data — and
+# four RIM strips along the edges, whose stencils read the exchanged ghost
+# buffer.  The interior compute has no data dependency on the halo
+# collectives, so the scheduler can hide the exchange behind it; the rim
+# strips are computed from the buffer afterwards and stitched over the
+# edges.  The serial driver is the degenerate zero-rim case of the same
+# slab contract (no ghosts, interior == everything: ``m2l_grid_fn`` /
+# ``near_field`` attach zero halos and run one monolithic slab), so there
+# is still exactly one M2L / P2P formulation.
+# ---------------------------------------------------------------------------
+
+
+def m2l_tile_overlapped(m2l_slab, me_local: jnp.ndarray, me_buf: jnp.ndarray,
+                        level: int, rows_valid, cols_valid) -> jnp.ndarray:
+    """Interior/rim M2L over one padded tile.
+
+    ``me_local`` is the (rmax, cmax, p) padded tile (padding rows/cols are
+    zero); ``me_buf`` is the (rmax+2w, cmax+2w, p) two-axis halo buffer
+    from ``_tile_halo`` (w = ``expansions.M2L_HALO``), with neighbors' data
+    adjacent to the *valid* extents ``rows_valid``/``cols_valid`` (traced
+    per-device scalars; tile origins and valid extents are parity-even at
+    every sharded level, so ``row0=col0=0`` anchors every slice).  Returns
+    the (rmax, cmax, p) LE tile; boxes outside the valid extents carry
+    don't-care values exactly as in the monolithic path (masked out
+    downstream).
+    """
+    w = ex.M2L_HALO
+    rmax, cmax, p = me_local.shape
+    le = jnp.zeros_like(me_local)
+    if rmax > 2 * w and cmax > 2 * w:
+        # interior: depends only on me_local -> overlappable with the
+        # collectives filling me_buf
+        interior = m2l_slab(me_local, level, halo=w, col_halo=w)
+        le = jax.lax.dynamic_update_slice(le, interior, (w, w, 0))
+    # rim strips: each strip's own w-halo is cut out of the exchanged
+    # buffer (strip anchors stay parity-even, so row0=col0=0 holds)
+    top = m2l_slab(jax.lax.slice_in_dim(me_buf, 0, 3 * w, axis=0),
+                   level, halo=w, col_halo=w)                    # (w, cmax)
+    bot = m2l_slab(jax.lax.dynamic_slice(
+        me_buf, (rows_valid - w, 0, 0), (3 * w, cmax + 2 * w, p)),
+        level, halo=w, col_halo=w)                               # (w, cmax)
+    left = m2l_slab(jax.lax.slice_in_dim(me_buf, 0, 3 * w, axis=1),
+                    level, halo=w, col_halo=w)                   # (rmax, w)
+    right = m2l_slab(jax.lax.dynamic_slice(
+        me_buf, (0, cols_valid - w, 0), (rmax + 2 * w, 3 * w, p)),
+        level, halo=w, col_halo=w)                               # (rmax, w)
+    le = jax.lax.dynamic_update_slice(le, left, (0, 0, 0))
+    le = jax.lax.dynamic_update_slice(le, right, (0, cols_valid - w, 0))
+    le = jax.lax.dynamic_update_slice(le, top, (0, 0, 0))
+    le = jax.lax.dynamic_update_slice(le, bot, (rows_valid - w, 0, 0))
+    return le
+
+
+def p2p_tile_overlapped(p2p_slab, z, q, mask, z_buf, q_buf, m_buf,
+                        rows_valid, cols_valid, sigma) -> jnp.ndarray:
+    """Interior/rim P2P over one padded tile (halo width 1).
+
+    ``z/q/mask`` are the (rmax, cmax, s) local tile; ``*_buf`` the
+    (rmax+2, cmax+2, s) exchanged particle buffers (one packed collective —
+    see ``parallel_fmm``).  The interior pass reads the local tile as its
+    own ±1 halo (the overlap-independent bulk: P2P dominates FMM runtime),
+    the four rim strips read the buffer, and the strips are stitched over
+    the edges.  Returns the (rmax, cmax, s) W tile.
+    """
+    rmax, cmax, s = z.shape
+    wout = jnp.zeros(z.shape, z.dtype)
+    if rmax > 2 and cmax > 2:
+        interior = p2p_slab(z, q, mask, sigma)      # (rmax-2, cmax-2, s)
+        wout = jax.lax.dynamic_update_slice(wout, interior, (1, 1, 0))
+
+    def row_strip(r0):
+        sl = lambda a: jax.lax.dynamic_slice(a, (r0, 0, 0), (3, cmax + 2, s))
+        return p2p_slab(sl(z_buf), sl(q_buf), sl(m_buf), sigma)  # (1, cmax)
+
+    def col_strip(c0):
+        sl = lambda a: jax.lax.dynamic_slice(a, (0, c0, 0), (rmax + 2, 3, s))
+        return p2p_slab(sl(z_buf), sl(q_buf), sl(m_buf), sigma)  # (rmax, 1)
+
+    wout = jax.lax.dynamic_update_slice(wout, col_strip(0), (0, 0, 0))
+    wout = jax.lax.dynamic_update_slice(wout, col_strip(cols_valid - 1),
+                                        (0, cols_valid - 1, 0))
+    wout = jax.lax.dynamic_update_slice(wout, row_strip(0), (0, 0, 0))
+    wout = jax.lax.dynamic_update_slice(wout, row_strip(rows_valid - 1),
+                                        (rows_valid - 1, 0, 0))
+    return wout
+
+
 def upward_sweep(tree: Tree, p: int) -> list[jnp.ndarray]:
     """Build normalized MEs for every level; returns me[l] for l=0..L."""
     L = tree.level

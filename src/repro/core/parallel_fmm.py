@@ -22,7 +22,9 @@ Communication structure (maps 1:1 onto the paper's Fig 3):
     exchange per sharded level via ``lax.ppermute``, sliced at each tile's
     *valid* edges (parity folding shrinks the paper's ±3 child-box halo to
     ±1 parent line — DESIGN.md §4);
-  * P2P        — neighbor particles: ±1-row/column halo of (z, q, mask).
+  * P2P        — neighbor particles: ±1-row/column halo of (z, q, mask),
+    packed into ONE buffer so the exchange is a single ``_tile_halo`` round
+    (4 ppermutes) instead of three (12) — ``_pack_particles``.
 
 The two-axis exchange runs columns first, then rows *of the column-extended
 strips*: because the tile grid is a tensor product, east/west neighbors own
@@ -30,6 +32,19 @@ my exact row range, so the row strips carry the freshly attached column
 halos and the diagonal (corner) ghosts arrive with them — M2L's and P2P's
 corner interactions are complete with two ppermute hops per axis and no
 separate corner transfer.
+
+Interior/rim overlap (DESIGN.md §9): with ``overlap=True`` the driver
+issues every halo collective *first* (the packed P2P exchange before the
+upward sweep, the per-level M2L exchanges before the root-tree work) and
+computes each tile's interior — every box at least one halo width from the
+tile edges, the overwhelming bulk of the work — from local data alone while
+the collectives are in flight; only the thin rim strips along the tile
+edges consume the exchanged buffers (``fmm.m2l_tile_overlapped`` /
+``fmm.p2p_tile_overlapped``), and they are stitched over the interior.
+``overlap=False`` keeps the paper's serial exchange-then-compute ordering;
+the two orderings share the same slab implementations and agree to f32
+roundoff.  ``plan.halo_volume`` prices the rim recompute and
+``plan.plan_comm_cost`` the overlap-aware serial comm residue.
 
 M2L and P2P themselves are the SAME slab implementations the serial driver
 uses (core/fmm.py: ``m2l_slab_fn`` / ``p2p_slab_fn``, column halos handled
@@ -126,9 +141,40 @@ def _tile_halo(x: jnp.ndarray, width: int, rows_valid, cols_valid,
     return buf
 
 
+def _pack_particles(z, q, mask) -> jnp.ndarray:
+    """Stack (z, q, mask) into ONE real (rows, cols, 5, s) buffer — the
+    planes are [Re z, Im z, Re q, Im q, mask] along a new axis next to the
+    slot axis — so the P2P halo exchange is a single packed ``_tile_halo``
+    round (4 ppermutes) instead of three (12).  f32 carries the complex64
+    components and the bool mask exactly, so the round-trip is lossless."""
+    return jnp.stack([z.real, z.imag, q.real, q.imag,
+                      mask.astype(jnp.float32)], axis=2)
+
+
+def _unpack_particles(buf: jnp.ndarray, dtype):
+    """Inverse of :func:`_pack_particles` (on an exchanged, halo'd buffer)."""
+    z = (buf[:, :, 0] + 1j * buf[:, :, 1]).astype(dtype)
+    q = (buf[:, :, 2] + 1j * buf[:, :, 3]).astype(dtype)
+    m = buf[:, :, 4] > 0.5
+    return z, q, m
+
+
 def _parallel_fmm_body(z, q, mask, *, plan: BlockPlan, l_cut: int, p: int,
-                       sigma, axis_name: str, use_kernels: bool):
-    """Runs on each device over its padded (rows_max, cols_max, s) tile."""
+                       sigma, axis_name: str, use_kernels: bool,
+                       overlap: bool):
+    """Runs on each device over its padded (rows_max, cols_max, s) tile.
+
+    ``overlap=True`` runs the interior/rim pipeline (DESIGN.md §9): every
+    halo collective is issued before the compute that can hide it — the
+    packed P2P exchange before the upward sweep, the per-level M2L
+    exchanges before the root-tree work — and each exchanged buffer is
+    consumed only by the thin rim strips, while the tile interiors (the
+    bulk of the work) depend on local data alone.  ``overlap=False`` keeps
+    the monolithic ordering: each exchange completes into a buffer the
+    whole tile's compute then reads (the paper's serial comm-plus-compute
+    model, Eqs 16-20).  Both orderings share the identical slab
+    implementations and agree to f32 roundoff.
+    """
     L = plan.level
     Pr, Pc = plan.grid
     rows_max, cols_max = plan.rows_max, plan.cols_max
@@ -146,6 +192,16 @@ def _parallel_fmm_body(z, q, mask, *, plan: BlockPlan, l_cut: int, p: int,
     my_col0 = jnp.asarray(np.asarray(plan.col0, np.int32)[dev % Pc])[di]
     my_cols = jnp.asarray(np.asarray(plan.cols, np.int32)[dev % Pc])[di]
 
+    def halo(x, width, rows_valid, cols_valid):
+        return _tile_halo(x, width, rows_valid, cols_valid, axis_name,
+                          (Pr, Pc))
+
+    # ---- P2P halo: ONE packed exchange round (z, q, mask ride together) ---
+    # Issued first under ``overlap`` so the collective is in flight through
+    # the entire upward sweep; only the rim strips of the near field read it.
+    p2p_buf = halo(_pack_particles(z, q, mask), 1, my_rows, my_cols)
+    z_buf, q_buf, m_buf = _unpack_particles(p2p_buf, dtype)
+
     # centers padded below/right so the dynamic slice never clamps
     centers = jnp.asarray(box_centers(L), dtype=dtype)
     centers = jnp.pad(centers, ((0, rows_max), (0, cols_max)))
@@ -158,6 +214,15 @@ def _parallel_fmm_body(z, q, mask, *, plan: BlockPlan, l_cut: int, p: int,
     me = {L: ex.p2m(z, q, mask, my_centers, box_size(L), p)}
     for lv in range(L, l_cut, -1):
         me[lv - 1] = ex.m2m(me[lv], p)
+
+    # overlap: issue every sharded level's M2L exchange now, before the
+    # root-tree gather/compute and the tile interiors that can hide them
+    me_bufs = {}
+    if overlap:
+        for lv in range(l_cut + 1, L + 1):
+            shift = L - lv
+            me_bufs[lv] = halo(me[lv], ex.M2L_HALO, my_rows >> shift,
+                               my_cols >> shift)
 
     # gather the cut level -> replicated root tree (paper's M2M to root);
     # unequal tiles are reassembled by the plan's static 2-D owner maps.
@@ -199,29 +264,36 @@ def _parallel_fmm_body(z, q, mask, *, plan: BlockPlan, l_cut: int, p: int,
     for lv in range(l_cut + 1, L + 1):
         shift = L - lv
         rv, cv = my_rows >> shift, my_cols >> shift
-        me_buf = _tile_halo(me[lv], ex.M2L_HALO, rv, cv, axis_name, (Pr, Pc))
-        le_lv = m2l_slab(me_buf, lv, col_halo=ex.M2L_HALO)
+        if overlap:
+            le_lv = fmm.m2l_tile_overlapped(m2l_slab, me[lv], me_bufs[lv],
+                                            lv, rv, cv)
+        else:
+            me_buf = halo(me[lv], ex.M2L_HALO, rv, cv)
+            le_lv = m2l_slab(me_buf, lv, col_halo=ex.M2L_HALO)
         le_lv = le_lv + ex.l2l(le_prev, p)
         le_prev = le_lv
     le_leaf = le_prev if L > l_cut else slice_tile(le_rep[L], 0)
 
     # ---- evaluation -------------------------------------------------------
     far = ex.l2p(le_leaf, z, my_centers, box_size(L), p)
-    near = p2p_slab(_tile_halo(z, 1, my_rows, my_cols, axis_name, (Pr, Pc)),
-                    _tile_halo(q, 1, my_rows, my_cols, axis_name, (Pr, Pc)),
-                    _tile_halo(mask, 1, my_rows, my_cols, axis_name, (Pr, Pc)),
-                    sigma)
+    if overlap:
+        near = fmm.p2p_tile_overlapped(p2p_slab, z, q, mask,
+                                       z_buf, q_buf, m_buf,
+                                       my_rows, my_cols, sigma)
+    else:
+        near = p2p_slab(z_buf, q_buf, m_buf, sigma)
     # padded rows/cols (mask=False) are dropped here
     return jnp.where(mask, far + near, 0.0)
 
 
 @functools.partial(jax.jit, static_argnames=("p", "mesh", "mesh_axis",
-                                             "use_kernels", "plan"))
+                                             "use_kernels", "plan",
+                                             "overlap"))
 def parallel_fmm_velocity(tree: Tree, p: int, mesh: Optional[Mesh] = None,
                           mesh_axis: str = "data",
                           use_kernels: bool = False,
-                          plan: Optional[Union[SlabPlan, BlockPlan]] = None
-                          ) -> jnp.ndarray:
+                          plan: Optional[Union[SlabPlan, BlockPlan]] = None,
+                          overlap: bool = True) -> jnp.ndarray:
     """Distributed FMM evaluation driven by an execution plan.
 
     ``plan`` maps devices to contiguous parity-even leaf-row bands
@@ -234,7 +306,10 @@ def parallel_fmm_velocity(tree: Tree, p: int, mesh: Optional[Mesh] = None,
     independent of the plan to f32 roundoff.  Falls back to a 1-device mesh
     when ``mesh`` is None.  ``use_kernels=True`` routes M2L/P2P through the
     same Pallas kernels the serial driver uses (interpret mode off-TPU) on
-    both plan kinds.
+    both plan kinds.  ``overlap=True`` (default) executes the interior/rim
+    pipeline that hides the halo collectives behind tile-interior compute;
+    ``overlap=False`` keeps the monolithic exchange-then-compute ordering.
+    Both agree to f32 roundoff on both plan kinds and kernel routes.
     """
     if mesh is None:
         mesh = Mesh(np.array(jax.devices()[:1]), ("data",))
@@ -266,7 +341,7 @@ def parallel_fmm_velocity(tree: Tree, p: int, mesh: Optional[Mesh] = None,
     l_cut = block.level - block.sharded_depth()
     body = functools.partial(_parallel_fmm_body, plan=block, l_cut=l_cut, p=p,
                              sigma=tree.sigma, axis_name=mesh_axis,
-                             use_kernels=use_kernels)
+                             use_kernels=use_kernels, overlap=overlap)
     spec = P(mesh_axis, None, None)
     # pallas_call has no shard_map replication rule; disable the check on
     # the kernel route (numerics are unaffected — outputs stay sharded).

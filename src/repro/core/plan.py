@@ -125,6 +125,14 @@ class SlabPlan:
         """How many levels (from the leaves up) the bands can shard."""
         return self.as_block().sharded_depth(min_rows)
 
+    def interior_extents(self, w: int) -> tuple[tuple[int, int], ...]:
+        """Per-device overlap-interior extents (see BlockPlan)."""
+        return self.as_block().interior_extents(w)
+
+    def rim_owners(self) -> tuple[tuple[int, int, int, int], ...]:
+        """Per-device rim ghost owners (see BlockPlan)."""
+        return self.as_block().rim_owners()
+
 
 @dataclasses.dataclass(frozen=True)
 class BlockPlan:
@@ -282,6 +290,33 @@ class BlockPlan:
         r = " ".join(f"[{x0}:{x0 + x})" for x0, x in zip(self.row0, self.rows))
         c = " ".join(f"[{x0}:{x0 + x})" for x0, x in zip(self.col0, self.cols))
         return f"rows {r} x cols {c}"
+
+    # -- interior/rim geometry (overlapped execution, DESIGN.md §9) ---------
+
+    def interior_extents(self, w: int) -> tuple[tuple[int, int], ...]:
+        """Per-device (rows, cols) of the overlap *interior* — the boxes at
+        least ``w`` rows/cols from every tile edge, whose stencils read
+        only local data.  This is the work the overlapped driver computes
+        while the halo collectives are in flight.  Device order
+        ``d = i * Pc + j``."""
+        return tuple((max(r - 2 * w, 0), max(c - 2 * w, 0))
+                     for r in self.rows for c in self.cols)
+
+    def rim_owners(self) -> tuple[tuple[int, int, int, int], ...]:
+        """Per-device (north, south, west, east) neighbor device supplying
+        each rim strip's ghost data, ``-1`` at domain edges (the strip then
+        reads zeros, matching the serial zero padding).  Consumed by the
+        halo/rim accounting (``_halo_device_stats``), which derives each
+        device's exchanged-strip count from it; the driver's ppermute
+        pairs are built independently in ``parallel_fmm._tile_halo`` from
+        the same ``d = i * Pc + j`` raster layout — change the layout in
+        both places.  Device order ``d = i * Pc + j``."""
+        Pr, Pc = self.grid
+        return tuple(((i - 1) * Pc + j if i > 0 else -1,
+                      (i + 1) * Pc + j if i < Pr - 1 else -1,
+                      i * Pc + j - 1 if j > 0 else -1,
+                      i * Pc + j + 1 if j < Pc - 1 else -1)
+                     for i in range(Pr) for j in range(Pc))
 
 
 # ---------------------------------------------------------------------------
@@ -461,12 +496,25 @@ def uniform_block_plan(level: int, grid: tuple[int, int]) -> BlockPlan:
                      col0=cp.row0, cols=cp.rows)
 
 
-def _grid_tile_loads(W: np.ndarray, rb: np.ndarray, cb: np.ndarray) -> np.ndarray:
-    """(Pr, Pc) tile loads of the 2-D weight field under tensor bounds."""
+def _prefix2d(W: np.ndarray) -> np.ndarray:
+    """Inclusive 2-D prefix-sum table of ``W`` (one row/col of zeros
+    prepended) — depends only on the weight field, so boundary-refinement
+    loops hoist it once and score every candidate move against it."""
     S = np.zeros((W.shape[0] + 1, W.shape[1] + 1))
     S[1:, 1:] = W.cumsum(axis=0).cumsum(axis=1)
+    return S
+
+
+def _loads_from_prefix(S: np.ndarray, rb: np.ndarray,
+                       cb: np.ndarray) -> np.ndarray:
+    """(Pr, Pc) tile loads under tensor bounds, from a ``_prefix2d`` table."""
     P = S[np.ix_(rb, cb)]
     return P[1:, 1:] - P[:-1, 1:] - P[1:, :-1] + P[:-1, :-1]
+
+
+def _grid_tile_loads(W: np.ndarray, rb: np.ndarray, cb: np.ndarray) -> np.ndarray:
+    """(Pr, Pc) tile loads of the 2-D weight field under tensor bounds."""
+    return _loads_from_prefix(_prefix2d(W), rb, cb)
 
 
 def _grid_cut_weights(counts: np.ndarray, params: ModelParams
@@ -525,9 +573,10 @@ def _refine_grid(W: np.ndarray, hw: np.ndarray, vw: np.ndarray,
     x the phase-A optimum) — no 1-D majority collapse in the loop.
     """
     rb, cb = rb.copy(), cb.copy()
+    S = _prefix2d(W)               # hoisted: W never changes during refinement
 
     def key(rbounds, cbounds):
-        return _balance_key(_grid_tile_loads(W, rbounds, cbounds).ravel())
+        return _balance_key(_loads_from_prefix(S, rbounds, cbounds).ravel())
 
     def apply(move):
         r2, c2 = rb.copy(), cb.copy()
@@ -575,10 +624,16 @@ def block_plan_from_counts(counts: np.ndarray, params: ModelParams,
     are refined jointly under the Eq-20 balance key and the FM edge-cut
     objective (``_refine_grid``).
 
-    ``cell_weight_scale`` (``(R, C)`` parent-cell granularity) folds
-    measured-feedback slowdowns into the field; as in the 1-D path, the
-    uniform strawman with a scale is re-split on the measured field alone.
+    ``cell_weight_scale`` (``(R, C)`` parent-cell granularity, or ``(R,)``
+    per-parent-row — normalized to a column vector so row slowdowns scale
+    rows, matching ``plan_loads``) folds measured-feedback slowdowns into
+    the field; as in the 1-D path, the uniform strawman with a scale is
+    re-split on the measured field alone.
     """
+    if cell_weight_scale is not None:
+        cell_weight_scale = np.asarray(cell_weight_scale, dtype=np.float64)
+        if cell_weight_scale.ndim == 1:
+            cell_weight_scale = cell_weight_scale[:, None]
     Pr, Pc = grid
     n = counts.shape[0]
     if n != 1 << params.level:
@@ -638,17 +693,28 @@ def plan_loads(plan, counts: np.ndarray, params: ModelParams,
     """Modeled work per device under the current particle distribution.
 
     ``(nparts,)`` in device order for both plan kinds (BlockPlan devices in
-    ``d = i * Pc + j`` raster order)."""
+    ``d = i * Pc + j`` raster order).  ``weight_scale`` may be per-parent-
+    row ``(R,)`` or per-parent-cell ``(R, C)`` regardless of plan kind —
+    the mismatched direction is broadcast (rows over cells) or projected
+    (cells summed per row), so the grid autotuner and the stepper's
+    adoption test can score slab and block candidates with one measured
+    scale."""
     if isinstance(plan, BlockPlan):
         W = cell_loads(counts, params)
         if weight_scale is not None:
-            W = W * np.asarray(weight_scale, dtype=np.float64)
+            ws = np.asarray(weight_scale, dtype=np.float64)
+            W = W * (ws[:, None] if ws.ndim == 1 else ws)
         rb = np.concatenate([[0], np.cumsum(np.asarray(plan.rows) // 2)])
         cb = np.concatenate([[0], np.cumsum(np.asarray(plan.cols) // 2)])
         return _grid_tile_loads(W, rb, cb).ravel()
-    w = row_loads(counts, params)
     if weight_scale is not None:
-        w = w * np.asarray(weight_scale, dtype=np.float64)
+        ws = np.asarray(weight_scale, dtype=np.float64)
+        if ws.ndim == 2:
+            w = (cell_loads(counts, params) * ws).sum(axis=1)
+        else:
+            w = row_loads(counts, params) * ws
+    else:
+        w = row_loads(counts, params)
     bounds = np.concatenate([[0], np.cumsum(np.asarray(plan.rows) // 2)])
     return _bounds_loads(w, bounds)
 
@@ -671,7 +737,7 @@ def plan_stats(plan, counts: np.ndarray, params: ModelParams) -> dict:
 
 def replan(counts: np.ndarray, params: ModelParams, nparts: int,
            prev_plan=None, measured_times: np.ndarray | None = None,
-           method: str = "model", grid: tuple[int, int] | None = None):
+           method: str = "model", grid=None, overlap: bool = True):
     """Dynamic re-planning: current counts + measured per-device times.
 
     Without measurements this is a pure a-priori re-plan from the drifted
@@ -681,7 +747,18 @@ def replan(counts: np.ndarray, params: ModelParams, nparts: int,
     min-max re-split, so a slow device sheds rows (or tiles) exactly as the
     paper's dynamic rebalancing sheds subtrees.  A :class:`BlockPlan`
     ``prev_plan`` re-plans on its own grid unless ``grid`` overrides it.
+    ``grid="auto"`` re-runs the per-axis grid autotuner
+    (:func:`autotune_plan`) with the measured scale, so slab vs block and
+    ``(Pr, Pc)`` are themselves re-chosen from the drifted distribution
+    (``overlap`` selects the comm term the score uses).
     """
+    if grid == "auto":
+        scale = None
+        if measured_times is not None and prev_plan is not None:
+            scale = measured_row_scale(prev_plan, counts, params,
+                                       measured_times)
+        return autotune_plan(counts, params, nparts, method=method,
+                             cell_weight_scale=scale, overlap=overlap)
     if grid is None and isinstance(prev_plan, BlockPlan):
         grid = prev_plan.grid
     scale = None
@@ -746,6 +823,60 @@ def assignment_from_plan(plan, cut: int) -> np.ndarray:
 # ---------------------------------------------------------------------------
 
 
+def _halo_device_stats(block: BlockPlan, params: ModelParams,
+                       executed: bool) -> tuple[np.ndarray, np.ndarray,
+                                                np.ndarray, np.ndarray]:
+    """Per-device halo traffic and rim recompute of one FMM evaluation.
+
+    Returns ``(m2l_bytes, p2p_bytes, rim_m2l_boxes, rim_p2p_boxes)``, each
+    ``(nparts,)`` in device order.  The byte terms price the two-axis
+    ppermute strips (see :func:`halo_volume`); the rim terms count the
+    boxes the *overlapped* driver evaluates from the exchanged buffer (the
+    four edge strips per sharded M2L level / at the leaves — the work that
+    cannot start until the collective lands, DESIGN.md §9)."""
+    Pr, Pc = block.grid
+    L = params.level
+    depth = block.sharded_depth()
+    l_cut = L - depth
+    a = params.p * params.coeff_bytes
+    m2l = np.zeros(Pr * Pc)
+    p2p = np.zeros(Pr * Pc)
+    rim_m2l = np.zeros(Pr * Pc)
+    rim_p2p = np.zeros(Pr * Pc)
+    owners = block.rim_owners()       # neighbor topology, -1 at domain edges
+    for i in range(Pr):
+        for j in range(Pc):
+            d = i * Pc + j
+            north, south, west, east = owners[d]
+            row_nb = (north >= 0) + (south >= 0)     # strips sent up/down
+            col_nb = (west >= 0) + (east >= 0)       # strips sent left/right
+            for lv in range(l_cut + 1, L + 1):
+                shift = L - lv
+                w = cm.M2L_HALO_ROWS
+                if executed:
+                    rext, cext = block.rows_max >> shift, block.cols_max >> shift
+                    cext += 2 * w                     # corner-carrying strips
+                else:
+                    rext = block.rows[i] >> shift
+                    cext = (block.cols[j] >> shift) + col_nb * w
+                m2l[d] += (col_nb * w * rext + row_nb * w * cext) * a
+                rr = (block.rows_max if executed else block.rows[i]) >> shift
+                cc = (block.cols_max if executed else block.cols[j]) >> shift
+                rim_m2l[d] += 2 * w * (rr + cc)
+            w = cm.P2P_HALO_ROWS
+            if executed:
+                rext, cext = block.rows_max, block.cols_max + 2 * w
+            else:
+                rext = block.rows[i]
+                cext = block.cols[j] + col_nb * w
+            p2p[d] += (col_nb * w * rext + row_nb * w * cext) \
+                * params.slots * cm.PARTICLE_BYTES
+            rr = block.rows_max if executed else block.rows[i]
+            cc = block.cols_max if executed else block.cols[j]
+            rim_p2p[d] += 2 * w * (rr + cc)
+    return m2l, p2p, rim_m2l, rim_p2p
+
+
 def halo_volume(plan, params: ModelParams, executed: bool = False) -> dict:
     """Bytes the driver's ppermute halo exchange moves per FMM evaluation.
 
@@ -758,35 +889,122 @@ def halo_volume(plan, params: ModelParams, executed: bool = False) -> dict:
     padded ``(rows_max, cols_max)`` extents plus the corner-carrying column
     halos on every row strip.  The cut-level ``all_gather`` is not counted
     (identical structure for both plan kinds).
+
+    ``rim_m2l_boxes`` / ``rim_p2p_boxes`` additionally report the rim cost
+    of the overlapped driver: the boxes per evaluation whose compute is
+    serialized behind the exchange (the four edge strips; multiply the P2P
+    term by ``params.slots`` for slot counts) — the quantity the
+    overlap-aware comm model (:func:`plan_comm_cost`) charges against the
+    hiding budget.
     """
     block = plan.as_block() if isinstance(plan, SlabPlan) else plan
+    m2l, p2p, rim_m2l, rim_p2p = _halo_device_stats(block, params, executed)
+    return {"m2l": float(m2l.sum()), "p2p": float(p2p.sum()),
+            "total": float((m2l + p2p).sum()),
+            "rim_m2l_boxes": float(rim_m2l.sum()),
+            "rim_p2p_boxes": float(rim_p2p.sum()),
+            "sharded_levels": block.sharded_depth()}
+
+
+def plan_comm_cost(plan, counts: np.ndarray, params: ModelParams,
+                   overlap: bool = True, executed: bool = True,
+                   weight_scale: np.ndarray | None = None) -> np.ndarray:
+    """(nparts,) modeled serial communication cost per device.
+
+    ``overlap=False`` is the paper's Eq 16-20 price: ``t_byte`` times the
+    device's halo bytes, paid serially before the dependent compute.
+    ``overlap=True`` is the interior/rim driver's residue (DESIGN.md §9):
+    each device's halo bytes are hidden behind its *interior* work — the
+    plan load scaled by the interior fraction of the tile
+    (``interior_extents``) — and only ``max(0, t_comm - t_hide)`` remains
+    serial (``cost_model.comm_overlap_effective``, which owns both
+    branches).  This is the term that stops the partitioner
+    double-counting bytes the driver hides.  ``weight_scale`` (measured
+    slowdown feedback, see ``plan_loads``) scales the hiding budget too:
+    a slow device's interior takes longer in wall clock, so it hides the
+    same exchange more easily — the comm term sees the same device speeds
+    the balance term uses.
+    """
+    block = plan.as_block() if isinstance(plan, SlabPlan) else plan
+    m2l_b, p2p_b, _, _ = _halo_device_stats(block, params, executed)
+    bytes_d = m2l_b + p2p_b
+    loads = plan_loads(plan, counts, params, weight_scale)
     Pr, Pc = block.grid
-    L = params.level
-    depth = block.sharded_depth()
-    l_cut = L - depth
-    a = params.p * params.coeff_bytes
-    m2l = p2p = 0.0
-    for i in range(Pr):
-        for j in range(Pc):
-            row_nb = (i > 0) + (i < Pr - 1)          # strips sent up/down
-            col_nb = (j > 0) + (j < Pc - 1)          # strips sent left/right
-            for lv in range(l_cut + 1, L + 1):
-                shift = L - lv
-                w = cm.M2L_HALO_ROWS
-                if executed:
-                    rext, cext = block.rows_max >> shift, block.cols_max >> shift
-                    cext += 2 * w                     # corner-carrying strips
+    area = np.array([block.rows[i] * block.cols[j]
+                     for i in range(Pr) for j in range(Pc)], dtype=np.float64)
+    ints = np.array([r * c for r, c in
+                     block.interior_extents(cm.P2P_HALO_ROWS)],
+                    dtype=np.float64)
+    hide = loads * ints / np.maximum(area, 1.0)
+    return cm.comm_overlap_effective(bytes_d, hide, params, overlap=overlap)
+
+
+def plan_score(plan, counts: np.ndarray, params: ModelParams,
+               overlap: bool = True,
+               weight_scale: np.ndarray | None = None) -> float:
+    """Modeled bottleneck step cost: Eq-20 max over devices of work plus
+    the overlap-aware serial comm residue — the objective the grid
+    autotuner minimizes.  Smaller is better.  ``weight_scale`` feeds both
+    terms, so the balance and comm-hiding models see the same measured
+    device speeds."""
+    loads = plan_loads(plan, counts, params, weight_scale)
+    comm = plan_comm_cost(plan, counts, params, overlap=overlap,
+                          weight_scale=weight_scale)
+    return float((params.t_flop * loads + comm).max())
+
+
+def candidate_grids(nparts: int) -> list[tuple[int, int]]:
+    """All ``(Pr, Pc)`` factorizations of ``nparts`` — ``(nparts, 1)`` is
+    the 1-D slab candidate, everything else a 2-D block grid."""
+    return [(pr, nparts // pr) for pr in range(1, nparts + 1)
+            if nparts % pr == 0]
+
+
+def autotune_plan(counts: np.ndarray, params: ModelParams, nparts: int,
+                  method: str = "model",
+                  cell_weight_scale: np.ndarray | None = None,
+                  overlap: bool = True):
+    """Per-axis plan autotuning (ROADMAP): choose slab vs block AND the
+    ``(Pr, Pc)`` device grid at replan time.
+
+    Builds one candidate plan per factorization of ``nparts`` (the
+    ``(P, 1)`` slab plus every 2-D tensor grid that fits the leaf grid) and
+    keeps the one minimizing :func:`plan_score` — the Eq-20 balance
+    bottleneck plus the overlap-aware comm residue of ``halo_volume``, so
+    the choice trades balance against the bytes the driver cannot hide.
+    ``cell_weight_scale`` carries measured-feedback slowdowns at parent-row
+    ``(R,)`` or parent-cell ``(R, C)`` granularity (either shape works for
+    both candidate kinds; see ``plan_loads``).
+    """
+    R = (1 << params.level) // 2
+    best: tuple[float, object] | None = None
+    for Pr, Pc in candidate_grids(nparts):
+        if Pr > R or Pc > R:
+            continue
+        if Pc == 1:
+            row_scale = None
+            if cell_weight_scale is not None:
+                ws = np.asarray(cell_weight_scale, dtype=np.float64)
+                if ws.ndim == 2:
+                    # project cell slowdowns onto rows: the scale that makes
+                    # scaled row loads equal the row sums of the scaled field
+                    W = cell_loads(counts, params)
+                    den = W.sum(axis=1)
+                    num = (W * ws).sum(axis=1)
+                    row_scale = np.where(den > 0, num / np.where(den > 0, den, 1.0), 1.0)
                 else:
-                    rext = block.rows[i] >> shift
-                    cext = (block.cols[j] >> shift) + col_nb * w
-                m2l += (col_nb * w * rext + row_nb * w * cext) * a
-            w = cm.P2P_HALO_ROWS
-            if executed:
-                rext, cext = block.rows_max, block.cols_max + 2 * w
-            else:
-                rext = block.rows[i]
-                cext = block.cols[j] + col_nb * w
-            p2p += (col_nb * w * rext + row_nb * w * cext) \
-                * params.slots * cm.PARTICLE_BYTES
-    return {"m2l": float(m2l), "p2p": float(p2p), "total": float(m2l + p2p),
-            "sharded_levels": depth}
+                    row_scale = ws
+            plan = plan_from_counts(counts, params, nparts, method=method,
+                                    row_weight_scale=row_scale)
+        else:
+            plan = block_plan_from_counts(counts, params, (Pr, Pc),
+                                          method=method,
+                                          cell_weight_scale=cell_weight_scale)
+        score = plan_score(plan, counts, params, overlap=overlap,
+                           weight_scale=cell_weight_scale)
+        if best is None or score < best[0]:
+            best = (score, plan)
+    if best is None:
+        raise ValueError(f"no (Pr, Pc) factorization of {nparts} fits a"
+                         f" level-{params.level} grid")
+    return best[1]

@@ -32,40 +32,48 @@ from .cost_model import ModelParams
 from . import partition as pt
 from .fmm import fmm_velocity
 from .parallel_fmm import parallel_fmm_velocity
-from .plan import (SlabPlan, assignment_from_plan, measured_row_scale,
-                   plan_from_counts, plan_loads, plan_stats, replan)
+from .plan import (SlabPlan, assignment_from_plan, autotune_plan,
+                   candidate_grids, measured_row_scale, plan_from_counts,
+                   plan_loads, plan_stats, replan)
 from .quadtree import Tree, build_tree, choose_level, rebuild_tree
 
 
-def _velocity(tree, p, mesh, mesh_axis, use_kernels, plan):
+def _velocity(tree, p, mesh, mesh_axis, use_kernels, plan, overlap):
     if mesh is None:
         return fmm_velocity(tree, p, use_kernels=use_kernels)
-    return parallel_fmm_velocity(tree, p, mesh, mesh_axis, use_kernels, plan)
+    return parallel_fmm_velocity(tree, p, mesh, mesh_axis, use_kernels, plan,
+                                 overlap)
 
 
 @functools.partial(jax.jit, static_argnames=("p", "mesh", "mesh_axis",
-                                             "use_kernels", "plan"))
+                                             "use_kernels", "plan",
+                                             "overlap"))
 def rk2_step(tree: Tree, dt, payload=None, *, p: int, mesh=None,
              mesh_axis: str = "data", use_kernels: bool = False,
-             plan: Optional[SlabPlan] = None):
+             plan: Optional[SlabPlan] = None, overlap: bool = True):
     """One jitted RK2 midpoint step; ``dz/dt = conj(W)`` (W = u - iv).
 
     ``payload`` is an optional pytree of per-slot (n, n, s) arrays carried
     through both rebinnings (e.g. particle labels or initial radii).
-    Returns ``(new_tree, new_payload, ok)`` with ``ok`` False iff a leaf
-    box overflowed its slots during either rebin.
+    Returns ``(new_tree, new_payload, ok, occ)`` with ``ok`` False iff a
+    leaf box overflowed its slots during either rebin and ``occ`` the
+    maximum leaf occupancy after the step — computed inside the one device
+    program so the stepper's occupancy guard costs no extra host round
+    trip (the steady-state replan check reads it off the step's own
+    outputs).
     """
-    w1 = _velocity(tree, p, mesh, mesh_axis, use_kernels, plan)
+    w1 = _velocity(tree, p, mesh, mesh_axis, use_kernels, plan, overlap)
     z_mid = jnp.where(tree.mask, tree.z + 0.5 * dt * jnp.conj(w1), tree.z)
     aux = (tree.z, payload) if payload is not None else (tree.z,)
     t_mid, aux, ok1 = rebuild_tree(tree, z_mid, aux=aux)
     z0 = aux[0]
 
-    w2 = _velocity(t_mid, p, mesh, mesh_axis, use_kernels, plan)
+    w2 = _velocity(t_mid, p, mesh, mesh_axis, use_kernels, plan, overlap)
     z_new = jnp.where(t_mid.mask, z0 + dt * jnp.conj(w2), t_mid.z)
     t_new, aux, ok2 = rebuild_tree(t_mid, z_new,
                                    aux=aux[1] if payload is not None else None)
-    return t_new, aux, ok1 & ok2
+    occ = t_new.mask.sum(axis=-1).max()
+    return t_new, aux, ok1 & ok2, occ
 
 
 @dataclasses.dataclass
@@ -87,6 +95,12 @@ class VortexStepper:
     :class:`BlockPlan` tile grid (``Pr * Pc`` must equal the mesh size)
     instead of 1-D row bands; re-planning then works on per-tile weights
     through the same ``replan`` / ``measured_row_scale`` interface.
+    ``plan_grid="auto"`` lets the per-axis grid autotuner
+    (``plan.autotune_plan``) choose slab vs block and the ``(Pr, Pc)``
+    factorization at build and every replan, scoring the Eq-20 balance
+    bottleneck plus the overlap-aware comm residue across all candidate
+    grids.  ``overlap`` selects the sharded driver's interior/rim
+    overlapped execution (default) vs the monolithic ordering.
     ``measured_times_fn(stepper) -> (nparts,) seconds`` is the injection
     point for real per-device timers (tests use it to emulate heterogeneous
     pools); without it, dynamic re-planning is driven by the particle
@@ -97,7 +111,7 @@ class VortexStepper:
                  *, p: int = 12, dt: float = 0.005, mesh=None,
                  mesh_axis: str = "data", use_kernels: bool = False,
                  plan_method: str = "model", dynamic: bool = False,
-                 plan_grid: Optional[tuple[int, int]] = None,
+                 plan_grid=None, overlap: bool = True,
                  replan_every: int = 4, replan_tol: float = 0.05,
                  target_per_box: float = 8.0, slots_headroom: float = 2.0,
                  occupancy_guard: float = 0.9, cut: Optional[int] = None,
@@ -109,7 +123,9 @@ class VortexStepper:
         self.use_kernels = use_kernels
         self.plan_method = plan_method
         self.dynamic = dynamic
-        self.plan_grid = None if plan_grid is None else tuple(plan_grid)
+        self.overlap = overlap
+        self.plan_grid = plan_grid if plan_grid in (None, "auto") \
+            else tuple(plan_grid)
         self.replan_every = max(int(replan_every), 1)
         self.replan_tol = float(replan_tol)
         self.target_per_box = float(target_per_box)
@@ -133,8 +149,14 @@ class VortexStepper:
 
     def _min_level(self) -> int:
         # every device needs at least one parent row (2 leaf rows); a 2-D
-        # grid only needs that per axis
-        if self.plan_grid is not None:
+        # grid only needs that per axis.  "auto" must fit its most
+        # demanding *surviving* candidate, so size for the most square
+        # factorization (the least demanding per axis) — larger-axis
+        # candidates that don't fit are skipped by the autotuner.
+        if self.plan_grid == "auto":
+            need = max(min(2 * max(g) for g in candidate_grids(self.nparts)),
+                       4)
+        elif self.plan_grid is not None:
             need = max(2 * max(self.plan_grid), 4)
         else:
             need = max(2 * self.nparts, 4)
@@ -161,15 +183,20 @@ class VortexStepper:
         cut = self._cut if self._cut is not None else min(level - 1, 4)
         self.params = ModelParams(level=level, cut=max(cut, 1), p=self.p,
                                   slots=slots)
-        if self.plan_grid is not None and \
+        if self.plan_grid not in (None, "auto") and \
                 self.plan_grid[0] * self.plan_grid[1] != self.nparts:
             raise ValueError(f"plan_grid {self.plan_grid} has "
                              f"{self.plan_grid[0] * self.plan_grid[1]} tiles"
                              f" for {self.nparts} devices")
         counts = self.index.counts
-        self.plan = plan_from_counts(counts, self.params, self.nparts,
-                                     method=self.plan_method,
-                                     grid=self.plan_grid)
+        if self.plan_grid == "auto":
+            self.plan = autotune_plan(counts, self.params, self.nparts,
+                                      method=self.plan_method,
+                                      overlap=self.overlap)
+        else:
+            self.plan = plan_from_counts(counts, self.params, self.nparts,
+                                         method=self.plan_method,
+                                         grid=self.plan_grid)
         self.subtree_assign = assignment_from_plan(self.plan, self.params.cut)
         self._cached_lb = plan_stats(self.plan, counts,
                                      self.params)["load_balance"]
@@ -197,14 +224,22 @@ class VortexStepper:
 
     # -- the dynamic loop ----------------------------------------------------
 
-    def maybe_replan(self, measured_times: Optional[np.ndarray] = None) -> bool:
+    def maybe_replan(self, measured_times: Optional[np.ndarray] = None,
+                     occ: Optional[int] = None) -> bool:
         """Re-level if occupancy approaches capacity; re-plan if it pays.
 
+        ``occ`` (max leaf occupancy) is normally read off the jitted step's
+        own outputs (``rk2_step`` returns it), so the overflow guard
+        triggers no extra device sync; the counts grid is then pulled once
+        per replan interval to refresh the reported load balance and (when
+        dynamic) drive the re-plan.
         Returns True when a new plan (or tree level) was adopted."""
-        counts = self.counts()
-        if counts.max() >= self.occupancy_guard * self.params.slots:
+        if occ is None:
+            occ = int(np.asarray(self.tree.mask.sum(axis=-1).max()))
+        if occ >= self.occupancy_guard * self.params.slots:
             self._relevel()
             return True
+        counts = self.counts()
         self._cached_lb = plan_stats(self.plan, counts,
                                      self.params)["load_balance"]
         if not self.dynamic:
@@ -213,7 +248,8 @@ class VortexStepper:
             measured_times = self.measured_times_fn(self)
         new_plan = replan(counts, self.params, self.nparts,
                           prev_plan=self.plan, measured_times=measured_times,
-                          method=self.plan_method, grid=self.plan_grid)
+                          method=self.plan_method, grid=self.plan_grid,
+                          overlap=self.overlap)
         if new_plan == self.plan:
             return False
         # adopt when the modeled bottleneck (measured-rate-weighted when
@@ -244,20 +280,22 @@ class VortexStepper:
     def step(self) -> StepRecord:
         """Advance one RK2 step; time it; periodically re-plan."""
         t0 = time.perf_counter()
-        tree, payload, ok = rk2_step(
+        tree, payload, ok, occ = rk2_step(
             self.tree, self.dt, self.payload, p=self.p, mesh=self.mesh,
             mesh_axis=self.mesh_axis, use_kernels=self.use_kernels,
-            plan=None if self.mesh is None else self.plan)
+            plan=None if self.mesh is None else self.plan,
+            overlap=self.overlap)
         jax.block_until_ready(tree.z)
         releveled = not bool(ok)
         if releveled:
             # a box overflowed during rebinning: the old tree is still
             # intact — re-level on the host and redo the step safely.
             self._relevel()
-            tree, payload, ok = rk2_step(
+            tree, payload, ok, occ = rk2_step(
                 self.tree, self.dt, self.payload, p=self.p, mesh=self.mesh,
                 mesh_axis=self.mesh_axis, use_kernels=self.use_kernels,
-                plan=None if self.mesh is None else self.plan)
+                plan=None if self.mesh is None else self.plan,
+                overlap=self.overlap)
             jax.block_until_ready(tree.z)
             if not bool(ok):
                 raise RuntimeError(
@@ -270,7 +308,9 @@ class VortexStepper:
         self.step_count += 1
         replanned = False
         if self.step_count % self.replan_every == 0:
-            replanned = self.maybe_replan()
+            # occ comes off the step's own outputs (already on host after
+            # block_until_ready) — the check itself syncs nothing extra
+            replanned = self.maybe_replan(occ=int(occ))
         rec = StepRecord(step=self.step_count, seconds=seconds,
                          load_balance=self._cached_lb,
                          replanned=replanned, releveled=releveled,

@@ -30,6 +30,7 @@ from __future__ import annotations
 
 import functools
 
+import numpy as np
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
@@ -60,20 +61,27 @@ def _m2l_kernel(sr_ref, si_ref, wr_ref, wi_ref, or_ref, oi_ref,
 
 @functools.partial(jax.jit, static_argnames=("level", "p", "row0", "halo",
                                              "col0", "col_halo", "block",
-                                             "interpret"))
+                                             "interpret", "lane_pad"))
 def m2l_pallas_slab(me_halo: jnp.ndarray, level: int, p: int, row0: int = 0,
                     halo: int = ex.M2L_HALO, col0: int = 0, col_halo: int = 0,
                     block: tuple[int, int] = (8, 8),
-                    interpret: bool = True) -> jnp.ndarray:
+                    interpret: bool = True,
+                    lane_pad: bool = False) -> jnp.ndarray:
     """Parity-folded M2L over a halo'd slab/tile — same contract as
     ``expansions.m2l_folded``: ``me_halo`` is (rows + 2*halo,
     cols + 2*col_halo, p) with ghost data attached, ``row0``/``col0``
     anchor the global parity (``col_halo=0`` means full-width columns,
     zero-padded internally).  Returns the (rows, cols, p) LE slab.
+
+    ``lane_pad=True`` pads the stacked coefficient axis ``4p`` up to a lane
+    multiple of 128 (real-TPU layout; DESIGN.md §5) — the folded operator is
+    zero-padded to match, so the extra lanes contribute exact zeros and the
+    numerics are unchanged; the accumulator is sliced back to ``4p``.
     """
     rows = me_halo.shape[0] - 2 * halo
     cols = me_halo.shape[1] - 2 * col_halo
     p4 = 4 * p
+    p4l = -(-p4 // 128) * 128 if lane_pad else p4
     stack, (PR, shift), (PC, cshift) = ex.m2l_slab_stack(me_halo, p, row0,
                                                          halo, col0, col_halo)
 
@@ -81,24 +89,25 @@ def m2l_pallas_slab(me_halo: jnp.ndarray, level: int, p: int, row0: int = 0,
     PRp = -(-PR // BY) * BY
     PCp = -(-PC // BX) * BX
     sr = jnp.pad(stack.real.astype(jnp.float32),
-                 ((0, PRp - PR), (0, PCp - PC), (0, 0)))
+                 ((0, PRp - PR), (0, PCp - PC), (0, p4l - p4)))
     si = jnp.pad(stack.imag.astype(jnp.float32),
-                 ((0, PRp - PR), (0, PCp - PC), (0, 0)))
+                 ((0, PRp - PR), (0, PCp - PC), (0, p4l - p4)))
 
     W = ex.m2l_folded_operator(p)
-    wr = jnp.asarray(W.real, dtype=jnp.float32)
-    wi = jnp.asarray(W.imag, dtype=jnp.float32)
+    wpad = ((0, 0), (0, p4l - p4), (0, p4l - p4))
+    wr = jnp.asarray(np.pad(W.real, wpad), dtype=jnp.float32)
+    wi = jnp.asarray(np.pad(W.imag, wpad), dtype=jnp.float32)
 
     grid = (PRp // BY, PCp // BX)
-    halo_spec = pl.BlockSpec((BY + 2, BX + 2, p4),
+    halo_spec = pl.BlockSpec((BY + 2, BX + 2, p4l),
                              lambda i, j: (i * BY, j * BX, 0),
                              indexing_mode=pl.Unblocked())
-    op_spec = pl.BlockSpec((8, p4, p4), lambda i, j: (0, 0, 0))
-    out_spec = pl.BlockSpec((BY, BX, p4), lambda i, j: (i, j, 0))
-    out_shape = [jax.ShapeDtypeStruct((PRp, PCp, p4), jnp.float32)] * 2
+    op_spec = pl.BlockSpec((8, p4l, p4l), lambda i, j: (0, 0, 0))
+    out_spec = pl.BlockSpec((BY, BX, p4l), lambda i, j: (i, j, 0))
+    out_shape = [jax.ShapeDtypeStruct((PRp, PCp, p4l), jnp.float32)] * 2
 
     br, bi = pl.pallas_call(
-        functools.partial(_m2l_kernel, BY=BY, BX=BX, p4=p4),
+        functools.partial(_m2l_kernel, BY=BY, BX=BX, p4=p4l),
         grid=grid,
         in_specs=[halo_spec, halo_spec, op_spec, op_spec],
         out_specs=[out_spec, out_spec],
@@ -106,7 +115,7 @@ def m2l_pallas_slab(me_halo: jnp.ndarray, level: int, p: int, row0: int = 0,
         interpret=interpret,
     )(sr, si, wr, wi)
 
-    acc = (br[:PR, :PC] + 1j * bi[:PR, :PC]).astype(me_halo.dtype)
+    acc = (br[:PR, :PC, :p4] + 1j * bi[:PR, :PC, :p4]).astype(me_halo.dtype)
     le = ex.from_parent_planes(acc, p)                   # (2PR, 2PC, p)
     le = jax.lax.slice_in_dim(le, shift, shift + rows, axis=0)
     le = jax.lax.slice_in_dim(le, cshift, cshift + cols, axis=1)
@@ -115,8 +124,9 @@ def m2l_pallas_slab(me_halo: jnp.ndarray, level: int, p: int, row0: int = 0,
 
 def m2l_pallas(me: jnp.ndarray, level: int, p: int,
                block: tuple[int, int] = (8, 8),
-               interpret: bool = True) -> jnp.ndarray:
+               interpret: bool = True, lane_pad: bool = False) -> jnp.ndarray:
     """Fused M2L over a full (ny, nx, p) complex ME grid -> (ny, nx, p) LE."""
     me_halo = jnp.pad(me, ((ex.M2L_HALO, ex.M2L_HALO), (0, 0), (0, 0)))
     return m2l_pallas_slab(me_halo, level, p, row0=0, halo=ex.M2L_HALO,
-                           block=block, interpret=interpret)
+                           block=block, interpret=interpret,
+                           lane_pad=lane_pad)

@@ -8,11 +8,20 @@ The M2L/P2P wrappers come in two forms with one kernel behind both: the
 grid form (serial driver — zero ghosts attached here) and the slab form
 (sharded driver — ghosts already exchanged by the caller).  See DESIGN.md
 §4/§5.
+
+Plan-aware block autotuning (DESIGN.md §5/§9; Holm et al., arXiv:1311.1006):
+``block=None`` resolves the ``(BY, BX)`` launch tiling from a small static
+table keyed by the launch-shape class the execution plan implies — the
+monolithic/interior tile, or one of the thin rim strips of the overlapped
+driver.  Block shape is a pure perf knob (bit-equivalent outputs, pinned by
+tests), so the table can be retuned per backend without touching numerics.
+Lane padding (``lane_pad=None`` -> pad on real TPU only) pads the kernels'
+lane axes (``s`` for P2P, ``4p`` for M2L) to multiples of 128 inside the
+wrappers; padded lanes are structural zeros, so this too is numerics-free.
 """
 from __future__ import annotations
 
 import jax
-import jax.numpy as jnp
 
 from . import flash_attn as _fa
 from . import m2l as _m2l
@@ -24,26 +33,103 @@ def _interpret() -> bool:
     return jax.default_backend() != "tpu"
 
 
+# ---------------------------------------------------------------------------
+# Plan-aware block autotuning
+# ---------------------------------------------------------------------------
+
+# Static (BY, BX) per launch-shape class.  Classes map onto what an
+# execution plan actually launches: full interior/monolithic tiles, wide
+# row-slab tiles, and the thin rim strips of the overlapped driver (a few
+# rows/cols spanning the whole tile edge).  Values are clipped to the
+# launch extents, and the kernels pad non-dividing extents up to a block
+# multiple, so any entry is legal for any shape.
+BLOCK_TABLE: dict[str, tuple[int, int]] = {
+    "rim_row": (2, 32),     # thin row strips: keep the whole strip in one
+    "rim_col": (32, 2),     # sublane/lane-friendly pass along its long axis
+    "small": (4, 4),        # tiles smaller than one default block
+    "wide": (8, 16),        # row-slab tiles much wider than tall
+    "tile": (8, 8),         # default square interior launch
+}
+
+
+def _shape_class(rows: int, cols: int) -> str:
+    if rows <= 4 and cols > 4 * rows:
+        return "rim_row"
+    if cols <= 4 and rows > 4 * cols:
+        return "rim_col"
+    if rows <= 4 and cols <= 4:
+        return "small"
+    if cols >= 4 * rows:
+        return "wide"
+    return "tile"
+
+
+def autotune_block(rows: int, cols: int) -> tuple[int, int]:
+    """Pick ``(BY, BX)`` for a static (rows, cols) launch from BLOCK_TABLE.
+
+    Clipped to the launch extents so a block never exceeds the grid it
+    tiles.  Pure perf knob — every choice is bit-equivalent (DESIGN.md §5).
+    """
+    by, bx = BLOCK_TABLE[_shape_class(rows, cols)]
+    return max(min(by, rows), 1), max(min(bx, cols), 1)
+
+
+def _resolve(block, rows: int, cols: int, lane_pad):
+    if block is None:
+        block = autotune_block(rows, cols)
+    if lane_pad is None:
+        lane_pad = not _interpret()
+    return block, lane_pad
+
+
 def p2p_apply_slab(z_halo, q_halo, mask_halo, sigma,
-                   block: tuple[int, int] = (8, 8)):
-    """P2P over a slab with ±1 ghost rows/cols attached (sharded driver)."""
+                   block: tuple[int, int] | None = None,
+                   lane_pad: bool | None = None):
+    """P2P over a slab with ±1 ghost rows/cols attached (sharded driver).
+
+    ``block=None`` autotunes ``(BY, BX)`` from the interior launch shape;
+    ``lane_pad=None`` pads ``s`` to a lane multiple of 128 on real TPU.
+    """
+    block, lane_pad = _resolve(block, z_halo.shape[0] - 2,
+                               z_halo.shape[1] - 2, lane_pad)
     return _p2p.p2p_pallas_slab(z_halo, q_halo, mask_halo, sigma=sigma,
-                                block=block, interpret=_interpret())
+                                block=block, interpret=_interpret(),
+                                lane_pad=lane_pad)
 
 
-def m2l_apply(me, level: int, p: int, block: tuple[int, int] = (8, 8)):
+def m2l_apply(me, level: int, p: int, block: tuple[int, int] | None = None,
+              lane_pad: bool | None = None):
     """Parity-folded M2L for one level's full (ny, nx, p) ME grid."""
-    return _m2l.m2l_pallas(me, level, p, block=block, interpret=_interpret())
+    block, lane_pad = _resolve(block, me.shape[0] // 2, me.shape[1] // 2,
+                               lane_pad)
+    return _m2l.m2l_pallas(me, level, p, block=block, interpret=_interpret(),
+                           lane_pad=lane_pad)
 
 
 def m2l_apply_slab(me_halo, level: int, p: int, row0: int = 0,
                    halo: int = _ex.M2L_HALO, col0: int = 0, col_halo: int = 0,
-                   block: tuple[int, int] = (8, 8)):
+                   block: tuple[int, int] | None = None,
+                   lane_pad: bool | None = None):
     """Parity-folded M2L over a halo'd row slab or 2-D tile (sharded
-    driver); ``col_halo>0`` means column ghosts are attached too."""
+    driver); ``col_halo>0`` means column ghosts are attached too.
+
+    ``block=None`` autotunes ``(BY, BX)`` from the parent-plane launch
+    shape (the tile/rim geometry the plan implies); ``lane_pad=None`` pads
+    ``4p`` to a lane multiple of 128 on real TPU.
+    """
+    if block is None or lane_pad is None:
+        rows = me_halo.shape[0] - 2 * halo
+        _, PR, _ = _ex.m2l_slab_geometry(rows, row0, halo)
+        if col_halo == 0:
+            PC = me_halo.shape[1] // 2
+        else:
+            _, PC, _ = _ex.m2l_slab_geometry(me_halo.shape[1] - 2 * col_halo,
+                                             col0, col_halo)
+        block, lane_pad = _resolve(block, PR, PC, lane_pad)
     return _m2l.m2l_pallas_slab(me_halo, level, p, row0=row0, halo=halo,
                                 col0=col0, col_halo=col_halo,
-                                block=block, interpret=_interpret())
+                                block=block, interpret=_interpret(),
+                                lane_pad=lane_pad)
 
 
 def flash_attention(q, k, v, causal: bool = True, block_q: int = 128,

@@ -69,38 +69,46 @@ def _p2p_kernel(zr_ref, zi_ref, qr_ref, qi_ref, m_ref, wr_ref, wi_ref,
     wi_ref[...] = acci.reshape(BY, BX, s)
 
 
-@functools.partial(jax.jit, static_argnames=("sigma", "block", "interpret"))
+@functools.partial(jax.jit, static_argnames=("sigma", "block", "interpret",
+                                             "lane_pad"))
 def p2p_pallas_slab(z_halo, q_halo, mask_halo, sigma=None,
-                    block: tuple[int, int] = (8, 8), interpret: bool = True):
+                    block: tuple[int, int] = (8, 8), interpret: bool = True,
+                    lane_pad: bool = False):
     """P2P over a slab with ±1 ghost rows/cols already attached.
 
     z_halo/q_halo: complex (rows+2, cols+2, s); mask_halo: bool.  Ghosts are
     zeros at domain edges or exchanged halos under ``shard_map``.  Returns
     the interior (rows, cols, s) complex W per slot.
+
+    ``lane_pad=True`` pads the slot axis ``s`` up to a lane multiple of 128
+    (real-TPU layout; DESIGN.md §5) — padded slots carry ``mask=0`` so they
+    are structurally excluded and the numerics are unchanged; the output is
+    sliced back to ``s``.
     """
     rows, cols, s = (z_halo.shape[0] - 2, z_halo.shape[1] - 2,
                      z_halo.shape[2])
+    sl = -(-s // 128) * 128 if lane_pad else s
     BY, BX = min(block[0], rows), min(block[1], cols)
     rowsP = -(-rows // BY) * BY
     colsP = -(-cols // BX) * BX
 
     def prep(x):
         return jnp.pad(x.astype(jnp.float32),
-                       ((0, rowsP - rows), (0, colsP - cols), (0, 0)))
+                       ((0, rowsP - rows), (0, colsP - cols), (0, sl - s)))
 
     zr, zi = prep(z_halo.real), prep(z_halo.imag)
     qr, qi = prep(q_halo.real), prep(q_halo.imag)
     m = prep(mask_halo)
 
     grid = (rowsP // BY, colsP // BX)
-    halo_spec = pl.BlockSpec((BY + 2, BX + 2, s),
+    halo_spec = pl.BlockSpec((BY + 2, BX + 2, sl),
                              lambda i, j: (i * BY, j * BX, 0),
                              indexing_mode=pl.Unblocked())
-    out_spec = pl.BlockSpec((BY, BX, s), lambda i, j: (i, j, 0))
-    out_shape = [jax.ShapeDtypeStruct((rowsP, colsP, s), jnp.float32)] * 2
+    out_spec = pl.BlockSpec((BY, BX, sl), lambda i, j: (i, j, 0))
+    out_shape = [jax.ShapeDtypeStruct((rowsP, colsP, sl), jnp.float32)] * 2
 
     wr, wi = pl.pallas_call(
-        functools.partial(_p2p_kernel, sigma=sigma, BY=BY, BX=BX, s=s),
+        functools.partial(_p2p_kernel, sigma=sigma, BY=BY, BX=BX, s=sl),
         grid=grid,
         in_specs=[halo_spec] * 5,
         out_specs=[out_spec, out_spec],
@@ -108,11 +116,11 @@ def p2p_pallas_slab(z_halo, q_halo, mask_halo, sigma=None,
         interpret=interpret,
     )(zr, zi, qr, qi, m)
 
-    return (wr[:rows, :cols] + 1j * wi[:rows, :cols]).astype(z_halo.dtype)
+    return (wr[:rows, :cols, :s] + 1j * wi[:rows, :cols, :s]).astype(z_halo.dtype)
 
 
 def p2p_pallas(z, q, mask, sigma=None, block: tuple[int, int] = (8, 8),
-               interpret: bool = True):
+               interpret: bool = True, lane_pad: bool = False):
     """P2P over a (ny, nx, s) dense leaf grid.  Returns complex W per slot.
 
     z, q: complex64; mask: bool.  ``interpret=True`` runs the kernel body in
@@ -121,4 +129,4 @@ def p2p_pallas(z, q, mask, sigma=None, block: tuple[int, int] = (8, 8),
     pad = ((P2P_HALO, P2P_HALO), (P2P_HALO, P2P_HALO), (0, 0))
     return p2p_pallas_slab(jnp.pad(z, pad), jnp.pad(q, pad),
                            jnp.pad(mask, pad), sigma=sigma, block=block,
-                           interpret=interpret)
+                           interpret=interpret, lane_pad=lane_pad)

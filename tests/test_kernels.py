@@ -159,6 +159,77 @@ def test_fmm_end_to_end_with_kernels_p17():
 
 
 # ---------------------------------------------------------------------------
+# Plan-aware block autotuning + lane padding (numerics-free, DESIGN.md §5/§9)
+# ---------------------------------------------------------------------------
+
+
+def test_autotune_block_table_and_clipping():
+    from repro.kernels.ops import BLOCK_TABLE, autotune_block
+
+    assert autotune_block(1, 32) == (1, 32)          # rim row strip, clipped
+    assert autotune_block(2, 64) == BLOCK_TABLE["rim_row"]
+    assert autotune_block(64, 2) == BLOCK_TABLE["rim_col"]
+    assert autotune_block(3, 3) == (3, 3)            # small tile, clipped
+    assert autotune_block(16, 16) == BLOCK_TABLE["tile"]
+    assert autotune_block(8, 64) == BLOCK_TABLE["wide"]
+    by, bx = autotune_block(1, 1)
+    assert by >= 1 and bx >= 1
+
+
+def test_m2l_lane_pad_and_autotune_block_equivalence():
+    """lane_pad (4p -> 128 lanes), block=None autotuning, and non-dividing
+    explicit blocks all reproduce the default launch bit-for-bit in f32."""
+    rng = np.random.default_rng(21)
+    level, p = 4, 7                                   # 4p = 28, pads to 128
+    n = 1 << level
+    me = jnp.asarray(rng.normal(size=(n, n, p)) + 1j * rng.normal(size=(n, n, p)),
+                     jnp.complex64)
+    me_halo = jnp.pad(me, ((2, 2), (0, 0), (0, 0)))
+    base = np.asarray(m2l_pallas_slab(me_halo, level, p, block=(4, 4)))
+    padded = np.asarray(m2l_pallas_slab(me_halo, level, p, block=(4, 4),
+                                        lane_pad=True))
+    np.testing.assert_allclose(padded, base, rtol=1e-6, atol=1e-6)
+    from repro.kernels import ops as kops
+    auto = np.asarray(kops.m2l_apply_slab(me_halo, level, p, lane_pad=False))
+    np.testing.assert_allclose(auto, base, rtol=1e-6, atol=1e-6)
+    auto_pad = np.asarray(kops.m2l_apply_slab(me_halo, level, p,
+                                              lane_pad=True))
+    np.testing.assert_allclose(auto_pad, base, rtol=1e-6, atol=1e-6)
+    for blk in ((3, 5), (7, 2)):                      # non-dividing blocks
+        odd = np.asarray(m2l_pallas_slab(me_halo, level, p, block=blk))
+        np.testing.assert_allclose(odd, base, rtol=1e-6, atol=1e-6)
+
+
+def test_p2p_lane_pad_and_autotune_block_equivalence():
+    rng = np.random.default_rng(22)
+    ny, nx, s = 6, 12, 5                              # s = 5 pads to 128
+    z = jnp.asarray(rng.uniform(size=(ny, nx, s)) + 1j * rng.uniform(size=(ny, nx, s)),
+                    jnp.complex64)
+    q = jnp.asarray(rng.normal(size=(ny, nx, s)) + 0j, jnp.complex64)
+    mask = jnp.asarray(rng.uniform(size=(ny, nx, s)) > 0.3)
+    base = np.asarray(p2p_pallas(z, q, mask, sigma=0.05, block=(4, 4)))
+    padded = np.asarray(p2p_pallas(z, q, mask, sigma=0.05, block=(4, 4),
+                                   lane_pad=True))
+    m = np.asarray(mask)
+    np.testing.assert_allclose(np.where(m, padded, 0), np.where(m, base, 0),
+                               rtol=1e-6, atol=1e-6)
+    from repro.kernels import ops as kops
+    pad3 = ((1, 1), (1, 1), (0, 0))
+    zh, qh, mh = (jnp.pad(z, pad3), jnp.pad(q, pad3), jnp.pad(mask, pad3))
+    auto = np.asarray(kops.p2p_apply_slab(zh, qh, mh, 0.05, lane_pad=False))
+    np.testing.assert_allclose(np.where(m, auto, 0), np.where(m, base, 0),
+                               rtol=1e-6, atol=1e-6)
+    auto_pad = np.asarray(kops.p2p_apply_slab(zh, qh, mh, 0.05,
+                                              lane_pad=True))
+    np.testing.assert_allclose(np.where(m, auto_pad, 0), np.where(m, base, 0),
+                               rtol=1e-6, atol=1e-6)
+    for blk in ((5, 3), (7, 7)):                      # non-dividing blocks
+        odd = np.asarray(p2p_pallas(z, q, mask, sigma=0.05, block=blk))
+        np.testing.assert_allclose(np.where(m, odd, 0), np.where(m, base, 0),
+                                   rtol=1e-6, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
 # Flash attention kernel
 # ---------------------------------------------------------------------------
 
