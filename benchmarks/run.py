@@ -492,6 +492,70 @@ def bench_plan_halo(rows, quick=False):
                          f"_ratio={hs / hb:.2f}x"))
 
 
+def bench_equations(rows, quick=False):
+    """The pluggable equation subsystem (DESIGN.md §10): wall time of the
+    two new workloads next to the vortex baseline, same tree, same slab
+    path.
+
+    ``eq_laplace_step`` times one full Laplace evaluation (potential +
+    field from ONE downward sweep — the 2-channel analogue of a vortex
+    velocity step); ``eq_tracer_eval`` times the passive probe-grid
+    evaluation (sources' expansions + near field at a separate target
+    batch).  Derived fields carry the f64 direct-sum relative error of a
+    subsample, so the rows double as numerics smoke."""
+    import jax
+    from repro.core import equations as eqs
+    from repro.core.fmm import fmm_evaluate, fmm_velocity
+    from repro.core.quadtree import build_tree, gather_particle_values
+
+    n_particles, level, p = (20_000, 5, 12) if quick else (100_000, 6, 17)
+    rng = np.random.default_rng(0)
+    pos = rng.uniform(0.01, 0.99, (n_particles, 2))
+    strength = rng.normal(size=n_particles)
+    # sigma well under the leaf box size so the mollifier is ~1 at
+    # interaction-list distance and the relerr fields measure the
+    # implementation, not Type-I kernel-substitution error (paper §3)
+    sigma = 0.25 / 2 ** level
+
+    vtree, _ = build_tree(pos, strength, level, sigma)
+    vortex_t = _time(lambda: jax.block_until_ready(fmm_velocity(vtree, p)))
+
+    ltree, lindex = build_tree(pos, strength, level, sigma,
+                               charge_scale=eqs.LAPLACE.charge_scale)
+    lap = lambda: jax.block_until_ready(
+        fmm_evaluate(ltree, p, eq=eqs.LAPLACE))
+    lap_t = _time(lap)
+    out = np.asarray(fmm_evaluate(ltree, p, eq=eqs.LAPLACE))
+    sel = rng.choice(n_particles, size=400, replace=False)
+    z = pos[:, 0] + 1j * pos[:, 1]
+    exact = eqs.direct_sum(eqs.LAPLACE, z[sel], z, strength, sigma=sigma)
+    pot = gather_particle_values(out[..., 0], lindex)[sel].real
+    err = float(np.linalg.norm(pot - exact[:, 0].real) /
+                np.linalg.norm(exact[:, 0].real))
+    rows.append(("eq_laplace_step", lap_t,
+                 f"C=2_vs_vortex={lap_t / max(vortex_t, 1e-9):.2f}x"
+                 f"_relerr={err:.1e}"))
+
+    m = int(np.sqrt(n_particles // 4))
+    xs = np.linspace(0.05, 0.95, m)
+    PX, PY = np.meshgrid(xs, xs, indexing="xy")
+    probes = np.stack([PX.ravel(), PY.ravel()], axis=1)
+    targets, tindex = build_tree(probes, np.zeros(len(probes)), level, sigma)
+    trc = lambda: jax.block_until_ready(
+        fmm_evaluate(vtree, p, eq=eqs.TRACER, targets=targets))
+    trc_t = _time(trc)
+    got = gather_particle_values(
+        np.asarray(fmm_evaluate(vtree, p, eq=eqs.TRACER, targets=targets)),
+        tindex)
+    tsel = rng.choice(len(probes), size=400, replace=False)
+    tz = probes[tsel, 0] + 1j * probes[tsel, 1]
+    texact = eqs.direct_sum(eqs.TRACER, tz, z, strength, sigma=sigma)
+    terr = float(np.linalg.norm(got[tsel] - texact) /
+                 np.linalg.norm(texact))
+    rows.append(("eq_tracer_eval", trc_t,
+                 f"targets={len(probes)}_relerr={terr:.1e}"))
+
+
 def bench_moe_placement(rows, quick=False):
     """The paper's technique transplanted: expert-placement load balance."""
     from repro.models.moe import expert_placement
@@ -519,7 +583,8 @@ def main() -> None:
     for bench in (bench_fig6_stage_timings, bench_fig7_9_scaling,
                   bench_table12_memory, bench_kernels, bench_m2l_staging_bytes,
                   bench_parallel_multidevice, bench_plan_execution,
-                  bench_overlap, bench_plan_halo, bench_moe_placement):
+                  bench_overlap, bench_plan_halo, bench_equations,
+                  bench_moe_placement):
         bench(rows, quick=quick)
     print("name,us_per_call,derived")
     for name, us, derived in rows:

@@ -41,6 +41,9 @@ class ModelParams:
     # calibration constants (seconds per unit); fit from measurements
     t_flop: float = 1.0
     t_byte: float = 1.0
+    # per-equation work constant (core/equations.py): output channels per
+    # target — P2P and L2P scale with it, the coefficient sweeps do not
+    nout: int = 1
 
 
 # ---------------------------------------------------------------------------
@@ -54,16 +57,20 @@ def work_nonleaf(p: int, n_c: int = N_CHILD, n_il: int = N_IL) -> float:
 
 
 def work_leaf(n_i: np.ndarray, p: int, n_il: int = N_IL, n_nd: int = N_ND,
-              neighbor_counts: np.ndarray | None = None) -> np.ndarray:
+              neighbor_counts: np.ndarray | None = None,
+              nout: int = 1) -> np.ndarray:
     """Eq (14): O(2 N_i p + p^2 n_IL + n_nd N_i^2) per leaf box.
 
     If ``neighbor_counts`` (sum of particle counts over the 3x3 stencil) is
     given, the P2P term uses the *exact* N_i * sum_nd N_j product instead of
-    the paper's uniform n_nd * N_i^2 surrogate.
+    the paper's uniform n_nd * N_i^2 surrogate.  ``nout`` is the equation's
+    output arity (ModelParams.nout): the P2P pair sum and the L2P half of
+    the ``2 N_i p`` term scale with the channel count, the P2M half and the
+    shared coefficient sweep do not.
     """
     n_i = np.asarray(n_i, dtype=np.float64)
     p2p = n_i * neighbor_counts if neighbor_counts is not None else n_nd * n_i * n_i
-    return 2.0 * n_i * p + float(p * p * n_il) + p2p
+    return (1.0 + nout) * n_i * p + float(p * p * n_il) + p2p * nout
 
 
 def neighbor_count_sum(counts: np.ndarray) -> np.ndarray:
@@ -93,7 +100,8 @@ def work_subtree(counts: np.ndarray, params: ModelParams) -> np.ndarray:
     w_nonleaf = nonleaf_boxes * work_nonleaf(p)
 
     nb = neighbor_count_sum(counts)
-    w_leaf = work_leaf(counts, p, neighbor_counts=nb)       # (2^L, 2^L)
+    w_leaf = work_leaf(counts, p, neighbor_counts=nb,
+                       nout=params.nout)                    # (2^L, 2^L)
     w_leaf_sub = w_leaf.reshape(nsub, sub_leaf, nsub, sub_leaf).sum(axis=(1, 3))
     return (w_leaf_sub + w_nonleaf).reshape(-1)
 

@@ -124,20 +124,32 @@ def _powers(zhat: jnp.ndarray, p: int) -> jnp.ndarray:
 
 
 def p2m(z: jnp.ndarray, q: jnp.ndarray, mask: jnp.ndarray, centers: jnp.ndarray,
-        r: float, p: int) -> jnp.ndarray:
-    """Particles -> normalized MEs at the leaf level.  -> (n, n, p)."""
+        r: float, p: int, coeff: np.ndarray | None = None) -> jnp.ndarray:
+    """Particles -> normalized MEs at the leaf level.  -> (n, n, p).
+
+    ``coeff`` is an optional (p,) per-order charge map ``c_k`` (the
+    equation spec's ``p2m_coeff``): ``ahat_k = c_k sum q zhat^k``.  None
+    is the identity map of the velocity kernel.
+    """
     zhat = (z - centers[..., None]) / r            # (n, n, s)
     pw = _powers(zhat, p)                          # (n, n, s, p)
     qm = jnp.where(mask, q, 0.0)
-    return jnp.einsum("yxs,yxsk->yxk", qm, pw)
+    me = jnp.einsum("yxs,yxsk->yxk", qm, pw)
+    if coeff is not None:
+        me = me * jnp.asarray(coeff, dtype=me.dtype)
+    return me
 
 
-def m2m(me_child: jnp.ndarray, p: int) -> jnp.ndarray:
+def m2m(me_child: jnp.ndarray, p: int, op: np.ndarray | None = None
+        ) -> jnp.ndarray:
     """Child level grid (2ny, 2nx, p) -> parent grid (ny, nx, p).
 
-    Rectangular grids supported (row slabs under the parallel decomposition).
+    Rectangular grids supported (row slabs under the parallel
+    decomposition).  ``op`` overrides the (4, p, p) translation tensor
+    (equation specs supply theirs; None is the velocity kernel's).
     """
-    op = jnp.asarray(m2m_operator(p), dtype=me_child.dtype)
+    op = jnp.asarray(m2m_operator(p) if op is None else op,
+                     dtype=me_child.dtype)
     ny, nx = me_child.shape[0] // 2, me_child.shape[1] // 2
     c = me_child.reshape(ny, 2, nx, 2, p)          # [py, cy, px, cx, k]
     # CHILD_OFFSETS order is (cy, cx) row-major -> index c = cy*2+cx
@@ -186,9 +198,9 @@ def m2l_masked40(me: jnp.ndarray, level: int, p: int) -> jnp.ndarray:
 M2L_HALO = 2   # child rows/cols of ghost data needed by an even-aligned slab
 
 
-@functools.lru_cache(maxsize=None)
-def m2l_folded_operator(p: int) -> np.ndarray:
-    """(8, 4p, 4p) parent-neighbor block operator.
+def fold_operator(base: np.ndarray, p: int) -> np.ndarray:
+    """Fold a (40, p, p) child-offset M2L operator ``[o, l, k]`` into the
+    (8, 4p, 4p) parent-neighbor block operator.
 
     ``W[d, s*p + k, c*p + l]`` maps coefficient ``k`` of source child ``s``
     of parent-neighbor ``PARENT_NEIGH8[d]`` to coefficient ``l`` of target
@@ -196,8 +208,9 @@ def m2l_folded_operator(p: int) -> np.ndarray:
     (child-distance < 2) pairs are structurally zero — these zeros are the
     parity masks, folded in.  Exactly 27 blocks per target child are
     nonzero, so the contraction performs exactly the valid interactions.
+    The folding is purely geometric, so any equation's base operator
+    (core/equations.py) folds the same way.
     """
-    base = m2l_operator(p)                       # (40, p, p), [o, l, k]
     idx = {off: i for i, off in enumerate(M2L_OFFSETS)}
     W = np.zeros((8, 4 * p, 4 * p), dtype=np.complex128)
     for di, (Dx, Dy) in enumerate(PARENT_NEIGH8):
@@ -208,6 +221,12 @@ def m2l_folded_operator(p: int) -> np.ndarray:
                     # bhat_tgt[l] = sum_k Op[o, l, k] ahat_src[k]
                     W[di, si * p:(si + 1) * p, ci * p:(ci + 1) * p] = base[idx[d]].T
     return W
+
+
+@functools.lru_cache(maxsize=None)
+def m2l_folded_operator(p: int) -> np.ndarray:
+    """The velocity kernel's folded block operator (see ``fold_operator``)."""
+    return fold_operator(m2l_operator(p), p)
 
 
 def to_parent_planes(grid: jnp.ndarray, p: int) -> jnp.ndarray:
@@ -284,7 +303,8 @@ def m2l_slab_stack(me_halo: jnp.ndarray, p: int, row0: int, halo: int,
 
 def m2l_folded(me_halo: jnp.ndarray, level: int, p: int, row0: int = 0,
                halo: int = M2L_HALO, col0: int = 0,
-               col_halo: int = 0) -> jnp.ndarray:
+               col_halo: int = 0, op: np.ndarray | None = None,
+               scale: float | None = None) -> jnp.ndarray:
     """Parity-folded M2L over a slab/tile with ghost data attached.
 
     ``me_halo``: (rows + 2*halo, cols + 2*col_halo, p) — the interior plus
@@ -299,13 +319,17 @@ def m2l_folded(me_halo: jnp.ndarray, level: int, p: int, row0: int = 0,
     This is the single M2L implementation behind the serial driver, the
     sharded driver (1-D bands and 2-D tiles), and the jnp reference; the
     Pallas kernel (kernels/m2l.py) computes the same contraction tile by
-    tile.
+    tile.  ``op``/``scale`` override the folded block operator and the
+    dimension scalar (equation specs supply theirs — core/equations.py);
+    the defaults are the velocity kernel's.
     """
     rows = me_halo.shape[0] - 2 * halo
     cols = me_halo.shape[1] - 2 * col_halo
     stack, (PR, rshift), (PC, cshift) = m2l_slab_stack(me_halo, p, row0, halo,
                                                        col0, col_halo)
-    W = m2l_folded_operator(p)
+    W = m2l_folded_operator(p) if op is None else op
+    if scale is None:
+        scale = float(2.0 ** level)          # 1 / box_size(level), exact
     acc = jnp.zeros((PR, PC, 4 * p), dtype=me_halo.dtype)
     for d, (Dx, Dy) in enumerate(PARENT_NEIGH8):
         src = stack[1 + Dy:1 + Dy + PR, 1 + Dx:1 + Dx + PC, :]
@@ -314,7 +338,7 @@ def m2l_folded(me_halo: jnp.ndarray, level: int, p: int, row0: int = 0,
     le = from_parent_planes(acc, p)                        # (2PR, 2PC, p)
     le = jax.lax.slice_in_dim(le, rshift, rshift + rows, axis=0)
     le = jax.lax.slice_in_dim(le, cshift, cshift + cols, axis=1)
-    return le / box_size(level)
+    return le * scale
 
 
 def m2l_reference(me: jnp.ndarray, level: int, p: int) -> jnp.ndarray:
@@ -338,6 +362,33 @@ def l2p(le: jnp.ndarray, z: jnp.ndarray, centers: jnp.ndarray, r: float,
     zhat = (z - centers[..., None]) / r
     pw = _powers(zhat, p)                          # (n, n, s, p)
     return jnp.einsum("yxl,yxsl->yxs", le, pw)
+
+
+def l2p_eval(le: jnp.ndarray, z: jnp.ndarray, centers: jnp.ndarray, r: float,
+             p: int, modes: tuple[str, ...] = ("value",)) -> jnp.ndarray:
+    """Evaluate leaf LEs at (source or target) positions, per channel.
+
+    ``modes`` is the equation spec's ``l2p_modes``; each entry emits one
+    complex channel: ``"value"`` is the LE polynomial itself (the velocity
+    for the vortex kernel, the complex potential for Laplace) and
+    ``"ngrad"`` its negated z-derivative ``-(1/r) sum_l l bhat_l
+    zhat^(l-1)`` (the Laplace field).  Returns (n, n, s) for one mode,
+    (n, n, s, len(modes)) otherwise; single-mode output is bit-identical
+    to :func:`l2p`.
+    """
+    zhat = (z - centers[..., None]) / r
+    pw = _powers(zhat, p)                          # (n, n, s, p)
+    outs = []
+    for mode in modes:
+        if mode == "value":
+            outs.append(jnp.einsum("yxl,yxsl->yxs", le, pw))
+        elif mode == "ngrad":
+            lw = jnp.arange(1, p, dtype=le.real.dtype)
+            outs.append(-jnp.einsum("yxl,yxsl->yxs", le[..., 1:] * lw,
+                                    pw[..., :p - 1]) / r)
+        else:
+            raise ValueError(f"unknown l2p mode {mode!r}")
+    return outs[0] if len(outs) == 1 else jnp.stack(outs, axis=-1)
 
 
 # -- Expansion evaluation helpers (unit tests / debugging) ------------------

@@ -9,6 +9,15 @@ The M2L and P2P hot paths go through ONE slab-oriented implementation each
 rows, the ``shard_map`` driver (core/parallel_fmm.py) attaches exchanged
 halos — same math, same kernels, same parity-folded operators either way
 (DESIGN.md §4-§5).
+
+Every kernel-specific piece — P2M charge map, translation operators, M2L
+dimension scalar, L2P evaluation modes, the P2P pair interaction, output
+arity — comes from an :class:`~repro.core.equations.EquationSpec`
+(DESIGN.md §10).  The drivers consume only the spec: there are no
+equation-name branches here (grep-guarded in tests/test_equations.py).
+``fmm_velocity`` is the vortex-kernel wrapper over the generic
+``fmm_evaluate``; passing ``targets`` evaluates the sources' field at a
+separate batch of passive target points (the ``tracer`` mode).
 """
 from __future__ import annotations
 
@@ -17,6 +26,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from . import equations as eqs
 from . import expansions as ex
 from .quadtree import P2P_OFFSETS, Tree, box_centers, box_size
 
@@ -26,7 +36,7 @@ from .quadtree import P2P_OFFSETS, Tree, box_centers, box_size
 # ---------------------------------------------------------------------------
 
 
-def m2l_slab_fn(p: int, use_kernels: bool = False):
+def m2l_slab_fn(p: int, use_kernels: bool = False, eq=None):
     """Returns ``fn(me_halo, level, row0=0, halo=M2L_HALO, col0=0,
     col_halo=0) -> le_slab``.
 
@@ -35,29 +45,33 @@ def m2l_slab_fn(p: int, use_kernels: bool = False):
     domain edges, exchanged halos under ``shard_map``; ``row0``/``col0``
     anchor the global parity.  Both the jnp path and the Pallas kernel path
     implement the same parity-folded contraction (exactly 27 interactions
-    per box).
+    per box), with the block operator and dimension scalar supplied by the
+    equation spec (vortex by default).
     """
+    eq = eqs.get_equation(eq)
     if use_kernels:
         from ..kernels import ops as kops
 
         def fn(me_halo, level, row0=0, halo=ex.M2L_HALO, col0=0, col_halo=0):
             return kops.m2l_apply_slab(me_halo, level, p, row0=row0,
                                        halo=halo, col0=col0,
-                                       col_halo=col_halo)
+                                       col_halo=col_halo, eq=eq)
         return fn
 
     def fn(me_halo, level, row0=0, halo=ex.M2L_HALO, col0=0, col_halo=0):
         return ex.m2l_folded(me_halo, level, p, row0=row0, halo=halo,
-                             col0=col0, col_halo=col_halo)
+                             col0=col0, col_halo=col_halo,
+                             op=eq.m2l_folded(p, level),
+                             scale=eq.m2l_scale(level))
     return fn
 
 
-def m2l_grid_fn(p: int, use_kernels: bool = False):
+def m2l_grid_fn(p: int, use_kernels: bool = False, eq=None):
     """Grid form of ``m2l_slab_fn``: ``fn(grid, level)`` over a full
     (ny, nx, p) level grid, zero ghost rows attached here.  Used by the
     serial driver and for the replicated root-tree levels of the sharded
     driver."""
-    slab = m2l_slab_fn(p, use_kernels)
+    slab = m2l_slab_fn(p, use_kernels, eq)
     hpad = ((ex.M2L_HALO, ex.M2L_HALO), (0, 0), (0, 0))
 
     def fn(grid, level):
@@ -65,29 +79,45 @@ def m2l_grid_fn(p: int, use_kernels: bool = False):
     return fn
 
 
-def p2p_slab_reference(z_halo, q_halo, mask_halo, sigma):
-    """Pure-jnp P2P over a slab with ±1 ghost rows/cols attached."""
-    from .vortex import pairwise_w
+def p2p_slab_reference(z_halo, q_halo, mask_halo, sigma, z_tgt=None, eq=None):
+    """Pure-jnp P2P over a slab with ±1 ghost rows/cols attached.
 
+    ``z_tgt`` (rows, cols, st) evaluates the sources' field at separate
+    target points instead of at the sources themselves (passive-target
+    mode); None keeps source == target.  The pair interaction is the
+    equation spec's ``p2p_terms`` — one formula shared with the Pallas
+    kernel and the direct oracle.
+    """
+    eq = eqs.get_equation(eq)
     rows, cols = z_halo.shape[0] - 2, z_halo.shape[1] - 2
-    z = z_halo[1:1 + rows, 1:1 + cols]
-    w = jnp.zeros_like(z)
+    zt = z_halo[1:1 + rows, 1:1 + cols] if z_tgt is None else z_tgt
+    out = None
     for (dx, dy) in P2P_OFFSETS:
         zs = z_halo[1 + dy:1 + dy + rows, 1 + dx:1 + dx + cols]
         qs = q_halo[1 + dy:1 + dy + rows, 1 + dx:1 + dx + cols]
         ms = mask_halo[1 + dy:1 + dy + rows, 1 + dx:1 + dx + cols]
-        w = w + pairwise_w(z, zs, qs, ms, sigma)
-    return w
+        w = eq.pairwise(zt, zs, qs, ms, sigma)
+        out = w if out is None else out + w
+    return out
 
 
-def p2p_slab_fn(use_kernels: bool = False):
-    """Returns ``fn(z_halo, q_halo, mask_halo, sigma) -> w`` over a slab
-    with ±1 ghost rows/cols already attached."""
+def p2p_slab_fn(use_kernels: bool = False, eq=None):
+    """Returns ``fn(z_halo, q_halo, mask_halo, sigma, z_tgt=None) -> w``
+    over a slab with ±1 ghost rows/cols already attached; ``z_tgt`` selects
+    passive-target evaluation (see ``p2p_slab_reference``)."""
+    eq = eqs.get_equation(eq)
     if use_kernels:
         from ..kernels import ops as kops
 
-        return kops.p2p_apply_slab
-    return p2p_slab_reference
+        def fn(z_halo, q_halo, mask_halo, sigma, z_tgt=None):
+            return kops.p2p_apply_slab(z_halo, q_halo, mask_halo, sigma,
+                                       z_tgt=z_tgt, eq=eq)
+        return fn
+
+    def fn(z_halo, q_halo, mask_halo, sigma, z_tgt=None):
+        return p2p_slab_reference(z_halo, q_halo, mask_halo, sigma,
+                                  z_tgt=z_tgt, eq=eq)
+    return fn
 
 
 # ---------------------------------------------------------------------------
@@ -148,7 +178,8 @@ def m2l_tile_overlapped(m2l_slab, me_local: jnp.ndarray, me_buf: jnp.ndarray,
 
 
 def p2p_tile_overlapped(p2p_slab, z, q, mask, z_buf, q_buf, m_buf,
-                        rows_valid, cols_valid, sigma) -> jnp.ndarray:
+                        rows_valid, cols_valid, sigma,
+                        z_tgt=None) -> jnp.ndarray:
     """Interior/rim P2P over one padded tile (halo width 1).
 
     ``z/q/mask`` are the (rmax, cmax, s) local tile; ``*_buf`` the
@@ -156,47 +187,84 @@ def p2p_tile_overlapped(p2p_slab, z, q, mask, z_buf, q_buf, m_buf,
     see ``parallel_fmm``).  The interior pass reads the local tile as its
     own ±1 halo (the overlap-independent bulk: P2P dominates FMM runtime),
     the four rim strips read the buffer, and the strips are stitched over
-    the edges.  Returns the (rmax, cmax, s) W tile.
+    the edges.  ``z_tgt`` (rmax, cmax, st) switches to passive-target
+    evaluation: targets are tile-local (no halo of their own), so the
+    interior/rim split partitions the TARGET boxes and the same stitching
+    applies.  Returns the (rmax, cmax, s|st[, C]) output tile.
     """
     rmax, cmax, s = z.shape
-    wout = jnp.zeros(z.shape, z.dtype)
+    zt = z if z_tgt is None else z_tgt
+    st = zt.shape[2]
+
+    def tgt_block(r0, c0, nr, nc):
+        if z_tgt is None:
+            return None
+        return jax.lax.dynamic_slice(z_tgt, (r0, c0, 0), (nr, nc, st))
+
+    # probe one strip call to learn the static output channel shape
+    def run(zh, qh, mh, tgt):
+        return p2p_slab(zh, qh, mh, sigma, z_tgt=tgt)
+
+    trail = (rmax, cmax, st)
+    out_sample_shape = None
+    wout = None
     if rmax > 2 and cmax > 2:
-        interior = p2p_slab(z, q, mask, sigma)      # (rmax-2, cmax-2, s)
-        wout = jax.lax.dynamic_update_slice(wout, interior, (1, 1, 0))
+        interior = run(z, q, mask, tgt_block(1, 1, rmax - 2, cmax - 2))
+        out_sample_shape = interior.shape[3:]
+        wout = jnp.zeros(trail + out_sample_shape, interior.dtype)
+        zi = (0,) * len(out_sample_shape)
+        wout = jax.lax.dynamic_update_slice(wout, interior, (1, 1, 0) + zi)
 
-    def row_strip(r0):
+    def row_strip(r0, tr0):
         sl = lambda a: jax.lax.dynamic_slice(a, (r0, 0, 0), (3, cmax + 2, s))
-        return p2p_slab(sl(z_buf), sl(q_buf), sl(m_buf), sigma)  # (1, cmax)
+        return run(sl(z_buf), sl(q_buf), sl(m_buf),
+                   tgt_block(tr0, 0, 1, cmax))                   # (1, cmax)
 
-    def col_strip(c0):
+    def col_strip(c0, tc0):
         sl = lambda a: jax.lax.dynamic_slice(a, (0, c0, 0), (rmax + 2, 3, s))
-        return p2p_slab(sl(z_buf), sl(q_buf), sl(m_buf), sigma)  # (rmax, 1)
+        return run(sl(z_buf), sl(q_buf), sl(m_buf),
+                   tgt_block(0, tc0, rmax, 1))                   # (rmax, 1)
 
-    wout = jax.lax.dynamic_update_slice(wout, col_strip(0), (0, 0, 0))
-    wout = jax.lax.dynamic_update_slice(wout, col_strip(cols_valid - 1),
-                                        (0, cols_valid - 1, 0))
-    wout = jax.lax.dynamic_update_slice(wout, row_strip(0), (0, 0, 0))
-    wout = jax.lax.dynamic_update_slice(wout, row_strip(rows_valid - 1),
-                                        (rows_valid - 1, 0, 0))
+    west = col_strip(0, 0)
+    if wout is None:
+        out_sample_shape = west.shape[3:]
+        wout = jnp.zeros(trail + out_sample_shape, west.dtype)
+    zi = (0,) * len(out_sample_shape)
+    wout = jax.lax.dynamic_update_slice(wout, west, (0, 0, 0) + zi)
+    wout = jax.lax.dynamic_update_slice(wout, col_strip(cols_valid - 1,
+                                                        cols_valid - 1),
+                                        (0, cols_valid - 1, 0) + zi)
+    wout = jax.lax.dynamic_update_slice(wout, row_strip(0, 0), (0, 0, 0) + zi)
+    wout = jax.lax.dynamic_update_slice(wout, row_strip(rows_valid - 1,
+                                                        rows_valid - 1),
+                                        (rows_valid - 1, 0, 0) + zi)
     return wout
 
 
-def upward_sweep(tree: Tree, p: int) -> list[jnp.ndarray]:
+def upward_sweep(tree: Tree, p: int, eq=None) -> list[jnp.ndarray]:
     """Build normalized MEs for every level; returns me[l] for l=0..L."""
+    eq = eqs.get_equation(eq)
     L = tree.level
     centers = jnp.asarray(box_centers(L), dtype=tree.z.dtype)
     me = [None] * (L + 1)
-    me[L] = ex.p2m(tree.z, tree.q, tree.mask, centers, box_size(L), p)
+    me[L] = ex.p2m(tree.z, tree.q, tree.mask, centers, box_size(L), p,
+                   coeff=eq.p2m_coeff(p))
+    mop = eq.m2m_operator(p)
     for l in range(L, 0, -1):
-        me[l - 1] = ex.m2m(me[l], p)
+        me[l - 1] = ex.m2m(me[l], p, op=mop)
     return me
 
 
 def downward_sweep(me: list[jnp.ndarray], p: int,
                    m2l_fn=None) -> list[jnp.ndarray]:
-    """Build LEs for levels 2..L (levels 0-1 have empty interaction lists)."""
+    """Build LEs for levels 2..L (levels 0-1 have empty interaction lists).
+
+    L2L is the plain polynomial recentering of the local expansion, shared
+    by every registered equation; the equation specifics live in ``m2l_fn``
+    (built by ``m2l_grid_fn`` from the spec).
+    """
     L = len(me) - 1
-    m2l = m2l_fn or (lambda grid, level: ex.m2l_reference(grid, level, p))
+    m2l = m2l_fn or m2l_grid_fn(p)
     le = [None] * (L + 1)
     for l in range(2, L + 1):
         le[l] = m2l(me[l], l)
@@ -205,36 +273,73 @@ def downward_sweep(me: list[jnp.ndarray], p: int,
     return le
 
 
-def near_field(tree: Tree, p2p_fn=None) -> jnp.ndarray:
-    """P2P over the 3x3 stencil with the regularized kernel. -> (n,n,s) W."""
+def near_field(tree: Tree, p2p_fn=None, z_tgt=None) -> jnp.ndarray:
+    """P2P over the 3x3 stencil with the regularized kernel.
+
+    ``z_tgt`` (n, n, st) evaluates at passive targets instead of the
+    sources.  Returns (n, n, s|st[, C]).
+    """
     slab = p2p_fn or p2p_slab_fn(use_kernels=False)
     pad = ((1, 1), (1, 1), (0, 0))
     return slab(jnp.pad(tree.z, pad), jnp.pad(tree.q, pad),
-                jnp.pad(tree.mask, pad), tree.sigma)
+                jnp.pad(tree.mask, pad), tree.sigma, z_tgt)
 
 
-@functools.partial(jax.jit, static_argnames=("p", "use_kernels"))
-def fmm_velocity(tree: Tree, p: int, use_kernels: bool = False) -> jnp.ndarray:
-    """Complete FMM evaluation: complex velocity W = u - iv per slot.
+def _mask_channels(mask, out):
+    """Zero masked slots, broadcasting over trailing output channels."""
+    m = mask if out.ndim == mask.ndim else mask[..., None]
+    return jnp.where(m, out, 0.0)
 
-    ``use_kernels=True`` routes M2L and P2P through the Pallas kernels
-    (interpret mode on CPU); otherwise the pure-jnp reference path runs.
-    Both routes share the parity-folded slab implementations above.
+
+@functools.partial(jax.jit, static_argnames=("p", "eq", "use_kernels"))
+def fmm_evaluate(tree: Tree, p: int, eq=None, use_kernels: bool = False,
+                 targets: Tree | None = None) -> jnp.ndarray:
+    """Complete FMM evaluation of any registered equation.
+
+    Returns (n, n, s) complex for single-channel equations, or
+    (n, n, s, eq.nout) with the spec's channel order (e.g. Laplace:
+    potential value, field).  ``targets`` — a second :class:`Tree` at the
+    same level holding passive target points (charges ignored) — switches
+    to source != target evaluation: the output is per TARGET slot,
+    (n, n, st[, C]).  ``use_kernels=True`` routes M2L and P2P through the
+    Pallas kernels (interpret mode off-TPU); both routes share the
+    parity-folded slab implementations above.
     """
+    eq = eqs.get_equation(eq)
+    if targets is None and eq.needs_targets:
+        raise ValueError(f"equation {eq.name!r} requires a targets tree")
+    if targets is not None and targets.level != tree.level:
+        raise ValueError("targets tree level != source tree level")
+    if eq.q_is_real:
+        # real-charge equations read only Re q, in BOTH drivers: the
+        # sharded halo exchange drops the Im q plane, so projecting here
+        # keeps serial == sharded even on a tree whose charges were built
+        # with a mismatched (complex) charge_scale
+        tree = Tree(z=tree.z, q=(tree.q.real + 0j).astype(tree.q.dtype),
+                    mask=tree.mask, level=tree.level, sigma=tree.sigma)
     L = tree.level
-    p2p = p2p_slab_fn(use_kernels)
+    p2p = p2p_slab_fn(use_kernels, eq)
+    zt = None if targets is None else targets.z
+    out_mask = tree.mask if targets is None else targets.mask
     if L < 2:
         # Tiny trees are all near field.
-        return near_field(tree, p2p_fn=p2p)
-    m2l_fn = m2l_grid_fn(p, use_kernels)
+        return _mask_channels(out_mask, near_field(tree, p2p_fn=p2p,
+                                                   z_tgt=zt))
+    m2l_fn = m2l_grid_fn(p, use_kernels, eq)
 
-    me = upward_sweep(tree, p)
+    me = upward_sweep(tree, p, eq)
     le = downward_sweep(me, p, m2l_fn=m2l_fn)
     centers = jnp.asarray(box_centers(L), dtype=tree.z.dtype)
-    far = ex.l2p(le[L], tree.z, centers, box_size(L), p)
-    near = near_field(tree, p2p_fn=p2p)
-    w = far + near
-    return jnp.where(tree.mask, w, 0.0)
+    z_eval = tree.z if targets is None else targets.z
+    far = ex.l2p_eval(le[L], z_eval, centers, box_size(L), p, eq.l2p_modes)
+    near = near_field(tree, p2p_fn=p2p, z_tgt=zt)
+    return _mask_channels(out_mask, far + near)
+
+
+def fmm_velocity(tree: Tree, p: int, use_kernels: bool = False) -> jnp.ndarray:
+    """Complex velocity W = u - iv per slot — the vortex-kernel form of
+    :func:`fmm_evaluate` (the registry's bit-compatible default)."""
+    return fmm_evaluate(tree, p, eq=eqs.VORTEX, use_kernels=use_kernels)
 
 
 def fmm_velocity_singular(tree: Tree, p: int) -> jnp.ndarray:
@@ -248,7 +353,8 @@ def fmm_velocity_singular(tree: Tree, p: int) -> jnp.ndarray:
     return fmm_velocity(sing, p)
 
 
-def flops_estimate(tree_level: int, slots: int, p: int) -> dict:
+def flops_estimate(tree_level: int, slots: int, p: int, eq=None,
+                   grid: tuple[int, int] | None = None) -> dict:
     """Rough FLOP census per stage (used by benchmarks & cost-model checks).
 
     The M2L term counts 27 (p x p) apply-accumulates per box — and since
@@ -258,8 +364,20 @@ def flops_estimate(tree_level: int, slots: int, p: int) -> dict:
     useful fraction of a 40-offset masked sweep.  Consistency with
     cost_model.N_IL and the folded operator's block sparsity is asserted in
     tests/test_cost_model.py.
+
+    The census reads the equation spec: P2P and L2P scale with the output
+    arity ``eq.nout`` (the downward coefficient sweep is shared across
+    channels, so M2M/M2L/L2L do not).  Alongside the flop stages (summed
+    into ``total``) it reports the sharded driver's P2P exchange as the
+    driver actually executes it since PR 4: ONE packed collective round of
+    ``p2p_exchange_planes`` f32 planes (4 for real-charge equations, 5
+    otherwise) costing ``p2p_exchange_collectives`` ppermutes on a
+    ``grid=(Pr, Pc)`` device grid — not the three unfused (z, q, mask)
+    rounds the pre-PR-4 census priced.  ``grid=None`` means serial (zero
+    collectives).
     """
-    L, s = tree_level, slots
+    eq = eqs.get_equation(eq)
+    L, s, C = tree_level, slots, eq.nout
     nleaf = 4 ** L
     cmul = 6.0  # complex multiply-add ~ 6 real flops
     stages = {
@@ -267,8 +385,17 @@ def flops_estimate(tree_level: int, slots: int, p: int) -> dict:
         "m2m": sum(4 ** l for l in range(1, L + 1)) * p * p * cmul,
         "m2l": sum(4 ** l for l in range(2, L + 1)) * 27 * p * p * cmul,
         "l2l": sum(4 ** l for l in range(3, L + 1)) * p * p * cmul,
-        "l2p": nleaf * s * p * 2 * cmul,
-        "p2p": nleaf * 9 * s * s * 12.0,
+        "l2p": nleaf * s * p * 2 * cmul * C,
+        "p2p": nleaf * 9 * s * s * 12.0 * C,
     }
     stages["total"] = sum(stages.values())
+    planes = 4 if eq.q_is_real else 5
+    if grid is None:
+        collectives = 0
+    else:
+        collectives = 2 * int(grid[0] > 1) + 2 * int(grid[1] > 1)
+    stages["p2p_exchange_planes"] = float(planes)
+    stages["p2p_exchange_collectives"] = float(collectives)
+    n = 1 << L
+    stages["p2p_exchange_bytes"] = float(collectives * n * planes * s * 4)
     return stages

@@ -67,6 +67,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
+from . import equations as _eqs
 from . import expansions as ex
 from . import fmm
 from .plan import BlockPlan, SlabPlan, uniform_plan
@@ -141,27 +142,36 @@ def _tile_halo(x: jnp.ndarray, width: int, rows_valid, cols_valid,
     return buf
 
 
-def _pack_particles(z, q, mask) -> jnp.ndarray:
-    """Stack (z, q, mask) into ONE real (rows, cols, 5, s) buffer — the
-    planes are [Re z, Im z, Re q, Im q, mask] along a new axis next to the
-    slot axis — so the P2P halo exchange is a single packed ``_tile_halo``
-    round (4 ppermutes) instead of three (12).  f32 carries the complex64
+def _pack_particles(z, q, mask, q_real: bool = False) -> jnp.ndarray:
+    """Stack (z, q, mask) into ONE real (rows, cols, planes, s) buffer — so
+    the P2P halo exchange is a single packed ``_tile_halo`` round (4
+    ppermutes) instead of three (12).  The payload width is spec-dependent:
+    planes are [Re z, Im z, Re q, Im q, mask] (5) for complex-charge
+    equations, [Re z, Im z, Re q, mask] (4) when the equation spec declares
+    ``q_is_real`` (e.g. Laplace charges).  f32 carries the complex64
     components and the bool mask exactly, so the round-trip is lossless."""
-    return jnp.stack([z.real, z.imag, q.real, q.imag,
-                      mask.astype(jnp.float32)], axis=2)
+    planes = [z.real, z.imag, q.real]
+    if not q_real:
+        planes.append(q.imag)
+    planes.append(mask.astype(jnp.float32))
+    return jnp.stack(planes, axis=2)
 
 
-def _unpack_particles(buf: jnp.ndarray, dtype):
+def _unpack_particles(buf: jnp.ndarray, dtype, q_real: bool = False):
     """Inverse of :func:`_pack_particles` (on an exchanged, halo'd buffer)."""
     z = (buf[:, :, 0] + 1j * buf[:, :, 1]).astype(dtype)
-    q = (buf[:, :, 2] + 1j * buf[:, :, 3]).astype(dtype)
-    m = buf[:, :, 4] > 0.5
+    if q_real:
+        q = (buf[:, :, 2] + 0j).astype(dtype)
+        m = buf[:, :, 3] > 0.5
+    else:
+        q = (buf[:, :, 2] + 1j * buf[:, :, 3]).astype(dtype)
+        m = buf[:, :, 4] > 0.5
     return z, q, m
 
 
-def _parallel_fmm_body(z, q, mask, *, plan: BlockPlan, l_cut: int, p: int,
-                       sigma, axis_name: str, use_kernels: bool,
-                       overlap: bool):
+def _parallel_fmm_body(z, q, mask, *targets, plan: BlockPlan, l_cut: int,
+                       p: int, sigma, axis_name: str, use_kernels: bool,
+                       overlap: bool, eq):
     """Runs on each device over its padded (rows_max, cols_max, s) tile.
 
     ``overlap=True`` runs the interior/rim pipeline (DESIGN.md §9): every
@@ -174,15 +184,28 @@ def _parallel_fmm_body(z, q, mask, *, plan: BlockPlan, l_cut: int, p: int,
     whole tile's compute then reads (the paper's serial comm-plus-compute
     model, Eqs 16-20).  Both orderings share the identical slab
     implementations and agree to f32 roundoff.
+
+    Everything kernel-specific — charge map, translation operators, packed
+    P2P payload width, L2P modes, output arity — comes from the equation
+    spec ``eq``; ``targets``, when present, is the ``(z_t, mask_t)`` pair
+    of a passive target tile evaluated against the sources' expansions and
+    near field (same plan, same halos).
     """
+    zt, mt = targets if targets else (None, None)
     L = plan.level
     Pr, Pc = plan.grid
     rows_max, cols_max = plan.rows_max, plan.cols_max
     dtype = z.dtype
+    if eq.q_is_real:
+        # the packed halo drops the Im q plane; project the LOCAL charges
+        # too so interior and rim interactions read identical data even
+        # when the tree was built with a mismatched complex charge_scale
+        # (serial fmm_evaluate applies the same projection)
+        q = (q.real + 0j).astype(dtype)
 
-    m2l_slab = fmm.m2l_slab_fn(p, use_kernels)
-    m2l_grid = fmm.m2l_grid_fn(p, use_kernels)
-    p2p_slab = fmm.p2p_slab_fn(use_kernels)
+    m2l_slab = fmm.m2l_slab_fn(p, use_kernels, eq)
+    m2l_grid = fmm.m2l_grid_fn(p, use_kernels, eq)
+    p2p_slab = fmm.p2p_slab_fn(use_kernels, eq)
 
     # static per-device tile records, looked up by device index
     di = jax.lax.axis_index(axis_name)
@@ -198,9 +221,12 @@ def _parallel_fmm_body(z, q, mask, *, plan: BlockPlan, l_cut: int, p: int,
 
     # ---- P2P halo: ONE packed exchange round (z, q, mask ride together) ---
     # Issued first under ``overlap`` so the collective is in flight through
-    # the entire upward sweep; only the rim strips of the near field read it.
-    p2p_buf = halo(_pack_particles(z, q, mask), 1, my_rows, my_cols)
-    z_buf, q_buf, m_buf = _unpack_particles(p2p_buf, dtype)
+    # the entire upward sweep; only the rim strips of the near field read
+    # it.  The payload width is spec-dependent (real-charge equations drop
+    # the Im q plane); targets are tile-local and exchange nothing.
+    p2p_buf = halo(_pack_particles(z, q, mask, eq.q_is_real), 1,
+                   my_rows, my_cols)
+    z_buf, q_buf, m_buf = _unpack_particles(p2p_buf, dtype, eq.q_is_real)
 
     # centers padded below/right so the dynamic slice never clamps
     centers = jnp.asarray(box_centers(L), dtype=dtype)
@@ -211,9 +237,11 @@ def _parallel_fmm_body(z, q, mask, *, plan: BlockPlan, l_cut: int, p: int,
     # ---- upward sweep -----------------------------------------------------
     # Padding rows/cols have mask=False everywhere, so their MEs are exactly
     # zero and M2M keeps them zero at every coarser tile level.
-    me = {L: ex.p2m(z, q, mask, my_centers, box_size(L), p)}
+    mop = eq.m2m_operator(p)
+    me = {L: ex.p2m(z, q, mask, my_centers, box_size(L), p,
+                    coeff=eq.p2m_coeff(p))}
     for lv in range(L, l_cut, -1):
-        me[lv - 1] = ex.m2m(me[lv], p)
+        me[lv - 1] = ex.m2m(me[lv], p, op=mop)
 
     # overlap: issue every sharded level's M2L exchange now, before the
     # root-tree gather/compute and the tile interiors that can hide them
@@ -233,7 +261,7 @@ def _parallel_fmm_body(z, q, mask, *, plan: BlockPlan, l_cut: int, p: int,
                            jnp.asarray(loc_c)]
     me_rep = {l_cut: me_cut_full}
     for lv in range(l_cut, 0, -1):
-        me_rep[lv - 1] = ex.m2m(me_rep[lv], p)
+        me_rep[lv - 1] = ex.m2m(me_rep[lv], p, op=mop)
 
     # ---- downward sweep ---------------------------------------------------
     # replicated root-tree levels 2 .. l_cut (same folded path, zero ghosts)
@@ -275,26 +303,29 @@ def _parallel_fmm_body(z, q, mask, *, plan: BlockPlan, l_cut: int, p: int,
     le_leaf = le_prev if L > l_cut else slice_tile(le_rep[L], 0)
 
     # ---- evaluation -------------------------------------------------------
-    far = ex.l2p(le_leaf, z, my_centers, box_size(L), p)
+    z_eval = z if zt is None else zt
+    far = ex.l2p_eval(le_leaf, z_eval, my_centers, box_size(L), p,
+                      eq.l2p_modes)
     if overlap:
         near = fmm.p2p_tile_overlapped(p2p_slab, z, q, mask,
                                        z_buf, q_buf, m_buf,
-                                       my_rows, my_cols, sigma)
+                                       my_rows, my_cols, sigma, z_tgt=zt)
     else:
-        near = p2p_slab(z_buf, q_buf, m_buf, sigma)
+        near = p2p_slab(z_buf, q_buf, m_buf, sigma, zt)
     # padded rows/cols (mask=False) are dropped here
-    return jnp.where(mask, far + near, 0.0)
+    return fmm._mask_channels(mask if mt is None else mt, far + near)
 
 
 @functools.partial(jax.jit, static_argnames=("p", "mesh", "mesh_axis",
                                              "use_kernels", "plan",
-                                             "overlap"))
-def parallel_fmm_velocity(tree: Tree, p: int, mesh: Optional[Mesh] = None,
+                                             "overlap", "eq"))
+def parallel_fmm_evaluate(tree: Tree, p: int, mesh: Optional[Mesh] = None,
                           mesh_axis: str = "data",
                           use_kernels: bool = False,
                           plan: Optional[Union[SlabPlan, BlockPlan]] = None,
-                          overlap: bool = True) -> jnp.ndarray:
-    """Distributed FMM evaluation driven by an execution plan.
+                          overlap: bool = True, eq=None,
+                          targets: Optional[Tree] = None) -> jnp.ndarray:
+    """Distributed FMM evaluation of any registered equation, plan-driven.
 
     ``plan`` maps devices to contiguous parity-even leaf-row bands
     (:class:`SlabPlan`) or row-x-column tiles (:class:`BlockPlan`) — the
@@ -310,13 +341,24 @@ def parallel_fmm_velocity(tree: Tree, p: int, mesh: Optional[Mesh] = None,
     pipeline that hides the halo collectives behind tile-interior compute;
     ``overlap=False`` keeps the monolithic exchange-then-compute ordering.
     Both agree to f32 roundoff on both plan kinds and kernel routes.
+
+    ``eq`` selects the registered equation spec (vortex default); the
+    drivers consume only the spec.  ``targets`` — a second :class:`Tree`
+    at the same level holding passive target points — is resharded by the
+    SAME plan and evaluated against the sources' local expansions and near
+    field; the output is then per target slot, (n, n, st[, eq.nout]).
     """
+    eq = _eqs.get_equation(eq)
     if mesh is None:
         mesh = Mesh(np.array(jax.devices()[:1]), ("data",))
     P_ = mesh.shape[mesh_axis]
     n = tree.nside
     if tree.level < 2:
         raise ValueError("parallel FMM requires tree level >= 2")
+    if targets is None and eq.needs_targets:
+        raise ValueError(f"equation {eq.name!r} requires a targets tree")
+    if targets is not None and targets.level != tree.level:
+        raise ValueError("targets tree level != source tree level")
     if plan is None:
         plan = uniform_plan(tree.level, P_)
     if plan.level != tree.level:
@@ -330,6 +372,7 @@ def parallel_fmm_velocity(tree: Tree, p: int, mesh: Optional[Mesh] = None,
                 and P_ * rows_max == n)
     if identity:
         z_sh, q_sh, m_sh = tree.z, tree.q, tree.mask
+        t_sh = () if targets is None else (targets.z, targets.mask)
     else:
         src_r, src_c, valid = block.gather_index()
         src_r, src_c = jnp.asarray(src_r), jnp.asarray(src_c)
@@ -337,19 +380,35 @@ def parallel_fmm_velocity(tree: Tree, p: int, mesh: Optional[Mesh] = None,
         z_sh = jnp.where(v, tree.z[src_r, src_c], 0)
         q_sh = jnp.where(v, tree.q[src_r, src_c], 0)
         m_sh = tree.mask[src_r, src_c] & v
+        t_sh = () if targets is None else (
+            jnp.where(v, targets.z[src_r, src_c], 0),
+            targets.mask[src_r, src_c] & v)
 
     l_cut = block.level - block.sharded_depth()
     body = functools.partial(_parallel_fmm_body, plan=block, l_cut=l_cut, p=p,
                              sigma=tree.sigma, axis_name=mesh_axis,
-                             use_kernels=use_kernels, overlap=overlap)
+                             use_kernels=use_kernels, overlap=overlap, eq=eq)
     spec = P(mesh_axis, None, None)
+    out_spec = spec if eq.nout == 1 else P(mesh_axis, None, None, None)
     # pallas_call has no shard_map replication rule; disable the check on
     # the kernel route (numerics are unaffected — outputs stay sharded).
     kwargs = {_CHECK_KW: False} if (use_kernels and _CHECK_KW) else {}
-    fn = _shard_map(body, mesh=mesh, in_specs=(spec, spec, spec),
-                    out_specs=spec, **kwargs)
-    w = fn(z_sh, q_sh, m_sh)
+    fn = _shard_map(body, mesh=mesh,
+                    in_specs=(spec,) * (3 + len(t_sh)),
+                    out_specs=out_spec, **kwargs)
+    w = fn(z_sh, q_sh, m_sh, *t_sh)
     if identity:
         return w
     sct_r, sct_c = block.scatter_index()
     return w[jnp.asarray(sct_r), jnp.asarray(sct_c)]
+
+
+def parallel_fmm_velocity(tree: Tree, p: int, mesh: Optional[Mesh] = None,
+                          mesh_axis: str = "data",
+                          use_kernels: bool = False,
+                          plan: Optional[Union[SlabPlan, BlockPlan]] = None,
+                          overlap: bool = True) -> jnp.ndarray:
+    """Complex velocity W per slot — the vortex-kernel form of
+    :func:`parallel_fmm_evaluate` (the registry's bit-compatible default)."""
+    return parallel_fmm_evaluate(tree, p, mesh, mesh_axis, use_kernels,
+                                 plan, overlap, eq=_eqs.VORTEX)

@@ -348,7 +348,8 @@ def cell_loads(counts: np.ndarray, params: ModelParams) -> np.ndarray:
     n = counts.shape[0]
     L = params.level
     nb = cm.neighbor_count_sum(counts)
-    per_box = cm.work_leaf(counts, params.p, neighbor_counts=nb)
+    per_box = cm.work_leaf(counts, params.p, neighbor_counts=nb,
+                           nout=params.nout)
     nonleaf = sum(4 ** l for l in range(params.cut, L)) \
         * cm.work_nonleaf(params.p) / (4 ** L)
     per_box = per_box + nonleaf

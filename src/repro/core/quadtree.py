@@ -214,13 +214,18 @@ def build_tree(
     sigma: float,
     slots: Optional[int] = None,
     dtype=np.complex64,
+    charge_scale: Optional[complex] = None,
 ) -> tuple[Tree, TreeIndex]:
     """Bin particles into the dense leaf grid (host-side, NumPy).
 
-    positions: (N, 2) float in [0, 1)^2;  gamma: (N,) real circulations.
+    positions: (N, 2) float in [0, 1)^2;  gamma: (N,) real strengths.
     ``slots`` pads every box to a fixed capacity (defaults to the max
-    occupancy).  This is the TPU-native replacement for the paper's ragged
-    per-box particle lists (see DESIGN.md §3).
+    occupancy).  ``charge_scale`` maps the input strength to the stored
+    pseudo-charge ``q`` — the equation spec's ``charge_scale``
+    (core/equations.py); None keeps the vortex default ``1/(2*pi*i)``
+    (circulation -> Biot-Savart pseudo-charge).  This is the TPU-native
+    replacement for the paper's ragged per-box particle lists (see
+    DESIGN.md §3).
     """
     positions = np.asarray(positions, dtype=np.float64)
     gamma = np.asarray(gamma, dtype=np.float64)
@@ -246,8 +251,10 @@ def build_tree(
     zflat = np.zeros((n * n, slots), dtype=np.complex128)
     qflat = np.zeros((n * n, slots), dtype=np.complex128)
     mflat = np.zeros((n * n, slots), dtype=bool)
+    if charge_scale is None:
+        charge_scale = 1.0 / (2j * np.pi)
     zsrc = positions[order, 0] + 1j * positions[order, 1]
-    qsrc = gamma[order] / (2j * np.pi)
+    qsrc = gamma[order] * charge_scale
     zflat[sorted_box, slot_sorted] = zsrc
     qflat[sorted_box, slot_sorted] = qsrc
     mflat[sorted_box, slot_sorted] = True

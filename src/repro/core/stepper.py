@@ -45,6 +45,44 @@ def _velocity(tree, p, mesh, mesh_axis, use_kernels, plan, overlap):
                                  overlap)
 
 
+def host_wallclock_times(stepper: "VortexStepper"):
+    """Default ``measured_times_fn``: per-device times from the host-side
+    step wall clock.
+
+    The host can only observe the whole step (the bottleneck device);
+    attributing that wall time to devices in proportion to their modeled
+    load share feeds the measured-feedback plumbing (``measured_row_scale``
+    -> ``replan`` -> ``rebalance``) real wall-clock magnitudes every replan
+    interval without inventing per-device resolution — the resulting rates
+    are uniform, so the re-plan stays count-driven until real per-device
+    timers (jax profiler device runtimes / TPU counters — the ROADMAP
+    item) replace this hook.  Recompile-dominated samples are excluded:
+    a re-level pays its rebuild inside its own (flagged) step, but a
+    re-plan is adopted AFTER its step ran, so the retrace for the new
+    static plan lands on the FOLLOWING step — both the flagged record and
+    its successor are dropped.  Returns None until a clean steady-state
+    step exists.
+    """
+    recs = stepper.history
+    clean = [r.seconds for prev, r in zip([None] + recs[:-1], recs)
+             if not (r.replanned or r.releveled)
+             and not (prev is not None
+                      and (prev.replanned or prev.releveled))]
+    recent = clean[-4:]
+    if not recent:
+        return None
+    wall = min(recent)
+    # maybe_replan stashes the counts it just pulled; fall back to a fresh
+    # pull only when called outside the replan path (no second device sync
+    # in the steady-state replan check)
+    counts = getattr(stepper, "_counts_cache", None)
+    if counts is None:
+        counts = stepper.counts()
+    loads = plan_loads(stepper.plan, counts, stepper.params)
+    peak = max(float(loads.max()), 1e-30)
+    return wall * np.asarray(loads, dtype=np.float64) / peak
+
+
 @functools.partial(jax.jit, static_argnames=("p", "mesh", "mesh_axis",
                                              "use_kernels", "plan",
                                              "overlap"))
@@ -103,8 +141,9 @@ class VortexStepper:
     overlapped execution (default) vs the monolithic ordering.
     ``measured_times_fn(stepper) -> (nparts,) seconds`` is the injection
     point for real per-device timers (tests use it to emulate heterogeneous
-    pools); without it, dynamic re-planning is driven by the particle
-    distribution alone.
+    pools); dynamic steppers default to :func:`host_wallclock_times`, which
+    feeds the loop the measured step wall clock (per-device hardware timers
+    stay a ROADMAP item).
     """
 
     def __init__(self, positions: np.ndarray, gamma: np.ndarray, sigma: float,
@@ -133,6 +172,11 @@ class VortexStepper:
         self.occupancy_guard = float(occupancy_guard)
         self._cut = cut
         self.sigma = float(sigma)
+        # dynamic steppers default to the host wall-clock timer so
+        # --plan dynamic exercises the full measured-feedback loop with
+        # real magnitudes (injected per-device timers override it)
+        if measured_times_fn is None and dynamic:
+            measured_times_fn = host_wallclock_times
         self.measured_times_fn = measured_times_fn
         self.step_count = 0
         self.history: list[StepRecord] = []
@@ -240,6 +284,7 @@ class VortexStepper:
             self._relevel()
             return True
         counts = self.counts()
+        self._counts_cache = counts     # reused by host_wallclock_times
         self._cached_lb = plan_stats(self.plan, counts,
                                      self.params)["load_balance"]
         if not self.dynamic:
@@ -307,6 +352,7 @@ class VortexStepper:
         self.tree, self.payload = tree, payload
         self.step_count += 1
         replanned = False
+        self._counts_cache = None       # tree advanced: drop stale counts
         if self.step_count % self.replan_every == 0:
             # occ comes off the step's own outputs (already on host after
             # block_until_ready) — the check itself syncs nothing extra

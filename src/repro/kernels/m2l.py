@@ -35,8 +35,9 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from ..core import equations as _eqs
 from ..core import expansions as ex
-from ..core.quadtree import PARENT_NEIGH8, box_size
+from ..core.quadtree import PARENT_NEIGH8
 
 
 def _m2l_kernel(sr_ref, si_ref, wr_ref, wi_ref, or_ref, oi_ref,
@@ -61,12 +62,12 @@ def _m2l_kernel(sr_ref, si_ref, wr_ref, wi_ref, or_ref, oi_ref,
 
 @functools.partial(jax.jit, static_argnames=("level", "p", "row0", "halo",
                                              "col0", "col_halo", "block",
-                                             "interpret", "lane_pad"))
+                                             "interpret", "lane_pad", "eq"))
 def m2l_pallas_slab(me_halo: jnp.ndarray, level: int, p: int, row0: int = 0,
                     halo: int = ex.M2L_HALO, col0: int = 0, col_halo: int = 0,
                     block: tuple[int, int] = (8, 8),
                     interpret: bool = True,
-                    lane_pad: bool = False) -> jnp.ndarray:
+                    lane_pad: bool = False, eq=None) -> jnp.ndarray:
     """Parity-folded M2L over a halo'd slab/tile — same contract as
     ``expansions.m2l_folded``: ``me_halo`` is (rows + 2*halo,
     cols + 2*col_halo, p) with ghost data attached, ``row0``/``col0``
@@ -77,7 +78,12 @@ def m2l_pallas_slab(me_halo: jnp.ndarray, level: int, p: int, row0: int = 0,
     multiple of 128 (real-TPU layout; DESIGN.md §5) — the folded operator is
     zero-padded to match, so the extra lanes contribute exact zeros and the
     numerics are unchanged; the accumulator is sliced back to ``4p``.
+
+    ``eq`` selects the equation spec supplying the folded block operator
+    and dimension scalar (core/equations.py; vortex default) — the kernel
+    body is equation-independent: one contraction, any registered operator.
     """
+    eq = _eqs.get_equation(eq)
     rows = me_halo.shape[0] - 2 * halo
     cols = me_halo.shape[1] - 2 * col_halo
     p4 = 4 * p
@@ -93,7 +99,7 @@ def m2l_pallas_slab(me_halo: jnp.ndarray, level: int, p: int, row0: int = 0,
     si = jnp.pad(stack.imag.astype(jnp.float32),
                  ((0, PRp - PR), (0, PCp - PC), (0, p4l - p4)))
 
-    W = ex.m2l_folded_operator(p)
+    W = eq.m2l_folded(p, level)
     wpad = ((0, 0), (0, p4l - p4), (0, p4l - p4))
     wr = jnp.asarray(np.pad(W.real, wpad), dtype=jnp.float32)
     wi = jnp.asarray(np.pad(W.imag, wpad), dtype=jnp.float32)
@@ -119,14 +125,15 @@ def m2l_pallas_slab(me_halo: jnp.ndarray, level: int, p: int, row0: int = 0,
     le = ex.from_parent_planes(acc, p)                   # (2PR, 2PC, p)
     le = jax.lax.slice_in_dim(le, shift, shift + rows, axis=0)
     le = jax.lax.slice_in_dim(le, cshift, cshift + cols, axis=1)
-    return le / box_size(level)
+    return le * eq.m2l_scale(level)
 
 
 def m2l_pallas(me: jnp.ndarray, level: int, p: int,
                block: tuple[int, int] = (8, 8),
-               interpret: bool = True, lane_pad: bool = False) -> jnp.ndarray:
+               interpret: bool = True, lane_pad: bool = False,
+               eq=None) -> jnp.ndarray:
     """Fused M2L over a full (ny, nx, p) complex ME grid -> (ny, nx, p) LE."""
     me_halo = jnp.pad(me, ((ex.M2L_HALO, ex.M2L_HALO), (0, 0), (0, 0)))
     return m2l_pallas_slab(me_halo, level, p, row0=0, halo=ex.M2L_HALO,
                            block=block, interpret=interpret,
-                           lane_pad=lane_pad)
+                           lane_pad=lane_pad, eq=eq)

@@ -84,38 +84,41 @@ def _resolve(block, rows: int, cols: int, lane_pad):
 
 def p2p_apply_slab(z_halo, q_halo, mask_halo, sigma,
                    block: tuple[int, int] | None = None,
-                   lane_pad: bool | None = None):
+                   lane_pad: bool | None = None, z_tgt=None, eq=None):
     """P2P over a slab with ±1 ghost rows/cols attached (sharded driver).
 
     ``block=None`` autotunes ``(BY, BX)`` from the interior launch shape;
-    ``lane_pad=None`` pads ``s`` to a lane multiple of 128 on real TPU.
+    ``lane_pad=None`` pads the slot axes to lane multiples of 128 on real
+    TPU.  ``z_tgt`` selects passive-target evaluation and ``eq`` the
+    equation spec supplying the pair interaction (vortex default).
     """
     block, lane_pad = _resolve(block, z_halo.shape[0] - 2,
                                z_halo.shape[1] - 2, lane_pad)
     return _p2p.p2p_pallas_slab(z_halo, q_halo, mask_halo, sigma=sigma,
                                 block=block, interpret=_interpret(),
-                                lane_pad=lane_pad)
+                                lane_pad=lane_pad, z_tgt=z_tgt, eq=eq)
 
 
 def m2l_apply(me, level: int, p: int, block: tuple[int, int] | None = None,
-              lane_pad: bool | None = None):
+              lane_pad: bool | None = None, eq=None):
     """Parity-folded M2L for one level's full (ny, nx, p) ME grid."""
     block, lane_pad = _resolve(block, me.shape[0] // 2, me.shape[1] // 2,
                                lane_pad)
     return _m2l.m2l_pallas(me, level, p, block=block, interpret=_interpret(),
-                           lane_pad=lane_pad)
+                           lane_pad=lane_pad, eq=eq)
 
 
 def m2l_apply_slab(me_halo, level: int, p: int, row0: int = 0,
                    halo: int = _ex.M2L_HALO, col0: int = 0, col_halo: int = 0,
                    block: tuple[int, int] | None = None,
-                   lane_pad: bool | None = None):
+                   lane_pad: bool | None = None, eq=None):
     """Parity-folded M2L over a halo'd row slab or 2-D tile (sharded
     driver); ``col_halo>0`` means column ghosts are attached too.
 
     ``block=None`` autotunes ``(BY, BX)`` from the parent-plane launch
     shape (the tile/rim geometry the plan implies); ``lane_pad=None`` pads
-    ``4p`` to a lane multiple of 128 on real TPU.
+    ``4p`` to a lane multiple of 128 on real TPU.  ``eq`` selects the
+    equation spec supplying the folded operator (vortex default).
     """
     if block is None or lane_pad is None:
         rows = me_halo.shape[0] - 2 * halo
@@ -129,7 +132,7 @@ def m2l_apply_slab(me_halo, level: int, p: int, row0: int = 0,
     return _m2l.m2l_pallas_slab(me_halo, level, p, row0=row0, halo=halo,
                                 col0=col0, col_halo=col_halo,
                                 block=block, interpret=_interpret(),
-                                lane_pad=lane_pad)
+                                lane_pad=lane_pad, eq=eq)
 
 
 def flash_attention(q, k, v, causal: bool = True, block_q: int = 128,

@@ -12,15 +12,20 @@ nothing:
     read **overlapping halo tiles** ``(BY+2, BX+2, s)`` directly from the
     padded grid (``pl.Unblocked`` element-offset indexing);
   * the kernel slices the 9 neighbor offsets out of its VMEM tile and
-    evaluates the regularized Biot-Savart pairwise sum on the VPU, keeping
-    the W accumulator in VMEM across the whole 9-offset reduction — one HBM
-    write per tile, ``(BB, s, s)`` pair temporaries instead of the old
+    evaluates the pair interaction on the VPU, keeping the accumulators in
+    VMEM across the whole 9-offset reduction — one HBM write per output
+    tile, ``(BB, st, s)`` pair temporaries instead of the old
     ``(BB, s, 9s)``;
-  * complex arithmetic is explicit real/imag (the MXU/VPU have no complex
-    type): with q = qr + i*qi, dz = dx + i*dy,
-        w += q / dz * moll = (qr*dx + qi*dy + i(qi*dx - qr*dy)) / r2 * moll.
+  * the pair interaction itself comes from the equation spec
+    (``core/equations.py: p2p_terms`` — explicit real/imag arithmetic, the
+    MXU/VPU have no complex type).  The kernel body is equation-independent
+    and emits ``eq.nout`` complex channels; passive source != target
+    evaluation (probe grids, tracers) runs through the SAME kernel with the
+    targets as a separate ``(BY, BX, st)`` block, while the default
+    source == target mode slices its targets out of the already-loaded
+    halo tile (no extra input streams — the pre-registry data path).
 
-Block sizing: the (BY*BX, s, s) pair tensor should stay under ~2 MiB (f32),
+Block sizing: the (BY*BX, st, s) pair tensor should stay under ~2 MiB (f32),
 and the lane dimension (s) should be a multiple of 128 on real hardware (pad
 ``s`` accordingly; correctness does not depend on it).
 """
@@ -32,96 +37,136 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from ..core import equations as _eqs
 from ..core.quadtree import P2P_OFFSETS
 
 P2P_HALO = 1    # ghost rows/cols of particle data needed by a slab
 
 
-def _p2p_kernel(zr_ref, zi_ref, qr_ref, qi_ref, m_ref, wr_ref, wi_ref,
-                *, sigma: float | None, BY: int, BX: int, s: int):
-    zr = zr_ref[...]            # (BY+2, BX+2, s) halo tiles
+def _p2p_kernel(*refs, eq, sigma: float | None, BY: int, BX: int,
+                st: int, s: int, tgt_from_src: bool):
+    if tgt_from_src:
+        zr_ref, zi_ref, qr_ref, qi_ref, m_ref, *out_refs = refs
+    else:
+        txr_ref, txi_ref, zr_ref, zi_ref, qr_ref, qi_ref, m_ref, \
+            *out_refs = refs
+    zr = zr_ref[...]            # (BY+2, BX+2, s) source halo tiles
     zi = zi_ref[...]
     qr = qr_ref[...]
     qi = qi_ref[...]
     m = m_ref[...]
-    tx = zr[1:1 + BY, 1:1 + BX, :].reshape(BY * BX, s)   # interior targets
-    ty = zi[1:1 + BY, 1:1 + BX, :].reshape(BY * BX, s)
-    accr = jnp.zeros((BY * BX, s), jnp.float32)
-    acci = jnp.zeros((BY * BX, s), jnp.float32)
+    if tgt_from_src:
+        # source == target mode: the targets ARE the halo tile's interior
+        # — slice them out of the already-loaded zr/zi instead of paying
+        # two extra HBM->VMEM input streams (st == s here)
+        tx = zr[1:1 + BY, 1:1 + BX, :].reshape(BY * BX, st)
+        ty = zi[1:1 + BY, 1:1 + BX, :].reshape(BY * BX, st)
+    else:
+        tx = txr_ref[...].reshape(BY * BX, st)   # (BY, BX, st) target block
+        ty = txi_ref[...].reshape(BY * BX, st)
+    nout = len(out_refs) // 2
+    accs = [jnp.zeros((BY * BX, st), jnp.float32) for _ in range(2 * nout)]
     for (dx, dy) in P2P_OFFSETS:
         sx = zr[1 + dy:1 + dy + BY, 1 + dx:1 + dx + BX, :].reshape(BY * BX, s)
         sy = zi[1 + dy:1 + dy + BY, 1 + dx:1 + dx + BX, :].reshape(BY * BX, s)
         sqr = qr[1 + dy:1 + dy + BY, 1 + dx:1 + dx + BX, :].reshape(BY * BX, s)
         sqi = qi[1 + dy:1 + dy + BY, 1 + dx:1 + dx + BX, :].reshape(BY * BX, s)
         sm = m[1 + dy:1 + dy + BY, 1 + dx:1 + dx + BX, :].reshape(BY * BX, s)
-        ddx = tx[:, :, None] - sx[:, None, :]            # (BB, s, s)
+        ddx = tx[:, :, None] - sx[:, None, :]            # (BB, st, s)
         ddy = ty[:, :, None] - sy[:, None, :]
         r2 = ddx * ddx + ddy * ddy
         valid = (sm[:, None, :] > 0) & (r2 > 0.0)
-        inv_r2 = jnp.where(valid, 1.0, 0.0) / jnp.where(r2 > 0.0, r2, 1.0)
+        moll = None
         if sigma is not None:
-            inv_r2 = inv_r2 * (1.0 - jnp.exp(-r2 / (2.0 * sigma * sigma)))
-        qrb = sqr[:, None, :]
-        qib = sqi[:, None, :]
-        accr = accr + ((qrb * ddx + qib * ddy) * inv_r2).sum(axis=-1)
-        acci = acci + ((qib * ddx - qrb * ddy) * inv_r2).sum(axis=-1)
-    wr_ref[...] = accr.reshape(BY, BX, s)
-    wi_ref[...] = acci.reshape(BY, BX, s)
+            moll = 1.0 - jnp.exp(-r2 / (2.0 * sigma * sigma))
+        terms = eq.p2p_terms(ddx, ddy, r2, valid, sqr[:, None, :],
+                             sqi[:, None, :], moll)
+        for c, (tre, tim) in enumerate(terms):
+            accs[2 * c] = accs[2 * c] + tre.sum(axis=-1)
+            accs[2 * c + 1] = accs[2 * c + 1] + tim.sum(axis=-1)
+    for i, ref in enumerate(out_refs):
+        ref[...] = accs[i].reshape(BY, BX, st)
 
 
 @functools.partial(jax.jit, static_argnames=("sigma", "block", "interpret",
-                                             "lane_pad"))
+                                             "lane_pad", "eq"))
 def p2p_pallas_slab(z_halo, q_halo, mask_halo, sigma=None,
                     block: tuple[int, int] = (8, 8), interpret: bool = True,
-                    lane_pad: bool = False):
+                    lane_pad: bool = False, z_tgt=None, eq=None):
     """P2P over a slab with ±1 ghost rows/cols already attached.
 
     z_halo/q_halo: complex (rows+2, cols+2, s); mask_halo: bool.  Ghosts are
     zeros at domain edges or exchanged halos under ``shard_map``.  Returns
-    the interior (rows, cols, s) complex W per slot.
+    the interior (rows, cols, st) complex output per slot — with a trailing
+    ``eq.nout`` channel axis for multi-output equations.  ``z_tgt``
+    (rows, cols, st) switches to passive-target evaluation (targets carry
+    no halo; masked-off target slots yield don't-care values the caller
+    masks); None evaluates at the sources themselves.
 
-    ``lane_pad=True`` pads the slot axis ``s`` up to a lane multiple of 128
-    (real-TPU layout; DESIGN.md §5) — padded slots carry ``mask=0`` so they
-    are structurally excluded and the numerics are unchanged; the output is
-    sliced back to ``s``.
+    ``lane_pad=True`` pads the slot axes up to lane multiples of 128
+    (real-TPU layout; DESIGN.md §5) — padded source slots carry ``mask=0``
+    so they are structurally excluded and the numerics are unchanged; the
+    output is sliced back to ``st``.
     """
+    eq = _eqs.get_equation(eq)
     rows, cols, s = (z_halo.shape[0] - 2, z_halo.shape[1] - 2,
                      z_halo.shape[2])
+    tgt_from_src = z_tgt is None
+    st = s if tgt_from_src else z_tgt.shape[2]
     sl = -(-s // 128) * 128 if lane_pad else s
+    stl = sl if tgt_from_src else (-(-st // 128) * 128 if lane_pad else st)
     BY, BX = min(block[0], rows), min(block[1], cols)
     rowsP = -(-rows // BY) * BY
     colsP = -(-cols // BX) * BX
 
-    def prep(x):
+    def prep(x, lanes):
+        # halo'd sources (rows+2 -> rowsP+2) and bare targets (rows ->
+        # rowsP) take the same trailing pad
         return jnp.pad(x.astype(jnp.float32),
-                       ((0, rowsP - rows), (0, colsP - cols), (0, sl - s)))
+                       ((0, rowsP - rows), (0, colsP - cols),
+                        (0, lanes - x.shape[2])))
 
-    zr, zi = prep(z_halo.real), prep(z_halo.imag)
-    qr, qi = prep(q_halo.real), prep(q_halo.imag)
-    m = prep(mask_halo)
+    zr, zi = prep(z_halo.real, sl), prep(z_halo.imag, sl)
+    qr, qi = prep(q_halo.real, sl), prep(q_halo.imag, sl)
+    m = prep(mask_halo, sl)
 
     grid = (rowsP // BY, colsP // BX)
     halo_spec = pl.BlockSpec((BY + 2, BX + 2, sl),
                              lambda i, j: (i * BY, j * BX, 0),
                              indexing_mode=pl.Unblocked())
-    out_spec = pl.BlockSpec((BY, BX, sl), lambda i, j: (i, j, 0))
-    out_shape = [jax.ShapeDtypeStruct((rowsP, colsP, sl), jnp.float32)] * 2
+    tgt_spec = pl.BlockSpec((BY, BX, stl), lambda i, j: (i, j, 0))
+    out_spec = pl.BlockSpec((BY, BX, stl), lambda i, j: (i, j, 0))
+    out_shape = [jax.ShapeDtypeStruct((rowsP, colsP, stl), jnp.float32)
+                 ] * (2 * eq.nout)
 
-    wr, wi = pl.pallas_call(
-        functools.partial(_p2p_kernel, sigma=sigma, BY=BY, BX=BX, s=sl),
+    if tgt_from_src:
+        inputs = (zr, zi, qr, qi, m)
+        in_specs = [halo_spec] * 5
+    else:
+        txr, txi = prep(z_tgt.real, stl), prep(z_tgt.imag, stl)
+        inputs = (txr, txi, zr, zi, qr, qi, m)
+        in_specs = [tgt_spec, tgt_spec] + [halo_spec] * 5
+
+    outs = pl.pallas_call(
+        functools.partial(_p2p_kernel, eq=eq, sigma=sigma, BY=BY, BX=BX,
+                          st=stl, s=sl, tgt_from_src=tgt_from_src),
         grid=grid,
-        in_specs=[halo_spec] * 5,
-        out_specs=[out_spec, out_spec],
+        in_specs=in_specs,
+        out_specs=[out_spec] * (2 * eq.nout),
         out_shape=out_shape,
         interpret=interpret,
-    )(zr, zi, qr, qi, m)
+    )(*inputs)
 
-    return (wr[:rows, :cols, :s] + 1j * wi[:rows, :cols, :s]).astype(z_halo.dtype)
+    chans = [(outs[2 * c][:rows, :cols, :st] +
+              1j * outs[2 * c + 1][:rows, :cols, :st]).astype(z_halo.dtype)
+             for c in range(eq.nout)]
+    return chans[0] if eq.nout == 1 else jnp.stack(chans, axis=-1)
 
 
 def p2p_pallas(z, q, mask, sigma=None, block: tuple[int, int] = (8, 8),
-               interpret: bool = True, lane_pad: bool = False):
-    """P2P over a (ny, nx, s) dense leaf grid.  Returns complex W per slot.
+               interpret: bool = True, lane_pad: bool = False, eq=None):
+    """P2P over a (ny, nx, s) dense leaf grid.  Returns complex output per
+    slot (trailing channel axis for multi-output equations).
 
     z, q: complex64; mask: bool.  ``interpret=True`` runs the kernel body in
     the Pallas interpreter (CPU validation); on TPU pass False.
@@ -129,4 +174,4 @@ def p2p_pallas(z, q, mask, sigma=None, block: tuple[int, int] = (8, 8),
     pad = ((P2P_HALO, P2P_HALO), (P2P_HALO, P2P_HALO), (0, 0))
     return p2p_pallas_slab(jnp.pad(z, pad), jnp.pad(q, pad),
                            jnp.pad(mask, pad), sigma=sigma, block=block,
-                           interpret=interpret, lane_pad=lane_pad)
+                           interpret=interpret, lane_pad=lane_pad, eq=eq)

@@ -1,0 +1,433 @@
+"""The pluggable equation subsystem (DESIGN.md §10).
+
+Pins the acceptance criteria of the kernel registry: each registered
+equation — ``vortex`` (the bit-compatible default), ``laplace`` (2-D
+potential + field from one downward sweep), ``tracer`` (passive
+source != target evaluation) — matches an independent f64 direct sum,
+singular at interaction-list distance and regularized in the near field,
+at p = 17; serial == sharded on 4 devices across both kernel routes, both
+plan kinds, and both overlap orderings; and the drivers consume ONLY the
+spec (grep-guarded: no equation-name branches at the slab call sites).
+
+Multidevice cases run in a subprocess because jax locks the device count
+at first init and the rest of the suite must see exactly 1 CPU device.
+"""
+import os
+import re
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+from repro.core import equations as eqs
+from repro.core import vortex
+from repro.core.fmm import fmm_evaluate, fmm_velocity, flops_estimate
+from repro.core.quadtree import Tree, build_tree, gather_particle_values
+
+
+def _rel(a, b):
+    a, b = np.asarray(a), np.asarray(b)
+    return np.linalg.norm(a - b) / max(np.linalg.norm(b), 1e-30)
+
+
+def _case(n=1500, seed=0, level=3, eq=eqs.VORTEX, sigma=0.02):
+    rng = np.random.default_rng(seed)
+    pos = rng.uniform(0.02, 0.98, size=(n, 2))
+    strength = rng.normal(size=n)
+    tree, index = build_tree(pos, strength, level, sigma=sigma,
+                             charge_scale=eq.charge_scale)
+    return pos, strength, tree, index
+
+
+def _singular(tree):
+    return Tree(z=tree.z, q=tree.q, mask=tree.mask, level=tree.level,
+                sigma=None)
+
+
+# ---------------------------------------------------------------------------
+# Registry basics
+# ---------------------------------------------------------------------------
+
+
+def test_registry_contents_and_hashing():
+    assert set(eqs.EQUATIONS) >= {"vortex", "laplace", "tracer"}
+    assert eqs.get_equation(None) is eqs.VORTEX
+    assert eqs.get_equation("laplace") is eqs.LAPLACE
+    assert eqs.get_equation(eqs.TRACER) is eqs.TRACER
+    with pytest.raises(ValueError, match="unknown equation"):
+        eqs.get_equation("navier-stokes")
+    # specs are jit-static: hashable, equal by name
+    assert hash(eqs.LAPLACE) == hash(eqs.LaplaceEquation())
+    assert eqs.LAPLACE == eqs.LaplaceEquation()
+    assert eqs.LAPLACE != eqs.VORTEX
+    assert eqs.VORTEX.nout == 1 and eqs.LAPLACE.nout == 2
+    assert eqs.TRACER.needs_targets and not eqs.VORTEX.needs_targets
+
+
+def test_register_refuses_silent_replacement():
+    """Drivers jit-cache on the spec: swapping different physics behind an
+    existing name must fail loudly, and specs of different classes must
+    not collide in hash-based caches even when they share a name."""
+
+    class Variant(eqs.LaplaceEquation):
+        pass
+
+    v = Variant()
+    assert v.name == "laplace"
+    assert v != eqs.LAPLACE and hash(v) != hash(eqs.LAPLACE)
+    with pytest.raises(ValueError, match="already registered"):
+        eqs.register(v)
+    # idempotent re-registration of the same spec is fine
+    assert eqs.register(eqs.LAPLACE) is eqs.LAPLACE
+
+    class Custom(eqs.EquationSpec):
+        name = "custom-test-eq"
+
+    try:
+        assert eqs.register(Custom()) == Custom()
+        assert eqs.get_equation("custom-test-eq") == Custom()
+    finally:
+        eqs.EQUATIONS.pop("custom-test-eq", None)
+
+
+def test_vortex_default_is_bit_compatible():
+    """fmm_velocity == fmm_evaluate(eq=vortex) — the registry default is
+    the same program, and matches the pre-registry direct oracle."""
+    pos, strength, tree, index = _case()
+    w_named = np.asarray(fmm_evaluate(tree, 12, eq=eqs.VORTEX))
+    w_default = np.asarray(fmm_evaluate(tree, 12))
+    w_legacy = np.asarray(fmm_velocity(tree, 12))
+    assert np.array_equal(w_named, w_default)
+    assert np.array_equal(w_named, w_legacy)
+    z = pos[:, 0] + 1j * pos[:, 1]
+    exact = vortex.direct_sum(z, strength, sigma=0.02)
+    assert _rel(gather_particle_values(w_named, index), exact) < 5e-4
+
+
+# ---------------------------------------------------------------------------
+# Laplace: potential + field from one downward sweep, vs f64 direct sums
+# ---------------------------------------------------------------------------
+
+
+def test_laplace_matches_direct_singular_p17():
+    """Both channels vs the singular f64 oracle at p = 17 (the truncation
+    error is spectral; the residual is the f32 arithmetic floor)."""
+    pos, strength, tree, index = _case(eq=eqs.LAPLACE)
+    z = pos[:, 0] + 1j * pos[:, 1]
+    out = np.asarray(fmm_evaluate(_singular(tree), 17, eq=eqs.LAPLACE))
+    assert out.shape == tree.z.shape + (2,)
+    exact = eqs.direct_sum(eqs.LAPLACE, z, z, strength, sigma=None)
+    pot = gather_particle_values(out[..., 0], index)
+    fld = gather_particle_values(out[..., 1], index)
+    assert _rel(pot.real, exact[:, 0].real) < 1e-5
+    assert _rel(fld, exact[:, 1]) < 5e-5          # f32 floor (cf. vortex)
+
+
+def test_laplace_matches_direct_regularized_p17():
+    """Near field regularized + far field singular vs the regularized f64
+    oracle (Type-I kernel substitution, paper §3) — to 1e-5 at p = 17."""
+    pos, strength, tree, index = _case(eq=eqs.LAPLACE)
+    z = pos[:, 0] + 1j * pos[:, 1]
+    out = np.asarray(fmm_evaluate(tree, 17, eq=eqs.LAPLACE))
+    exact = eqs.direct_sum(eqs.LAPLACE, z, z, strength, sigma=0.02)
+    assert _rel(gather_particle_values(out[..., 0], index).real,
+                exact[:, 0].real) < 1e-5
+    assert _rel(gather_particle_values(out[..., 1], index),
+                exact[:, 1]) < 1e-5
+
+
+def test_laplace_field_is_negated_vortex():
+    """Cross-check of the log-expansion operator algebra: for real charges
+    the Laplace field ``-q/(z - z_j)`` must equal the negated vortex
+    velocity computed by the INDEPENDENT velocity-kernel operators."""
+    pos, strength, tree, index = _case(eq=eqs.LAPLACE)
+    sing = _singular(tree)
+    fld = np.asarray(fmm_evaluate(sing, 17, eq=eqs.LAPLACE))[..., 1]
+    w = np.asarray(fmm_evaluate(sing, 17, eq=eqs.VORTEX))
+    assert _rel(fld, -w) < 1e-6
+
+
+def test_laplace_p_convergence():
+    """Truncation error decays with p for both channels."""
+    pos, strength, tree, index = _case(n=1200, seed=7, eq=eqs.LAPLACE)
+    z = pos[:, 0] + 1j * pos[:, 1]
+    exact = eqs.direct_sum(eqs.LAPLACE, z, z, strength, sigma=None)
+    errs = []
+    for p in (4, 8, 16):
+        out = np.asarray(fmm_evaluate(_singular(tree), p, eq=eqs.LAPLACE))
+        errs.append(_rel(gather_particle_values(out[..., 0], index).real,
+                         exact[:, 0].real))
+    assert errs[1] < errs[0] * 0.5
+    assert errs[2] < errs[1]
+
+
+def test_laplace_kernel_route_matches_jnp():
+    """use_kernels=True (Pallas M2L + multi-channel P2P) == jnp route."""
+    pos, strength, tree, index = _case(eq=eqs.LAPLACE)
+    ref = np.asarray(fmm_evaluate(tree, 12, eq=eqs.LAPLACE))
+    kern = np.asarray(fmm_evaluate(tree, 12, eq=eqs.LAPLACE,
+                                   use_kernels=True))
+    assert _rel(kern, ref) < 1e-5
+
+
+# ---------------------------------------------------------------------------
+# Tracer: passive source != target evaluation
+# ---------------------------------------------------------------------------
+
+
+def _probe_case(level=3, n_src=1500, n_tgt=800, seed=3):
+    rng = np.random.default_rng(seed)
+    pos = rng.uniform(0.02, 0.98, size=(n_src, 2))
+    strength = rng.normal(size=n_src)
+    tpos = rng.uniform(0.05, 0.95, size=(n_tgt, 2))
+    tree, _ = build_tree(pos, strength, level, sigma=0.02)
+    targets, tindex = build_tree(tpos, np.zeros(n_tgt), level, sigma=0.02)
+    return pos, strength, tpos, tree, targets, tindex
+
+
+def test_tracer_matches_direct_both_routes():
+    pos, strength, tpos, tree, targets, tindex = _probe_case()
+    z = pos[:, 0] + 1j * pos[:, 1]
+    tz = tpos[:, 0] + 1j * tpos[:, 1]
+    exact = eqs.direct_sum(eqs.TRACER, tz, z, strength, sigma=0.02)
+    for use_kernels in (False, True):
+        out = np.asarray(fmm_evaluate(tree, 17, eq=eqs.TRACER,
+                                      targets=targets,
+                                      use_kernels=use_kernels))
+        assert out.shape == targets.z.shape
+        got = gather_particle_values(out, tindex)
+        assert _rel(got, exact) < 5e-5, use_kernels
+
+
+def test_tracer_requires_targets():
+    pos, strength, tree, index = _case()
+    with pytest.raises(ValueError, match="requires a targets tree"):
+        fmm_evaluate(tree, 8, eq=eqs.TRACER)
+
+
+def test_laplace_at_probe_targets():
+    """eq and targets compose: potential + field at passive probes."""
+    rng = np.random.default_rng(11)
+    pos = rng.uniform(0.02, 0.98, size=(1200, 2))
+    strength = rng.normal(size=1200)
+    tpos = rng.uniform(0.1, 0.9, size=(500, 2))
+    tree, _ = build_tree(pos, strength, 3, sigma=0.02,
+                         charge_scale=eqs.LAPLACE.charge_scale)
+    targets, tindex = build_tree(tpos, np.zeros(500), 3, sigma=0.02)
+    out = np.asarray(fmm_evaluate(tree, 17, eq=eqs.LAPLACE, targets=targets))
+    assert out.shape == targets.z.shape + (2,)
+    z = pos[:, 0] + 1j * pos[:, 1]
+    tz = tpos[:, 0] + 1j * tpos[:, 1]
+    exact = eqs.direct_sum(eqs.LAPLACE, tz, z, strength, sigma=0.02)
+    assert _rel(gather_particle_values(out[..., 0], tindex).real,
+                exact[:, 0].real) < 1e-5
+    assert _rel(gather_particle_values(out[..., 1], tindex),
+                exact[:, 1]) < 1e-5
+
+
+# ---------------------------------------------------------------------------
+# Serial == sharded on 4 devices, both kernel routes, both plan kinds
+# ---------------------------------------------------------------------------
+
+
+_MULTIDEVICE_BODY = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    import numpy as np
+    import jax
+    from jax.sharding import Mesh
+    from repro.core import equations as eqs
+    from repro.core.cost_model import ModelParams
+    from repro.core.fmm import fmm_evaluate
+    from repro.core.parallel_fmm import parallel_fmm_evaluate
+    from repro.core.plan import block_plan_from_counts, plan_from_counts
+    from repro.core.quadtree import build_tree
+
+    rng = np.random.default_rng(0)
+    level, p, ndev = 5, 12, 4
+    pos = rng.uniform(0.02, 0.98, size=(2500, 2))
+    strength = rng.normal(size=2500)
+    tpos = rng.uniform(0.05, 0.95, size=(1200, 2))
+    mesh = Mesh(np.array(jax.devices()[:ndev]), ("data",))
+
+    def rel(a, b):
+        return np.linalg.norm(a - b) / np.linalg.norm(b)
+
+    ltree, lindex = build_tree(pos, strength, level, sigma=0.02,
+                               charge_scale=eqs.LAPLACE.charge_scale)
+    params = ModelParams(level=level, cut=4, p=p, slots=ltree.slots,
+                         nout=eqs.LAPLACE.nout)
+    slab = plan_from_counts(lindex.counts, params, ndev, method="model")
+    block = block_plan_from_counts(lindex.counts, params, (2, 2),
+                                   method="model")
+
+    vtree, _ = build_tree(pos, strength, level, sigma=0.02)
+    targets, _ = build_tree(tpos, np.zeros(len(tpos)), level, sigma=0.02)
+    cases = {
+        "laplace": (ltree, eqs.LAPLACE, None),
+        "tracer": (vtree, eqs.TRACER, targets),
+    }
+    for name, (tree, eq, tgt) in cases.items():
+        serial = np.asarray(fmm_evaluate(tree, p, eq=eq, targets=tgt))
+        for plan in (slab, block):
+            for use_kernels in (False, True):
+                for overlap in (False, True):
+                    par = np.asarray(parallel_fmm_evaluate(
+                        tree, p, mesh, plan=plan, use_kernels=use_kernels,
+                        overlap=overlap, eq=eq, targets=tgt))
+                    err = rel(par, serial)
+                    print(f"{name} {type(plan).__name__} "
+                          f"kernels={use_kernels} overlap={overlap} "
+                          f"rel={err:.2e}")
+                    assert err < 1e-5, (name, plan, use_kernels, overlap,
+                                        err)
+    print("OK")
+""")
+
+
+def test_equations_multidevice():
+    """laplace and tracer: serial == sharded on 4 devices — SlabPlan and
+    BlockPlan, kernels on/off, overlapped and monolithic orderings
+    (acceptance-pinned)."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.abspath(
+        os.path.join(os.path.dirname(__file__), "..", "src"))
+    env.pop("XLA_FLAGS", None)
+    proc = subprocess.run([sys.executable, "-c", _MULTIDEVICE_BODY],
+                          capture_output=True, text=True, env=env,
+                          timeout=900)
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    assert "OK" in proc.stdout
+
+
+# ---------------------------------------------------------------------------
+# The drivers consume only the spec (grep guard) + spec-dependent payload
+# ---------------------------------------------------------------------------
+
+
+def test_drivers_have_no_equation_branches():
+    """The slab paths are spec-parametric: neither driver may branch on an
+    equation name or instance (the grep guard of the acceptance criteria).
+    """
+    root = os.path.join(os.path.dirname(__file__), "..", "src", "repro")
+    forbidden = re.compile(
+        r"eq\.name\s*==|==\s*['\"](vortex|laplace|tracer)['\"]"
+        r"|isinstance\([^)]*(?:Laplace|Tracer|Vortex)Equation")
+    for rel_path in ("core/fmm.py", "core/parallel_fmm.py",
+                     "kernels/ops.py", "kernels/m2l.py", "kernels/p2p.py"):
+        with open(os.path.join(root, rel_path)) as f:
+            src = f.read()
+        hit = forbidden.search(src)
+        assert hit is None, (rel_path, hit and hit.group(0))
+
+
+def test_packed_exchange_payload_width_is_spec_dependent():
+    """Real-charge equations drop the Im q plane: 4 planes instead of 5,
+    losslessly."""
+    import jax.numpy as jnp
+    from repro.core.parallel_fmm import _pack_particles, _unpack_particles
+
+    rng = np.random.default_rng(7)
+    shape = (6, 4, 3)
+    z = jnp.asarray(rng.normal(size=shape) + 1j * rng.normal(size=shape),
+                    jnp.complex64)
+    q = jnp.asarray(rng.normal(size=shape) + 0j, jnp.complex64)
+    m = jnp.asarray(rng.uniform(size=shape) > 0.5)
+    packed = _pack_particles(z, q, m, q_real=True)
+    assert packed.shape == (6, 4, 4, 3) and packed.dtype == jnp.float32
+    z2, q2, m2 = _unpack_particles(packed, z.dtype, q_real=True)
+    assert np.array_equal(np.asarray(z2), np.asarray(z))
+    assert np.array_equal(np.asarray(q2), np.asarray(q))
+    assert np.array_equal(np.asarray(m2), np.asarray(m))
+    # complex-charge default keeps the 5-plane layout
+    assert _pack_particles(z, q, m).shape == (6, 4, 5, 3)
+
+
+def test_real_charge_equation_reads_only_re_q():
+    """A real-charge equation on a tree built with a mismatched COMPLEX
+    charge_scale must behave as if q were projected to its real part —
+    the sharded halo drops the Im q plane, so the drivers project local
+    charges too and serial == sharded holds even on inconsistent input."""
+    rng = np.random.default_rng(5)
+    pos = rng.uniform(0.02, 0.98, size=(800, 2))
+    strength = rng.normal(size=800)
+    # wrong: vortex charge_scale 1/(2*pi*i) makes q purely imaginary
+    bad, _ = build_tree(pos, strength, 3, sigma=0.02)
+    proj = Tree(z=bad.z, q=(np.asarray(bad.q).real + 0j).astype(np.complex64),
+                mask=bad.mask, level=bad.level, sigma=bad.sigma)
+    out_bad = np.asarray(fmm_evaluate(bad, 10, eq=eqs.LAPLACE))
+    out_proj = np.asarray(fmm_evaluate(proj, 10, eq=eqs.LAPLACE))
+    assert np.array_equal(out_bad, out_proj)
+
+
+# ---------------------------------------------------------------------------
+# Cost model reads the spec (flops_estimate bugfix + Eq 13-15 loads)
+# ---------------------------------------------------------------------------
+
+
+def test_flops_estimate_reads_equation_spec():
+    base = flops_estimate(5, 4, 17)
+    lap = flops_estimate(5, 4, 17, eq=eqs.LAPLACE)
+    # P2P and L2P scale with the output arity; the shared coefficient
+    # sweeps do not
+    assert lap["p2p"] == 2 * base["p2p"]
+    assert lap["l2p"] == 2 * base["l2p"]
+    for stage in ("p2m", "m2m", "m2l", "l2l"):
+        assert lap[stage] == base[stage]
+    assert lap["total"] == base["total"] + base["p2p"] + base["l2p"]
+
+
+def test_flops_estimate_prices_fused_exchange():
+    """The census reports the PR-4 fused packed exchange, not the three
+    unfused rounds: one _tile_halo round is 4 ppermutes on a 2x2 grid
+    (12 was the unfused count — the 3x reduction the benchmark pins), 2 on
+    a 1-D band grid, 0 serial; real-charge payloads are 4 planes, not 5."""
+    est = flops_estimate(5, 4, 12, grid=(2, 2))
+    assert est["p2p_exchange_collectives"] == 4 == 12 / 3
+    assert flops_estimate(5, 4, 12, grid=(4, 1))["p2p_exchange_collectives"] == 2
+    assert flops_estimate(5, 4, 12)["p2p_exchange_collectives"] == 0
+    assert est["p2p_exchange_planes"] == 5
+    lap = flops_estimate(5, 4, 12, eq=eqs.LAPLACE, grid=(2, 2))
+    assert lap["p2p_exchange_planes"] == 4
+    # the count entries ride outside the flop total
+    assert est["total"] == flops_estimate(5, 4, 12)["total"]
+
+
+def test_cell_loads_scale_with_equation_arity():
+    from repro.core.cost_model import ModelParams
+    from repro.core.plan import cell_loads
+    from repro.core.vortex import lamb_oseen_particles
+
+    pos, gamma, sigma = lamb_oseen_particles(80)
+    tree, index = build_tree(pos, gamma, 5, sigma)
+    p1 = ModelParams(level=5, cut=4, p=12, slots=tree.slots, nout=1)
+    p2 = ModelParams(level=5, cut=4, p=12, slots=tree.slots,
+                     nout=eqs.LAPLACE.nout)
+    w1, w2 = cell_loads(index.counts, p1), cell_loads(index.counts, p2)
+    assert (w2 > w1).any() and (w2 >= w1).all()
+
+
+# ---------------------------------------------------------------------------
+# Stepper: host wall-clock measured-times default
+# ---------------------------------------------------------------------------
+
+
+def test_stepper_defaults_to_wallclock_times():
+    from repro.core.stepper import VortexStepper, host_wallclock_times
+    from repro.core.vortex import lamb_oseen_particles
+
+    pos, gamma, sigma = lamb_oseen_particles(40)
+    st = VortexStepper(pos, gamma, sigma, p=8, dt=0.004, dynamic=True,
+                       replan_every=2)
+    assert st.measured_times_fn is host_wallclock_times
+    assert host_wallclock_times(st) is None     # no clean step yet
+    for _ in range(2):
+        st.step()
+    times = host_wallclock_times(st)
+    assert times is not None and times.shape == (st.nparts,)
+    assert (times > 0).all()
+    # a static stepper keeps the injection point empty
+    st2 = VortexStepper(pos, gamma, sigma, p=8, dt=0.004)
+    assert st2.measured_times_fn is None
