@@ -462,6 +462,75 @@ def bench_overlap(rows, quick=False):
             rows.append((name, 0.0, f"failed:{type(e).__name__}:{detail}"))
 
 
+def bench_guarded_step(rows, quick=False):
+    """Guarded vs unguarded RK2 step on 4 forced host devices.
+
+    The health word (DESIGN.md §11) is computed inside the step's own
+    device program — a handful of finiteness reductions riding the
+    existing outputs, no extra host sync — so guarded throughput must
+    stay within 3% of unguarded.  Interleaved paired reps, min per mode;
+    a violation marks the row ``failed:``, which the CI guard treats as
+    fatal."""
+    ndev = 4
+    m_side, level, p = (80, 5, 8) if quick else (160, 6, 12)
+    body = textwrap.dedent(f"""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count={ndev}"
+        import time
+        import numpy as np
+        import jax
+        from jax.sharding import Mesh
+        from repro.core.cost_model import ModelParams
+        from repro.core.plan import plan_from_counts
+        from repro.core.quadtree import build_tree
+        from repro.core.stepper import rk2_step
+        from repro.core.vortex import lamb_oseen_particles
+
+        mesh = Mesh(np.array(jax.devices()[:{ndev}]), ("data",))
+        pos, gamma, sigma = lamb_oseen_particles({m_side})
+        tree, index = build_tree(pos, gamma, level={level}, sigma=sigma)
+        params = ModelParams(level={level}, cut=4, p={p}, slots=tree.slots)
+        plan = plan_from_counts(index.counts, params, {ndev}, method="model")
+
+        fns = {{}}
+        for g in (True, False):
+            fn = (lambda g=g: jax.block_until_ready(rk2_step(
+                tree, 1e-4, p={p}, mesh=mesh, plan=plan, guard=g)[0].z))
+            fn()                               # compile + warm
+            fns[g] = fn
+        t = {{True: [], False: []}}
+        for _ in range(10):                    # interleaved, paired reps
+            for g in (False, True):
+                t0 = time.perf_counter()
+                fns[g]()
+                t[g].append(time.perf_counter() - t0)
+        gu, un = min(t[True]) * 1e6, min(t[False]) * 1e6
+        ratio = gu / un
+        tag = "" if ratio <= 1.03 else "failed:guard_overhead_"
+        print(f"ROW guarded_step_overhead {{gu:.1f}} {{tag}}"
+              f"ratio={{ratio:.3f}}_unguarded_us={{un:.1f}}")
+    """)
+    env = dict(os.environ)
+    src_dir = os.path.abspath(os.path.join(os.path.dirname(__file__), "..",
+                                           "src"))
+    old_pp = env.get("PYTHONPATH", "")
+    env["PYTHONPATH"] = src_dir + (os.pathsep + old_pp if old_pp else "")
+    try:
+        proc = subprocess.run([sys.executable, "-c", body],
+                              capture_output=True, text=True, env=env,
+                              timeout=1800)
+        got = [l.split(maxsplit=3) for l in proc.stdout.splitlines()
+               if l.startswith("ROW")]
+        if proc.returncode != 0 or len(got) != 1:
+            raise RuntimeError(proc.stderr[-300:])
+        for _, name, us, derived in got:
+            rows.append((name, float(us), derived))
+    except Exception as e:  # report, never abort the whole harness
+        detail = " ".join(str(e).split())[-160:].replace(",", ";")
+        rows.append(("guarded_step_overhead", 0.0,
+                     f"failed:{type(e).__name__}:{detail}"))
+
+
 def bench_plan_halo(rows, quick=False):
     """1-D band vs 2-D block halo volume on the Lamb-Oseen lattice (the
     BlockPlan's reason to exist — ROADMAP "2-D execution plans").
@@ -583,7 +652,8 @@ def main() -> None:
     for bench in (bench_fig6_stage_timings, bench_fig7_9_scaling,
                   bench_table12_memory, bench_kernels, bench_m2l_staging_bytes,
                   bench_parallel_multidevice, bench_plan_execution,
-                  bench_overlap, bench_plan_halo, bench_equations,
+                  bench_overlap, bench_guarded_step, bench_plan_halo,
+                  bench_equations,
                   bench_moe_placement):
         bench(rows, quick=quick)
     print("name,us_per_call,derived")

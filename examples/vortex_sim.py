@@ -51,6 +51,19 @@ def main():
     ap.add_argument("--no-overlap", action="store_true",
                     help="disable interior/rim comm-compute overlap")
     ap.add_argument("--use-kernels", action="store_true")
+    ap.add_argument("--debug-nans", action="store_true",
+                    help="jax_debug_nans: crash on the first NaN any jitted "
+                         "computation produces (guarded recovery is "
+                         "disabled so the fault is not masked)")
+    ap.add_argument("--no-guard", action="store_true",
+                    help="disable the health word + recovery ladder")
+    ap.add_argument("--checkpoint-dir", default=None,
+                    help="snapshot (tree, payload) here every "
+                         "--checkpoint-every steps")
+    ap.add_argument("--checkpoint-every", type=int, default=0)
+    ap.add_argument("--resume", action="store_true",
+                    help="restore from the latest checkpoint in "
+                         "--checkpoint-dir instead of starting fresh")
     args = ap.parse_args()
 
     plan_grid = None
@@ -76,6 +89,11 @@ def main():
             f" --xla_force_host_platform_device_count={args.devices}")
 
     sys.path.insert(0, "src")
+    from repro.configs import backend
+    if args.debug_nans:
+        # debug-NaN wants the raw failure, not a recovered one
+        backend.set_debug_nan(True)
+        args.no_guard = True
     import numpy as np
     import jax
     from jax.sharding import Mesh
@@ -92,14 +110,24 @@ def main():
             sys.exit(f"need {args.devices} devices, have {len(jax.devices())}")
         mesh = Mesh(np.array(jax.devices()[:args.devices]), ("data",))
 
-    stepper = VortexStepper(
-        pos, gamma, sigma, p=args.p, dt=args.dt, mesh=mesh,
-        use_kernels=args.use_kernels,
+    common = dict(
+        mesh=mesh, use_kernels=args.use_kernels,
         plan_method="uniform" if args.plan == "uniform" else "model",
         dynamic=(args.plan == "dynamic"), plan_grid=plan_grid,
-        overlap=not args.no_overlap,
-        replan_every=args.replan_every,
-        payload={"r0": r0 + 0j})
+        overlap=not args.no_overlap, replan_every=args.replan_every,
+        guard=not args.no_guard,
+        checkpoint_every=args.checkpoint_every)
+    if args.resume:
+        if not args.checkpoint_dir:
+            sys.exit("--resume needs --checkpoint-dir")
+        stepper = VortexStepper.from_checkpoint(args.checkpoint_dir, **common)
+        print(f"resumed from step {stepper.step_count} in "
+              f"{args.checkpoint_dir}")
+    else:
+        stepper = VortexStepper(
+            pos, gamma, sigma, p=args.p, dt=args.dt,
+            checkpoint_dir=args.checkpoint_dir,
+            payload={"r0": r0 + 0j}, **common)
     s0 = stepper.stats()
     print(f"plan={args.plan} devices={stepper.nparts} "
           f"level={stepper.params.level} bands={stepper.plan.describe()} "

@@ -111,6 +111,15 @@ class CheckpointManager:
         with open(path) as f:
             return int(f.read().strip())
 
+    def load_meta(self, step: Optional[int] = None) -> Optional[dict]:
+        """Read a checkpoint's meta.json without restoring any arrays —
+        callers use it to build restore templates (shapes/dtypes) first."""
+        step = self.latest_step() if step is None else step
+        if step is None:
+            return None
+        with open(os.path.join(self.dir, f"step_{step}", "meta.json")) as f:
+            return json.load(f)
+
     def restore(self, templates: dict[str, Any], step: Optional[int] = None,
                 shardings: Optional[dict[str, Any]] = None):
         """Restore pytrees; ``shardings`` (same structure) enables elastic

@@ -1,0 +1,60 @@
+"""JAX backend knobs for drivers and CI lanes (guarded execution §11).
+
+Every function here only takes effect at the BEGINNING of a program —
+before the first jax array is created — so drivers call them right after
+parsing flags and before importing anything that touches jax arrays.
+``set_cpu_cores`` must run before ``import jax`` entirely (XLA reads the
+flag once at backend init); the others are safe any time pre-trace.
+"""
+from __future__ import annotations
+
+import os
+import warnings
+from multiprocessing import cpu_count
+
+
+def jax_enable_x64(use_x64: bool) -> None:
+    """Switch the default array precision to 64-bit (or back to 32)."""
+    import jax
+    jax.config.update("jax_enable_x64", bool(use_x64))
+
+
+def set_platform(platform: str = "cpu") -> None:
+    """Pin the backend to 'cpu', 'gpu', or 'tpu'."""
+    import jax
+    jax.config.update("jax_platform_name", platform)
+    if platform == "gpu":
+        # https://jax.readthedocs.io/en/latest/gpu_performance_tips.html
+        os.environ["XLA_FLAGS"] = (
+            os.environ.get("XLA_FLAGS", "")
+            + " --xla_gpu_triton_gemm_any=True"
+            + " --xla_gpu_enable_latency_hiding_scheduler=true"
+        ).strip()
+
+
+def set_cpu_cores(n: int) -> None:
+    """Expose ``n`` host CPU devices (XLA host-platform device count).
+
+    Call BEFORE importing jax anywhere in the process — the flag is read
+    once when the CPU backend initializes."""
+    n = int(n)
+    total = cpu_count()
+    if n > total:
+        warnings.warn(f"only {total} CPUs available, will use {total - 1}",
+                      Warning)
+        n = total - 1
+    os.environ["XLA_FLAGS"] = (
+        os.environ.get("XLA_FLAGS", "")
+        + f" --xla_force_host_platform_device_count={n}").strip()
+
+
+def set_debug_nan(flag: bool) -> None:
+    """Raise on the first NaN any jitted computation produces.
+
+    The brute-force debugging lane: complements the packed health word
+    (which classifies and recovers instead of crashing) when a fault needs
+    to be pinned to the exact primitive that produced it.
+    https://jax.readthedocs.io/en/latest/debugging/flags.html
+    """
+    import jax
+    jax.config.update("jax_debug_nans", bool(flag))

@@ -1,0 +1,131 @@
+"""Deterministic fault injection for guarded execution (DESIGN.md §11).
+
+A :class:`FaultSpec` names one fault SITE, keyed by the 1-based step index
+at which it fires; a :class:`FaultInjector` holds a set of specs and is the
+only object drivers ever see.  Specs are frozen/hashable, so the active
+specs for a step ride into ``rk2_step`` / ``parallel_fmm_evaluate`` as a
+STATIC jit argument: a step with no active fault passes the empty tuple and
+traces the exact program an injector-free run traces — injection is
+zero-cost when disabled (pinned by an HLO-equality test) and each injected
+step compiles its own program once.
+
+Sites (where each one lands):
+
+  halo_nan      NaN written into the received ghost strip of the packed P2P
+                halo exchange on one device (sharded driver only; the jnp
+                reference route has no exchange).  ``only_grid`` restricts
+                the site to a specific plan grid, so a plan-fallback rung
+                can escape it.
+  tile_corrupt  one device's output tile multiplied into non-finite after
+                the masked evaluation (sharded driver only).
+  teleport      the slot-0 live particle of every occupied leaf box shifted
+                by ``magnitude`` (PHYSICAL units — the stepper rescales by
+                its domain size, so root-box expansion can cure a sticky
+                teleport whose magnitude fits the grown domain) after the
+                first half-kick (both drivers).
+  overflow      every live particle clumped into one leaf box after the
+                first half-kick, overflowing its slot capacity (both
+                drivers).
+  time_inflate  one step's measured wall-clock sample multiplied by
+                ``magnitude`` (host side; exercises the outlier filter on
+                the measured-feedback loop, never the device program).
+
+Non-sticky specs fire only on attempt 0 of their step — the model of a
+transient fault, recovered by the ladder's plain retry.  ``sticky=True``
+fires on every attempt, forcing escalation down the ladder (and, when no
+rung can dodge the site, the typed ``StepperFaultError``).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+DEVICE_SITES = ("halo_nan", "tile_corrupt")
+STEP_SITES = ("teleport", "overflow")
+HOST_SITES = ("time_inflate",)
+SITES = DEVICE_SITES + STEP_SITES + HOST_SITES
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultSpec:
+    site: str
+    step: int                 # 1-based step index at which to fire
+    device: int = 0           # target device (device sites)
+    sticky: bool = False      # fire on every attempt, not just the first
+    magnitude: float = 2.0    # teleport offset / time inflation factor
+    only_grid: Optional[tuple[int, int]] = None  # restrict halo_nan to a grid
+
+    def __post_init__(self):
+        if self.site not in SITES:
+            raise ValueError(f"unknown fault site {self.site!r}; "
+                             f"one of {SITES}")
+
+
+class FaultInjector:
+    """Holds the configured faults; drivers query the active subset."""
+
+    def __init__(self, *specs: FaultSpec):
+        self.specs = tuple(specs)
+
+    def active(self, step: int, attempt: int = 0) -> tuple[FaultSpec, ...]:
+        """Device-program faults firing at (step, attempt) — the static
+        tuple threaded into the jitted step."""
+        return tuple(f for f in self.specs
+                     if f.step == step and f.site not in HOST_SITES
+                     and (f.sticky or attempt == 0))
+
+    def time_factor(self, step: int) -> float:
+        """Host-side measured-time inflation factor for this step."""
+        factor = 1.0
+        for f in self.specs:
+            if f.step == step and f.site == "time_inflate":
+                factor *= f.magnitude
+        return factor
+
+
+# -- device-side application (called from inside the jitted drivers) --------
+
+
+def corrupt_halo(buf: jnp.ndarray, faults: tuple[FaultSpec, ...],
+                 device_index, grid: tuple[int, int]) -> jnp.ndarray:
+    """Apply active ``halo_nan`` specs to an exchanged halo buffer.
+
+    ``device_index`` is the traced ``lax.axis_index``; the first ghost row
+    of the buffer is multiplied by NaN on the target device (NaN * x = NaN,
+    including the zero domain-edge padding)."""
+    for f in faults:
+        if f.site != "halo_nan":
+            continue
+        if f.only_grid is not None and tuple(f.only_grid) != tuple(grid):
+            continue
+        scale = jnp.where(device_index == f.device, jnp.nan, 1.0)
+        buf = buf.at[0].mul(scale.astype(buf.dtype))
+    return buf
+
+
+def corrupt_tile(out: jnp.ndarray, faults: tuple[FaultSpec, ...],
+                 device_index) -> jnp.ndarray:
+    """Apply active ``tile_corrupt`` specs to one device's output tile."""
+    for f in faults:
+        if f.site == "tile_corrupt":
+            bad = jnp.where(device_index == f.device, jnp.inf, 0.0)
+            out = out + bad.astype(out.real.dtype)
+    return out
+
+
+def corrupt_positions(z: jnp.ndarray, mask: jnp.ndarray,
+                      faults: tuple[FaultSpec, ...]) -> jnp.ndarray:
+    """Apply active ``teleport`` / ``overflow`` specs to mid-step positions
+    (acts on the global (n, n, s) position grid inside ``rk2_step``)."""
+    for f in faults:
+        if f.site == "teleport":
+            shift = jnp.asarray(f.magnitude * (1.0 + 1.0j), z.dtype)
+            # slot 0 of every occupied box: nonempty wherever particles are
+            sel = jnp.zeros_like(mask).at[..., 0].set(mask[..., 0])
+            z = jnp.where(sel, z + shift, z)
+        elif f.site == "overflow":
+            z = jnp.where(mask, jnp.asarray(0.5 + 0.5j, z.dtype), z)
+    return z

@@ -28,6 +28,7 @@ import jax.numpy as jnp
 
 from . import equations as eqs
 from . import expansions as ex
+from . import health as hw
 from .quadtree import P2P_OFFSETS, Tree, box_centers, box_size
 
 
@@ -291,9 +292,10 @@ def _mask_channels(mask, out):
     return jnp.where(m, out, 0.0)
 
 
-@functools.partial(jax.jit, static_argnames=("p", "eq", "use_kernels"))
+@functools.partial(jax.jit, static_argnames=("p", "eq", "use_kernels",
+                                             "with_health"))
 def fmm_evaluate(tree: Tree, p: int, eq=None, use_kernels: bool = False,
-                 targets: Tree | None = None) -> jnp.ndarray:
+                 targets: Tree | None = None, with_health: bool = False):
     """Complete FMM evaluation of any registered equation.
 
     Returns (n, n, s) complex for single-channel equations, or
@@ -304,6 +306,12 @@ def fmm_evaluate(tree: Tree, p: int, eq=None, use_kernels: bool = False,
     (n, n, st[, C]).  ``use_kernels=True`` routes M2L and P2P through the
     Pallas kernels (interpret mode off-TPU); both routes share the
     parity-folded slab implementations above.
+
+    ``with_health=True`` additionally returns a ``health.N_FIELDS`` int32
+    health word computed inside the same program (non-finite sentinels on
+    the leaf expansion coefficients and the masked output — the serial
+    driver has no halo exchange, so that field stays 0); the result is then
+    ``(out, health)`` with no extra host sync.
     """
     eq = eqs.get_equation(eq)
     if targets is None and eq.needs_targets:
@@ -323,8 +331,13 @@ def fmm_evaluate(tree: Tree, p: int, eq=None, use_kernels: bool = False,
     out_mask = tree.mask if targets is None else targets.mask
     if L < 2:
         # Tiny trees are all near field.
-        return _mask_channels(out_mask, near_field(tree, p2p_fn=p2p,
-                                                   z_tgt=zt))
+        out = _mask_channels(out_mask, near_field(tree, p2p_fn=p2p,
+                                                  z_tgt=zt))
+        if not with_health:
+            return out
+        health = hw.with_flag(hw.empty(), hw.F_VEL,
+                              hw.nonfinite(out, out_mask))
+        return out, health
     m2l_fn = m2l_grid_fn(p, use_kernels, eq)
 
     me = upward_sweep(tree, p, eq)
@@ -333,13 +346,23 @@ def fmm_evaluate(tree: Tree, p: int, eq=None, use_kernels: bool = False,
     z_eval = tree.z if targets is None else targets.z
     far = ex.l2p_eval(le[L], z_eval, centers, box_size(L), p, eq.l2p_modes)
     near = near_field(tree, p2p_fn=p2p, z_tgt=zt)
-    return _mask_channels(out_mask, far + near)
+    out = _mask_channels(out_mask, far + near)
+    if not with_health:
+        return out
+    health = hw.empty()
+    health = hw.with_flag(health, hw.F_COEFF,
+                          jnp.maximum(hw.nonfinite(me[L]),
+                                      hw.nonfinite(le[L])))
+    health = hw.with_flag(health, hw.F_VEL, hw.nonfinite(out, out_mask))
+    return out, health
 
 
-def fmm_velocity(tree: Tree, p: int, use_kernels: bool = False) -> jnp.ndarray:
+def fmm_velocity(tree: Tree, p: int, use_kernels: bool = False,
+                 with_health: bool = False):
     """Complex velocity W = u - iv per slot — the vortex-kernel form of
     :func:`fmm_evaluate` (the registry's bit-compatible default)."""
-    return fmm_evaluate(tree, p, eq=eqs.VORTEX, use_kernels=use_kernels)
+    return fmm_evaluate(tree, p, eq=eqs.VORTEX, use_kernels=use_kernels,
+                        with_health=with_health)
 
 
 def fmm_velocity_singular(tree: Tree, p: int) -> jnp.ndarray:

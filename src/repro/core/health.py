@@ -1,0 +1,140 @@
+"""On-device health sentinels for guarded FMM execution (DESIGN.md §11).
+
+A *health word* is a tiny ``(N_FIELDS,) int32`` vector computed INSIDE the
+jitted step / FMM programs and returned alongside the results — exactly
+like the stepper's max-occupancy scalar from PR 4, so reading it costs no
+extra host sync: it rides back with the step's own outputs.
+
+Fields (index constants below):
+
+  flags (0/1)           F_VEL       non-finite velocity/output at a live slot
+                        F_COEFF     non-finite expansion coefficient (ME or LE)
+                        F_HALO      non-finite value in an exchanged halo buffer
+                        F_OVERFLOW  a leaf box overflowed its slots during rebin
+  counts                F_OOD       live particles outside the unit domain
+                                    (counted BEFORE the rebin clamps them)
+                        F_DROPPED   live particles silently dropped by a rebin
+                                    (capacity overflow surplus)
+  gauges (max)          F_OCC       max leaf occupancy after the step
+
+Merge semantics: flags and gauges combine by ``max``, counts by ``+`` —
+``merge`` applies this for substep/driver composition and
+``device_combine`` reduces a per-device stack the same way (flags from the
+sharded driver are per-device; counts are computed once on the global
+arrays, so double counting never arises).
+
+``pack``/``unpack`` give the single packed word form for reports and logs:
+
+  bits 0-3    F_VEL | F_COEFF<<1 | F_HALO<<2 | F_OVERFLOW<<3
+  bits 4-15   F_OOD      (clamped to 4095)
+  bits 16-23  F_DROPPED  (clamped to 255)
+  bits 24-31  F_OCC      (clamped to 255)
+
+``ok`` is the fault predicate the recovery ladder keys on: any flag set or
+any count nonzero is a fault; occupancy is a gauge, not a fault (the
+stepper's occupancy guard prices it against capacity separately).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+N_FIELDS = 8
+F_VEL, F_COEFF, F_HALO, F_OVERFLOW, F_OOD, F_DROPPED, F_OCC, F_SPARE = \
+    range(N_FIELDS)
+
+FIELD_NAMES = ("vel_nonfinite", "coeff_nonfinite", "halo_nonfinite",
+               "leaf_overflow", "out_of_domain", "dropped", "max_occupancy",
+               "spare")
+
+# count fields combine by +; everything else by max
+_COUNT_FIELDS = (F_OOD, F_DROPPED)
+_IS_COUNT = np.zeros(N_FIELDS, dtype=bool)
+_IS_COUNT[list(_COUNT_FIELDS)] = True
+
+
+def empty() -> jnp.ndarray:
+    return jnp.zeros((N_FIELDS,), jnp.int32)
+
+
+def nonfinite(x: jnp.ndarray, mask: jnp.ndarray | None = None) -> jnp.ndarray:
+    """Traced 0/1: any non-finite entry (live slots only when ``mask``)."""
+    if jnp.issubdtype(x.dtype, jnp.complexfloating):
+        bad = ~(jnp.isfinite(x.real) & jnp.isfinite(x.imag))
+    else:
+        bad = ~jnp.isfinite(x)
+    if mask is not None:
+        m = mask if bad.ndim == mask.ndim else mask[..., None]
+        bad = bad & m
+    return jnp.any(bad).astype(jnp.int32)
+
+
+def out_of_domain_count(z: jnp.ndarray, mask: jnp.ndarray) -> jnp.ndarray:
+    """Live particles outside the unit square [0, 1)^2 — the positions the
+    rebin would silently clamp into the edge boxes."""
+    out = (z.real < 0.0) | (z.real >= 1.0) | (z.imag < 0.0) | (z.imag >= 1.0)
+    return (out & mask).sum().astype(jnp.int32)
+
+
+def with_flag(vec: jnp.ndarray, field: int, cond) -> jnp.ndarray:
+    return vec.at[field].max(jnp.asarray(cond, jnp.int32))
+
+
+def with_count(vec: jnp.ndarray, field: int, n) -> jnp.ndarray:
+    return vec.at[field].add(jnp.asarray(n, jnp.int32))
+
+
+def merge(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Compose two health words (substeps, driver + step level)."""
+    is_count = jnp.asarray(_IS_COUNT)
+    return jnp.where(is_count, a + b, jnp.maximum(a, b))
+
+
+def device_combine(stacked: jnp.ndarray) -> jnp.ndarray:
+    """Reduce a (P, N_FIELDS) per-device stack to one global word."""
+    is_count = jnp.asarray(_IS_COUNT)
+    return jnp.where(is_count, stacked.sum(axis=0),
+                     stacked.max(axis=0)).astype(jnp.int32)
+
+
+# -- host-side report helpers ------------------------------------------------
+
+
+def ok(vec) -> bool:
+    """True iff no fault is flagged (occupancy is a gauge, not a fault)."""
+    v = np.asarray(vec, dtype=np.int64)
+    return bool((v[:F_OCC] == 0).all())
+
+
+def pack(vec) -> int:
+    """Health vector -> one packed 32-bit word (clamped fields; see above)."""
+    v = np.asarray(vec, dtype=np.int64)
+    word = (min(max(int(v[F_VEL]), 0), 1)
+            | (min(max(int(v[F_COEFF]), 0), 1) << 1)
+            | (min(max(int(v[F_HALO]), 0), 1) << 2)
+            | (min(max(int(v[F_OVERFLOW]), 0), 1) << 3)
+            | (min(max(int(v[F_OOD]), 0), 4095) << 4)
+            | (min(max(int(v[F_DROPPED]), 0), 255) << 16)
+            | (min(max(int(v[F_OCC]), 0), 255) << 24))
+    return int(word)
+
+
+def unpack(word: int) -> np.ndarray:
+    v = np.zeros(N_FIELDS, dtype=np.int64)
+    v[F_VEL] = word & 1
+    v[F_COEFF] = (word >> 1) & 1
+    v[F_HALO] = (word >> 2) & 1
+    v[F_OVERFLOW] = (word >> 3) & 1
+    v[F_OOD] = (word >> 4) & 4095
+    v[F_DROPPED] = (word >> 16) & 255
+    v[F_OCC] = (word >> 24) & 255
+    return v
+
+
+def describe(vec) -> dict:
+    """Human/structured view of a health vector (or packed word)."""
+    v = unpack(vec) if np.isscalar(vec) or np.ndim(vec) == 0 \
+        else np.asarray(vec, dtype=np.int64)
+    return {name: int(v[i]) for i, name in enumerate(FIELD_NAMES)
+            if name != "spare"}

@@ -69,7 +69,9 @@ from jax.sharding import Mesh, PartitionSpec as P
 
 from . import equations as _eqs
 from . import expansions as ex
+from . import faults as _faults
 from . import fmm
+from . import health as hw
 from .plan import BlockPlan, SlabPlan, uniform_plan
 from .quadtree import Tree, box_centers, box_size
 
@@ -171,7 +173,8 @@ def _unpack_particles(buf: jnp.ndarray, dtype, q_real: bool = False):
 
 def _parallel_fmm_body(z, q, mask, *targets, plan: BlockPlan, l_cut: int,
                        p: int, sigma, axis_name: str, use_kernels: bool,
-                       overlap: bool, eq):
+                       overlap: bool, eq, with_health: bool = False,
+                       faults: tuple = ()):
     """Runs on each device over its padded (rows_max, cols_max, s) tile.
 
     ``overlap=True`` runs the interior/rim pipeline (DESIGN.md §9): every
@@ -226,6 +229,8 @@ def _parallel_fmm_body(z, q, mask, *targets, plan: BlockPlan, l_cut: int,
     # the Im q plane); targets are tile-local and exchange nothing.
     p2p_buf = halo(_pack_particles(z, q, mask, eq.q_is_real), 1,
                    my_rows, my_cols)
+    p2p_buf = _faults.corrupt_halo(p2p_buf, faults, di, (Pr, Pc))
+    halo_bad = hw.nonfinite(p2p_buf) if with_health else None
     z_buf, q_buf, m_buf = _unpack_particles(p2p_buf, dtype, eq.q_is_real)
 
     # centers padded below/right so the dynamic slice never clamps
@@ -251,6 +256,8 @@ def _parallel_fmm_body(z, q, mask, *targets, plan: BlockPlan, l_cut: int,
             shift = L - lv
             me_bufs[lv] = halo(me[lv], ex.M2L_HALO, my_rows >> shift,
                                my_cols >> shift)
+            if with_health:
+                halo_bad = jnp.maximum(halo_bad, hw.nonfinite(me_bufs[lv]))
 
     # gather the cut level -> replicated root tree (paper's M2M to root);
     # unequal tiles are reassembled by the plan's static 2-D owner maps.
@@ -297,6 +304,8 @@ def _parallel_fmm_body(z, q, mask, *targets, plan: BlockPlan, l_cut: int,
                                             lv, rv, cv)
         else:
             me_buf = halo(me[lv], ex.M2L_HALO, rv, cv)
+            if with_health:
+                halo_bad = jnp.maximum(halo_bad, hw.nonfinite(me_buf))
             le_lv = m2l_slab(me_buf, lv, col_halo=ex.M2L_HALO)
         le_lv = le_lv + ex.l2l(le_prev, p)
         le_prev = le_lv
@@ -313,18 +322,34 @@ def _parallel_fmm_body(z, q, mask, *targets, plan: BlockPlan, l_cut: int,
     else:
         near = p2p_slab(z_buf, q_buf, m_buf, sigma, zt)
     # padded rows/cols (mask=False) are dropped here
-    return fmm._mask_channels(mask if mt is None else mt, far + near)
+    out = fmm._mask_channels(mask if mt is None else mt, far + near)
+    out = _faults.corrupt_tile(out, faults, di)
+    if not with_health:
+        return out
+    # per-device health word (flags only at driver level); the caller
+    # reduces the stacked (P, N_FIELDS) output with the merge semantics
+    health = hw.empty()
+    health = hw.with_flag(health, hw.F_HALO, halo_bad)
+    health = hw.with_flag(health, hw.F_COEFF,
+                          jnp.maximum(hw.nonfinite(me[L]),
+                                      hw.nonfinite(le_leaf)))
+    health = hw.with_flag(health, hw.F_VEL,
+                          hw.nonfinite(out, mask if mt is None else mt))
+    return out, health
 
 
 @functools.partial(jax.jit, static_argnames=("p", "mesh", "mesh_axis",
                                              "use_kernels", "plan",
-                                             "overlap", "eq"))
+                                             "overlap", "eq", "with_health",
+                                             "faults"))
 def parallel_fmm_evaluate(tree: Tree, p: int, mesh: Optional[Mesh] = None,
                           mesh_axis: str = "data",
                           use_kernels: bool = False,
                           plan: Optional[Union[SlabPlan, BlockPlan]] = None,
                           overlap: bool = True, eq=None,
-                          targets: Optional[Tree] = None) -> jnp.ndarray:
+                          targets: Optional[Tree] = None,
+                          with_health: bool = False,
+                          faults: tuple = ()):
     """Distributed FMM evaluation of any registered equation, plan-driven.
 
     ``plan`` maps devices to contiguous parity-even leaf-row bands
@@ -347,6 +372,14 @@ def parallel_fmm_evaluate(tree: Tree, p: int, mesh: Optional[Mesh] = None,
     at the same level holding passive target points — is resharded by the
     SAME plan and evaluated against the sources' local expansions and near
     field; the output is then per target slot, (n, n, st[, eq.nout]).
+
+    ``with_health=True`` returns ``(out, health)`` with a global
+    ``health.N_FIELDS`` int32 health word: non-finite sentinels on the
+    exchanged halo buffers, the expansion coefficients, and the masked
+    output, computed per device inside the shard_map body and reduced in
+    the same program — the guard costs no extra host sync.  ``faults`` is
+    the static tuple of active :class:`~repro.core.faults.FaultSpec`s
+    (empty = the exact injection-free program).
     """
     eq = _eqs.get_equation(eq)
     if mesh is None:
@@ -387,28 +420,37 @@ def parallel_fmm_evaluate(tree: Tree, p: int, mesh: Optional[Mesh] = None,
     l_cut = block.level - block.sharded_depth()
     body = functools.partial(_parallel_fmm_body, plan=block, l_cut=l_cut, p=p,
                              sigma=tree.sigma, axis_name=mesh_axis,
-                             use_kernels=use_kernels, overlap=overlap, eq=eq)
+                             use_kernels=use_kernels, overlap=overlap, eq=eq,
+                             with_health=with_health, faults=faults)
     spec = P(mesh_axis, None, None)
     out_spec = spec if eq.nout == 1 else P(mesh_axis, None, None, None)
+    if with_health:
+        out_spec = (out_spec, P(mesh_axis))
     # pallas_call has no shard_map replication rule; disable the check on
     # the kernel route (numerics are unaffected — outputs stay sharded).
     kwargs = {_CHECK_KW: False} if (use_kernels and _CHECK_KW) else {}
     fn = _shard_map(body, mesh=mesh,
                     in_specs=(spec,) * (3 + len(t_sh)),
                     out_specs=out_spec, **kwargs)
-    w = fn(z_sh, q_sh, m_sh, *t_sh)
-    if identity:
-        return w
-    sct_r, sct_c = block.scatter_index()
-    return w[jnp.asarray(sct_r), jnp.asarray(sct_c)]
+    if with_health:
+        w, h = fn(z_sh, q_sh, m_sh, *t_sh)
+        health = hw.device_combine(h.reshape(P_, hw.N_FIELDS))
+    else:
+        w = fn(z_sh, q_sh, m_sh, *t_sh)
+    if not identity:
+        sct_r, sct_c = block.scatter_index()
+        w = w[jnp.asarray(sct_r), jnp.asarray(sct_c)]
+    return (w, health) if with_health else w
 
 
 def parallel_fmm_velocity(tree: Tree, p: int, mesh: Optional[Mesh] = None,
                           mesh_axis: str = "data",
                           use_kernels: bool = False,
                           plan: Optional[Union[SlabPlan, BlockPlan]] = None,
-                          overlap: bool = True) -> jnp.ndarray:
+                          overlap: bool = True, with_health: bool = False,
+                          faults: tuple = ()):
     """Complex velocity W per slot — the vortex-kernel form of
     :func:`parallel_fmm_evaluate` (the registry's bit-compatible default)."""
     return parallel_fmm_evaluate(tree, p, mesh, mesh_axis, use_kernels,
-                                 plan, overlap, eq=_eqs.VORTEX)
+                                 plan, overlap, eq=_eqs.VORTEX,
+                                 with_health=with_health, faults=faults)

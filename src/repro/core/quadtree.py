@@ -143,6 +143,58 @@ for _py in range(2):
 # ---------------------------------------------------------------------------
 
 
+@dataclasses.dataclass(frozen=True)
+class Domain:
+    """Physical root box mapped onto the solver's unit square.
+
+    The FMM machinery everywhere assumes the unit domain ``[0, 1]^2``; a
+    :class:`Domain` records the affine map from PHYSICAL coordinates to
+    that unit square so the root box can GROW when particles escape (the
+    stepper's domain-expansion recovery rung) without touching any of the
+    tree/kernel geometry.  ``to_unit``/``from_unit`` act on ``(N, 2)``
+    position arrays; the identity domain is bit-transparent.
+
+    Scaling contract for the stepper (unit quantities fed to the solver):
+    ``sigma_unit = sigma / size`` and — for the Biot-Savart/vortex kernel,
+    where velocity ~ Gamma / r — ``gamma_unit = gamma / size**2``, so unit
+    trajectories advanced with the physical ``dt`` map back to physical
+    trajectories exactly.
+    """
+
+    origin: tuple[float, float] = (0.0, 0.0)
+    size: float = 1.0
+
+    def to_unit(self, positions: np.ndarray) -> np.ndarray:
+        return (np.asarray(positions, np.float64)
+                - np.asarray(self.origin)) / self.size
+
+    def from_unit(self, positions: np.ndarray) -> np.ndarray:
+        return np.asarray(positions, np.float64) * self.size \
+            + np.asarray(self.origin)
+
+    @property
+    def is_identity(self) -> bool:
+        return self.origin == (0.0, 0.0) and self.size == 1.0
+
+    @staticmethod
+    def covering(positions: np.ndarray, margin: float = 0.25,
+                 at_least: Optional["Domain"] = None) -> "Domain":
+        """Smallest square (plus relative ``margin`` per side) containing
+        every position — and, when ``at_least`` is given, that whole domain
+        too, so expansion never orphans the current root box."""
+        pos = np.asarray(positions, np.float64)
+        lo, hi = pos.min(axis=0), pos.max(axis=0)
+        if at_least is not None:
+            o = np.asarray(at_least.origin)
+            lo = np.minimum(lo, o)
+            hi = np.maximum(hi, o + at_least.size)
+        side = max(float((hi - lo).max()), 1e-9)
+        size = side * (1.0 + 2.0 * margin)
+        center = (lo + hi) / 2.0
+        origin = center - size / 2.0
+        return Domain(origin=(float(origin[0]), float(origin[1])), size=size)
+
+
 def box_size(level: int) -> float:
     return 2.0 ** (-level)
 

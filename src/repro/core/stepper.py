@@ -1,20 +1,33 @@
-"""Dynamic load-balanced vortex time stepping (the paper's title, §4).
+"""Dynamic load-balanced vortex time stepping (the paper's title, §4),
+with guarded execution (DESIGN.md §11).
 
 :class:`VortexStepper` owns the ``(tree, plan)`` pair and closes the
 model -> execution -> measurement loop:
 
   * each RK2 (midpoint) step is ONE jitted device program — FMM velocity,
     half-kick, device-side rebinning (``quadtree.rebuild_tree``), second
-    FMM, full kick, rebin — no host round-trip per substep (the loop
-    ``examples/vortex_sim.py`` used to run rebuilt the tree on the host
-    twice per step);
+    FMM, full kick, rebin — no host round-trip per substep;
   * every ``replan_every`` steps the current leaf occupancy is pulled,
     measured per-device times (when available) are folded into the weights
     via ``partition.measured_rates`` — the same feedback ``rebalance``
-    applies to the subtree graph — and a new :class:`SlabPlan` is emitted
-    when the modeled Eq-20 bottleneck improves by more than ``replan_tol``;
+    applies to the subtree graph — and a new plan is emitted when the
+    modeled Eq-20 bottleneck improves by more than ``replan_tol``;
   * an occupancy guard re-levels the tree on the host *before* any leaf
-    box can overflow its slot capacity mid-run.
+    box can overflow its slot capacity mid-run;
+  * with ``guard=True`` (default) every step also returns an on-device
+    health word (``core/health.py``) — NaN/Inf sentinels on velocities,
+    coefficients, and exchanged halos; out-of-domain and dropped-particle
+    counts; the overflow bit — and a fault walks the bounded
+    :class:`RecoveryPolicy` ladder: plain retries -> halved dt -> host
+    re-level -> root-box expansion (``quadtree.Domain``) -> plan fallback
+    (block -> slab -> uniform) -> the serial jnp reference route ->
+    rollback to the last checkpoint -> typed :class:`StepperFaultError`
+    carrying a structured :class:`FaultReport`.
+
+Periodic snapshots go through ``checkpoint.manager.CheckpointManager``
+(atomic writes, keep-last-k); ``VortexStepper.from_checkpoint`` restores
+bit-exact tree/payload state onto ANY device count by rebuilding the plan
+from the restored leaf counts (elastic restore).
 """
 from __future__ import annotations
 
@@ -29,20 +42,41 @@ import jax
 import jax.numpy as jnp
 
 from .cost_model import ModelParams
+from . import faults as flt
+from . import health as hw
 from . import partition as pt
+from ..checkpoint.manager import CheckpointManager
 from .fmm import fmm_velocity
 from .parallel_fmm import parallel_fmm_velocity
-from .plan import (SlabPlan, assignment_from_plan, autotune_plan,
+from .plan import (BlockPlan, SlabPlan, assignment_from_plan, autotune_plan,
                    candidate_grids, measured_row_scale, plan_from_counts,
-                   plan_loads, plan_stats, replan)
-from .quadtree import Tree, build_tree, choose_level, rebuild_tree
+                   plan_loads, plan_stats, replan, uniform_plan)
+from .quadtree import Domain, Tree, build_tree, choose_level, rebuild_tree
 
 
-def _velocity(tree, p, mesh, mesh_axis, use_kernels, plan, overlap):
+def _velocity(tree, p, mesh, mesh_axis, use_kernels, plan, overlap,
+              with_health=False, faults=()):
     if mesh is None:
-        return fmm_velocity(tree, p, use_kernels=use_kernels)
+        return fmm_velocity(tree, p, use_kernels=use_kernels,
+                            with_health=with_health)
     return parallel_fmm_velocity(tree, p, mesh, mesh_axis, use_kernels, plan,
-                                 overlap)
+                                 overlap, with_health=with_health,
+                                 faults=faults)
+
+
+def robust_wall(samples, clip: float = 4.0) -> float:
+    """Median/clip outlier filter for wall-clock samples.
+
+    One corrupted sample — a scheduler stall inflating a step, or a garbage
+    near-zero timer reading — must not thrash the measured-feedback loop
+    (``rebalance`` / replanning).  Samples outside ``[median/clip,
+    median*clip]`` are discarded and the median of the survivors is
+    returned, so a single outlier in either direction moves the estimate by
+    at most one rank."""
+    s = np.asarray(list(samples), dtype=np.float64)
+    med = float(np.median(s))
+    keep = s[(s >= med / clip) & (s <= med * clip)]
+    return float(np.median(keep)) if keep.size else med
 
 
 def host_wallclock_times(stepper: "VortexStepper"):
@@ -57,21 +91,24 @@ def host_wallclock_times(stepper: "VortexStepper"):
     are uniform, so the re-plan stays count-driven until real per-device
     timers (jax profiler device runtimes / TPU counters — the ROADMAP
     item) replace this hook.  Recompile-dominated samples are excluded:
-    a re-level pays its rebuild inside its own (flagged) step, but a
-    re-plan is adopted AFTER its step ran, so the retrace for the new
-    static plan lands on the FOLLOWING step — both the flagged record and
-    its successor are dropped.  Returns None until a clean steady-state
+    a re-level or an in-step recovery pays its rebuild inside its own
+    (flagged) step, but a re-plan is adopted AFTER its step ran, so the
+    retrace for the new static plan lands on the FOLLOWING step — both the
+    flagged record and its successor are dropped.  The surviving samples go
+    through :func:`robust_wall` (median/clip), so one corrupted sample
+    can't thrash the replanner.  Returns None until a clean steady-state
     step exists.
     """
     recs = stepper.history
     clean = [r.seconds for prev, r in zip([None] + recs[:-1], recs)
-             if not (r.replanned or r.releveled)
+             if not (r.replanned or r.releveled or r.recovered)
              and not (prev is not None
-                      and (prev.replanned or prev.releveled))]
-    recent = clean[-4:]
+                      and (prev.replanned or prev.releveled
+                           or prev.recovered))]
+    recent = clean[-6:]
     if not recent:
         return None
-    wall = min(recent)
+    wall = robust_wall(recent)
     # maybe_replan stashes the counts it just pulled; fall back to a fresh
     # pull only when called outside the replan path (no second device sync
     # in the steady-state replan check)
@@ -85,33 +122,99 @@ def host_wallclock_times(stepper: "VortexStepper"):
 
 @functools.partial(jax.jit, static_argnames=("p", "mesh", "mesh_axis",
                                              "use_kernels", "plan",
-                                             "overlap"))
+                                             "overlap", "guard", "faults"))
 def rk2_step(tree: Tree, dt, payload=None, *, p: int, mesh=None,
              mesh_axis: str = "data", use_kernels: bool = False,
-             plan: Optional[SlabPlan] = None, overlap: bool = True):
+             plan: Optional[SlabPlan] = None, overlap: bool = True,
+             guard: bool = False, faults: tuple = ()):
     """One jitted RK2 midpoint step; ``dz/dt = conj(W)`` (W = u - iv).
 
     ``payload`` is an optional pytree of per-slot (n, n, s) arrays carried
     through both rebinnings (e.g. particle labels or initial radii).
-    Returns ``(new_tree, new_payload, ok, occ)`` with ``ok`` False iff a
-    leaf box overflowed its slots during either rebin and ``occ`` the
-    maximum leaf occupancy after the step — computed inside the one device
-    program so the stepper's occupancy guard costs no extra host round
-    trip (the steady-state replan check reads it off the step's own
-    outputs).
+    Returns ``(new_tree, new_payload, ok, occ, health)``: ``ok`` is False
+    iff a leaf box overflowed its slots during either rebin and ``occ`` the
+    maximum leaf occupancy after the step — both computed inside the one
+    device program so the stepper's guards cost no extra host round trip.
+    ``guard=True`` additionally assembles the full ``core/health.py`` word
+    (driver sentinels merged with out-of-domain counts BEFORE the rebins
+    clamp, dropped-particle counts from each rebin, the overflow bit, and
+    occupancy); ``guard=False`` returns ``health=None`` and traces the
+    exact unguarded program.  ``faults`` is the static tuple of active
+    :class:`~repro.core.faults.FaultSpec`s (injected on the first substep;
+    empty tuple = the injection-free program, bit for bit).
     """
-    w1 = _velocity(tree, p, mesh, mesh_axis, use_kernels, plan, overlap)
+    v1 = _velocity(tree, p, mesh, mesh_axis, use_kernels, plan, overlap,
+                   with_health=guard, faults=faults)
+    w1, h1 = v1 if guard else (v1, None)
     z_mid = jnp.where(tree.mask, tree.z + 0.5 * dt * jnp.conj(w1), tree.z)
+    z_mid = flt.corrupt_positions(z_mid, tree.mask, faults)
+    live0 = tree.mask.sum()
+    ood1 = hw.out_of_domain_count(z_mid, tree.mask) if guard else None
     aux = (tree.z, payload) if payload is not None else (tree.z,)
     t_mid, aux, ok1 = rebuild_tree(tree, z_mid, aux=aux)
     z0 = aux[0]
 
-    w2 = _velocity(t_mid, p, mesh, mesh_axis, use_kernels, plan, overlap)
+    v2 = _velocity(t_mid, p, mesh, mesh_axis, use_kernels, plan, overlap,
+                   with_health=guard, faults=faults)
+    w2, h2 = v2 if guard else (v2, None)
     z_new = jnp.where(t_mid.mask, z0 + dt * jnp.conj(w2), t_mid.z)
+    ood2 = hw.out_of_domain_count(z_new, t_mid.mask) if guard else None
     t_new, aux, ok2 = rebuild_tree(t_mid, z_new,
                                    aux=aux[1] if payload is not None else None)
     occ = t_new.mask.sum(axis=-1).max()
-    return t_new, aux, ok1 & ok2, occ
+    health = None
+    if guard:
+        health = hw.merge(h1, h2)
+        health = hw.with_count(health, hw.F_OOD, ood1 + ood2)
+        # a rebin drop is live particles lost to capacity overflow — the
+        # count callers would silently lose if they ignored ``ok``
+        health = hw.with_count(health, hw.F_DROPPED,
+                               live0 - t_new.mask.sum())
+        health = hw.with_flag(health, hw.F_OVERFLOW, ~(ok1 & ok2))
+        health = hw.with_flag(health, hw.F_OCC, occ)
+    return t_new, aux, ok1 & ok2, occ, health
+
+
+@dataclasses.dataclass(frozen=True)
+class RecoveryPolicy:
+    """The recovery ladder's knobs, in escalation order (DESIGN.md §11)."""
+
+    max_retries: int = 1          # rung 1: plain retries (transient faults)
+    halve_dt: bool = True         # rung 2: two dt/2 substeps, same interval
+    relevel: bool = True          # rung 3: host re-level at fresh capacity
+    expand_domain: bool = True    # rung 4: grow the root box (OOD faults)
+    domain_margin: float = 0.5    # relative margin of the expanded root box
+    plan_fallback: bool = True    # rung 5: block -> slab -> uniform
+    reference_route: bool = True  # rung 6: serial jnp route, no kernels
+    rollback: bool = True         # rung 7: restore the last checkpoint
+
+
+@dataclasses.dataclass
+class FaultReport:
+    """Structured account of an exhausted recovery ladder."""
+
+    step: int                     # 1-based index of the step that faulted
+    attempts: list                # [{"rung": str, "health": {field: int}}]
+    plan: str                     # plan descriptor at the time of the fault
+    level: int
+    dt: float
+
+    def __str__(self) -> str:
+        rungs = " -> ".join(a["rung"] for a in self.attempts)
+        last = self.attempts[-1]["health"] if self.attempts else {}
+        bad = {k: v for k, v in last.items()
+               if v and k != "max_occupancy"}
+        return (f"step {self.step} unrecoverable after [{rungs}]; "
+                f"last health {bad}; plan={self.plan} level={self.level} "
+                f"dt={self.dt}")
+
+
+class StepperFaultError(RuntimeError):
+    """Raised when every enabled recovery rung failed; carries the report."""
+
+    def __init__(self, report: FaultReport):
+        super().__init__(str(report))
+        self.report = report
 
 
 @dataclasses.dataclass
@@ -122,6 +225,8 @@ class StepRecord:
     replanned: bool
     releveled: bool
     level: int
+    recovered: str = ""      # recovery rung that rescued the step ("" = none)
+    health: int = 0          # packed health word of the adopted attempt
 
 
 class VortexStepper:
@@ -131,19 +236,29 @@ class VortexStepper:
     plan), with ``dynamic=True`` adding re-planning from drifted counts and
     measured times.  ``plan_grid=(Pr, Pc)`` schedules a 2-D
     :class:`BlockPlan` tile grid (``Pr * Pc`` must equal the mesh size)
-    instead of 1-D row bands; re-planning then works on per-tile weights
-    through the same ``replan`` / ``measured_row_scale`` interface.
-    ``plan_grid="auto"`` lets the per-axis grid autotuner
-    (``plan.autotune_plan``) choose slab vs block and the ``(Pr, Pc)``
-    factorization at build and every replan, scoring the Eq-20 balance
-    bottleneck plus the overlap-aware comm residue across all candidate
-    grids.  ``overlap`` selects the sharded driver's interior/rim
-    overlapped execution (default) vs the monolithic ordering.
+    instead of 1-D row bands; ``plan_grid="auto"`` lets the per-axis grid
+    autotuner choose slab vs block at build and every replan.  ``overlap``
+    selects the sharded driver's interior/rim overlapped execution.
     ``measured_times_fn(stepper) -> (nparts,) seconds`` is the injection
-    point for real per-device timers (tests use it to emulate heterogeneous
-    pools); dynamic steppers default to :func:`host_wallclock_times`, which
-    feeds the loop the measured step wall clock (per-device hardware timers
-    stay a ROADMAP item).
+    point for real per-device timers; dynamic steppers default to
+    :func:`host_wallclock_times`.
+
+    Guarded execution: ``guard=True`` (default) runs every step with the
+    on-device health word and walks the :class:`RecoveryPolicy` ladder on a
+    fault; ``guard=False`` reproduces the pre-guard stepper exactly (only
+    the legacy overflow retry remains).  ``faults`` accepts a
+    :class:`~repro.core.faults.FaultInjector` for deterministic fault
+    injection (tests / chaos drills); None costs nothing.
+
+    Checkpointing: ``checkpoint_dir`` + ``checkpoint_every=k`` snapshots
+    (tree, payload, meta) every k adopted steps through
+    :class:`CheckpointManager`; the ladder's rollback rung restores the
+    last snapshot bit-exact, and :meth:`from_checkpoint` rebuilds a stepper
+    — including onto a different device count — from the saved state.
+
+    ``domain`` maps physical coordinates onto the solver's unit square
+    (identity by default); the domain-expansion rung grows it when
+    particles escape the root box.
     """
 
     def __init__(self, positions: np.ndarray, gamma: np.ndarray, sigma: float,
@@ -156,7 +271,33 @@ class VortexStepper:
                  occupancy_guard: float = 0.9, cut: Optional[int] = None,
                  payload=None,
                  measured_times_fn: Optional[Callable[["VortexStepper"],
-                                                      np.ndarray]] = None):
+                                                      np.ndarray]] = None,
+                 guard: bool = True,
+                 policy: Optional[RecoveryPolicy] = None,
+                 faults: Optional[flt.FaultInjector] = None,
+                 checkpoint_dir: Optional[str] = None,
+                 checkpoint_every: int = 0, checkpoint_keep: int = 3,
+                 domain: Optional[Domain] = None):
+        self._init_config(
+            p=p, dt=dt, mesh=mesh, mesh_axis=mesh_axis,
+            use_kernels=use_kernels, plan_method=plan_method, dynamic=dynamic,
+            plan_grid=plan_grid, overlap=overlap, replan_every=replan_every,
+            replan_tol=replan_tol, target_per_box=target_per_box,
+            slots_headroom=slots_headroom, occupancy_guard=occupancy_guard,
+            cut=cut, sigma=sigma, measured_times_fn=measured_times_fn,
+            guard=guard, policy=policy, faults=faults,
+            checkpoint_dir=checkpoint_dir, checkpoint_every=checkpoint_every,
+            checkpoint_keep=checkpoint_keep, domain=domain)
+        self._build_host(np.asarray(positions, np.float64),
+                         np.asarray(gamma, np.float64),
+                         payload_values=None if payload is None else payload)
+
+    def _init_config(self, *, p, dt, mesh, mesh_axis, use_kernels,
+                     plan_method, dynamic, plan_grid, overlap, replan_every,
+                     replan_tol, target_per_box, slots_headroom,
+                     occupancy_guard, cut, sigma, measured_times_fn, guard,
+                     policy, faults, checkpoint_dir, checkpoint_every,
+                     checkpoint_keep, domain):
         self.p, self.dt = p, float(dt)
         self.mesh, self.mesh_axis = mesh, mesh_axis
         self.use_kernels = use_kernels
@@ -171,7 +312,15 @@ class VortexStepper:
         self.slots_headroom = float(slots_headroom)
         self.occupancy_guard = float(occupancy_guard)
         self._cut = cut
-        self.sigma = float(sigma)
+        self.sigma = float(sigma)           # PHYSICAL core size
+        self.domain = domain or Domain()
+        self.guard = bool(guard)
+        self.policy = policy or RecoveryPolicy()
+        self.faults = faults
+        self.checkpoint_every = int(checkpoint_every)
+        self._ckpt = (CheckpointManager(checkpoint_dir, keep=checkpoint_keep)
+                      if checkpoint_dir else None)
+        self._rolled_back_steps: set[int] = set()
         # dynamic steppers default to the host wall-clock timer so
         # --plan dynamic exercises the full measured-feedback loop with
         # real magnitudes (injected per-device timers override it)
@@ -180,10 +329,6 @@ class VortexStepper:
         self.measured_times_fn = measured_times_fn
         self.step_count = 0
         self.history: list[StepRecord] = []
-
-        self._build_host(np.asarray(positions, np.float64),
-                         np.asarray(gamma, np.float64),
-                         payload_values=None if payload is None else payload)
 
     # -- host-side (re)construction -----------------------------------------
 
@@ -207,6 +352,12 @@ class VortexStepper:
         return max(2, math.ceil(math.log2(need)))
 
     def _build_host(self, positions, gamma, payload_values=None):
+        """(Re)bin PHYSICAL particles through the domain map (unit coords,
+        scaled sigma/gamma — see :class:`quadtree.Domain`)."""
+        size = self.domain.size
+        positions = self.domain.to_unit(positions)
+        gamma = np.asarray(gamma, np.float64) / size ** 2
+        sigma_unit = self.sigma / size
         level = max(choose_level(len(positions), self.target_per_box),
                     self._min_level())
         n = 1 << level
@@ -214,7 +365,7 @@ class VortexStepper:
         occ = np.bincount(ij[:, 1] * n + ij[:, 0], minlength=n * n).max()
         slots = max(int(math.ceil(occ * self.slots_headroom)), 2)
         self.tree, self.index = build_tree(positions, gamma, level,
-                                           self.sigma, slots=slots)
+                                           sigma_unit, slots=slots)
         if payload_values is not None:
             def scatter(v):
                 flat = np.zeros((n * n, slots), dtype=np.asarray(v).dtype)
@@ -249,22 +400,171 @@ class VortexStepper:
         return np.asarray(self.tree.mask.sum(axis=-1))
 
     def particles(self) -> tuple[np.ndarray, np.ndarray]:
-        """(positions, gamma) of the live particles, host-side."""
+        """(positions, gamma) of the live particles, host-side, PHYSICAL
+        coordinates (the inverse of the domain map ``_build_host`` applies;
+        an identity domain is bit-transparent)."""
         m = np.asarray(self.tree.mask).reshape(-1)
         z = np.asarray(self.tree.z).reshape(-1)[m]
         q = np.asarray(self.tree.q).reshape(-1)[m]
-        pos = np.stack([z.real, z.imag], axis=1)
-        return pos, np.real(q * 2j * np.pi)
+        pos = self.domain.from_unit(np.stack([z.real, z.imag], axis=1))
+        gamma = np.real(q * 2j * np.pi) * self.domain.size ** 2
+        return pos, gamma
+
+    def _gather_payload_values(self):
+        if self.payload is None:
+            return None
+        m = np.asarray(self.tree.mask).reshape(-1)
+        return jax.tree_util.tree_map(
+            lambda a: np.asarray(a).reshape(-1)[m], self.payload)
 
     def _relevel(self):
         """Host rebuild at a freshly chosen level/capacity (overflow guard)."""
         pos, gamma = self.particles()
-        payload_values = None
-        if self.payload is not None:
-            m = np.asarray(self.tree.mask).reshape(-1)
-            payload_values = jax.tree_util.tree_map(
-                lambda a: np.asarray(a).reshape(-1)[m], self.payload)
+        self._build_host(pos, gamma,
+                         payload_values=self._gather_payload_values())
+
+    def _expand_domain(self, margin: Optional[float] = None):
+        """Grow the root box and rebuild — the recovery rung for particles
+        escaping the current domain.  The new domain covers the old one and
+        is at least twice its size, so the escaping step gains real room."""
+        margin = self.policy.domain_margin if margin is None else margin
+        pos, gamma = self.particles()
+        payload_values = self._gather_payload_values()
+        new = Domain.covering(pos, margin=margin, at_least=self.domain)
+        if new.size < 2.0 * self.domain.size:
+            cx = new.origin[0] + new.size / 2.0
+            cy = new.origin[1] + new.size / 2.0
+            size = 2.0 * self.domain.size
+            new = Domain(origin=(cx - size / 2.0, cy - size / 2.0), size=size)
+        self.domain = new
         self._build_host(pos, gamma, payload_values=payload_values)
+
+    # -- checkpointing -------------------------------------------------------
+
+    def save_checkpoint(self):
+        """Snapshot (tree, payload, meta) through the checkpoint manager."""
+        if self._ckpt is None:
+            raise RuntimeError("stepper built without checkpoint_dir")
+        trees = {"tree": {"z": self.tree.z, "q": self.tree.q,
+                          "mask": self.tree.mask}}
+        payload_spec = None
+        if self.payload is not None:
+            trees["payload"] = self.payload
+            if isinstance(self.payload, dict):
+                payload_spec = {k: str(np.asarray(v).dtype)
+                                for k, v in self.payload.items()}
+        meta = {"level": self.params.level, "cut": self.params.cut,
+                "slots": self.params.slots, "p": self.p, "dt": self.dt,
+                "sigma": self.sigma, "sigma_unit": float(self.tree.sigma),
+                "domain_origin": list(self.domain.origin),
+                "domain_size": self.domain.size,
+                "plan_method": self.plan_method,
+                "payload_spec": payload_spec}
+        self._ckpt.save(self.step_count, trees, meta)
+
+    @staticmethod
+    def _templates_from_meta(meta):
+        n, s = 1 << meta["level"], meta["slots"]
+        templates = {"tree": {"z": np.zeros((n, n, s), np.complex64),
+                              "q": np.zeros((n, n, s), np.complex64),
+                              "mask": np.zeros((n, n, s), bool)}}
+        if meta.get("payload_spec"):
+            templates["payload"] = {
+                k: np.zeros((n, n, s), np.dtype(dt))
+                for k, dt in meta["payload_spec"].items()}
+        return templates
+
+    def _adopt_restored(self, out, meta):
+        """Install restored arrays + rebuild the plan from counts (the
+        elastic part: any device count works as long as the saved level
+        fits its minimum)."""
+        t = out["tree"]
+        self.tree = Tree(z=jnp.asarray(t["z"]), q=jnp.asarray(t["q"]),
+                         mask=jnp.asarray(t["mask"]), level=meta["level"],
+                         sigma=meta["sigma_unit"])
+        self.payload = None
+        if "payload" in out:
+            self.payload = jax.tree_util.tree_map(jnp.asarray, out["payload"])
+        self.domain = Domain(origin=tuple(meta["domain_origin"]),
+                             size=meta["domain_size"])
+        self.sigma = meta["sigma"]
+        self.params = ModelParams(level=meta["level"], cut=meta["cut"],
+                                  p=self.p, slots=meta["slots"])
+        self.step_count = meta["step"]
+        self._counts_cache = None
+        if meta["level"] < self._min_level():
+            # saved tree too shallow for this device count: re-level (the
+            # only restore path that is not bit-exact — host rebuild)
+            self._relevel()
+            return
+        counts = self.counts()
+        if self.plan_grid == "auto":
+            self.plan = autotune_plan(counts, self.params, self.nparts,
+                                      method=self.plan_method,
+                                      overlap=self.overlap)
+        else:
+            self.plan = plan_from_counts(counts, self.params, self.nparts,
+                                         method=self.plan_method,
+                                         grid=self.plan_grid)
+        self.subtree_assign = assignment_from_plan(self.plan, self.params.cut)
+        self._cached_lb = plan_stats(self.plan, counts,
+                                     self.params)["load_balance"]
+
+    def rollback(self, step: Optional[int] = None) -> int:
+        """Restore the last (or a given) checkpoint bit-exact; returns the
+        restored step index."""
+        if self._ckpt is None:
+            raise RuntimeError("stepper built without checkpoint_dir")
+        self._ckpt.wait()               # never race an in-flight save
+        step = self._ckpt.latest_step() if step is None else step
+        if step is None:
+            raise RuntimeError("no checkpoint to roll back to")
+        meta = self._ckpt.load_meta(step)
+        out, meta = self._ckpt.restore(self._templates_from_meta(meta),
+                                       step=step)
+        self._adopt_restored(out, meta)
+        return step
+
+    @classmethod
+    def from_checkpoint(cls, directory: str, *, mesh=None,
+                        mesh_axis: str = "data", step: Optional[int] = None,
+                        use_kernels: bool = False, plan_method: str = None,
+                        dynamic: bool = False, plan_grid=None,
+                        overlap: bool = True, replan_every: int = 4,
+                        replan_tol: float = 0.05,
+                        target_per_box: float = 8.0,
+                        slots_headroom: float = 2.0,
+                        occupancy_guard: float = 0.9,
+                        measured_times_fn=None, guard: bool = True,
+                        policy: Optional[RecoveryPolicy] = None,
+                        faults: Optional[flt.FaultInjector] = None,
+                        checkpoint_every: int = 0,
+                        checkpoint_keep: int = 3) -> "VortexStepper":
+        """Elastic restore: rebuild a stepper from a checkpoint directory,
+        onto ANY mesh/device count — tree and payload arrays are restored
+        bit-exact (they are device-count independent) and the execution
+        plan is rebuilt from the restored leaf counts."""
+        mgr = CheckpointManager(directory, keep=checkpoint_keep)
+        step = mgr.latest_step() if step is None else step
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint under {directory}")
+        meta = mgr.load_meta(step)
+        out, meta = mgr.restore(cls._templates_from_meta(meta), step=step)
+        st = cls.__new__(cls)
+        st._init_config(
+            p=meta["p"], dt=meta["dt"], mesh=mesh, mesh_axis=mesh_axis,
+            use_kernels=use_kernels,
+            plan_method=plan_method or meta.get("plan_method", "model"),
+            dynamic=dynamic, plan_grid=plan_grid, overlap=overlap,
+            replan_every=replan_every, replan_tol=replan_tol,
+            target_per_box=target_per_box, slots_headroom=slots_headroom,
+            occupancy_guard=occupancy_guard, cut=meta["cut"],
+            sigma=meta["sigma"], measured_times_fn=measured_times_fn,
+            guard=guard, policy=policy, faults=faults,
+            checkpoint_dir=directory, checkpoint_every=checkpoint_every,
+            checkpoint_keep=checkpoint_keep, domain=None)
+        st._adopt_restored(out, meta)
+        return st
 
     # -- the dynamic loop ----------------------------------------------------
 
@@ -322,46 +622,212 @@ class VortexStepper:
                                                        self.params.cut)
         return True
 
-    def step(self) -> StepRecord:
-        """Advance one RK2 step; time it; periodically re-plan."""
-        t0 = time.perf_counter()
-        tree, payload, ok, occ = rk2_step(
-            self.tree, self.dt, self.payload, p=self.p, mesh=self.mesh,
-            mesh_axis=self.mesh_axis, use_kernels=self.use_kernels,
-            plan=None if self.mesh is None else self.plan,
-            overlap=self.overlap)
-        jax.block_until_ready(tree.z)
-        releveled = not bool(ok)
-        if releveled:
-            # a box overflowed during rebinning: the old tree is still
-            # intact — re-level on the host and redo the step safely.
-            self._relevel()
-            tree, payload, ok, occ = rk2_step(
-                self.tree, self.dt, self.payload, p=self.p, mesh=self.mesh,
+    # -- guarded execution ---------------------------------------------------
+
+    def _active_faults(self, attempt: int) -> tuple:
+        if self.faults is None:
+            return ()
+        active = self.faults.active(self.step_count + 1, attempt)
+        # teleport magnitudes are PHYSICAL; rk2 runs in unit coordinates,
+        # so rescale by the current domain size (root-box expansion can
+        # then genuinely cure a sticky teleport that fits the new domain)
+        return tuple(dataclasses.replace(f,
+                                         magnitude=f.magnitude
+                                         / self.domain.size)
+                     if f.site == "teleport" else f
+                     for f in active)
+
+    def _run_rk2(self, dt, faults=(), plan=None, reference=False):
+        """One rk2 attempt from the CURRENT (tree, payload); adopts nothing.
+
+        ``reference=True`` runs the most conservative route: serial mesh,
+        pure-jnp slabs, monolithic ordering — the ladder's last compute
+        rung.  Returns host-side ``(tree, payload, ok, occ, health)``."""
+        if reference:
+            out = rk2_step(self.tree, dt, self.payload, p=self.p, mesh=None,
+                           use_kernels=False, plan=None, overlap=False,
+                           guard=self.guard, faults=faults)
+        else:
+            out = rk2_step(
+                self.tree, dt, self.payload, p=self.p, mesh=self.mesh,
                 mesh_axis=self.mesh_axis, use_kernels=self.use_kernels,
-                plan=None if self.mesh is None else self.plan,
-                overlap=self.overlap)
-            jax.block_until_ready(tree.z)
-            if not bool(ok):
+                plan=None if self.mesh is None
+                else (plan if plan is not None else self.plan),
+                overlap=self.overlap, guard=self.guard, faults=faults)
+        tree, payload, ok, occ, health = out
+        jax.block_until_ready(tree.z)
+        return (tree, payload, bool(ok), int(occ),
+                None if health is None else np.asarray(health))
+
+    def _recover(self, first_health: np.ndarray):
+        """Walk the recovery ladder for the step that just faulted.
+
+        Returns ``(tree, payload, occ, health, rung, releveled, replanned)``
+        with the recovered step's state, or ``(None, ..., "rollback", ...)``
+        after a checkpoint rollback (the step did NOT advance), or raises
+        :class:`StepperFaultError` once every enabled rung is exhausted.
+        """
+        pol = self.policy
+        attempts = [{"rung": "step", "health": hw.describe(first_health)}]
+        saw_ood = int(first_health[hw.F_OOD]) > 0
+        attempt = 1
+
+        def run(dt, **kw):
+            nonlocal attempt
+            f = self._active_faults(attempt)
+            attempt += 1
+            return self._run_rk2(dt, faults=f, **kw)
+
+        def note(rung, h):
+            nonlocal saw_ood
+            attempts.append({"rung": rung, "health": hw.describe(h)})
+            saw_ood = saw_ood or int(h[hw.F_OOD]) > 0
+
+        # rung 1: bounded plain retries (the transient-fault model: a
+        # non-sticky injected fault, a one-off bad collective)
+        for r in range(max(pol.max_retries, 0)):
+            t = run(self.dt)
+            note(f"retry_{r + 1}", t[4])
+            if hw.ok(t[4]):
+                return t[0], t[1], t[3], t[4], f"retry_{r + 1}", False, False
+        # rung 2: halved dt — two half-steps covering the same interval, so
+        # a recovered trajectory stays comparable to an unfaulted one
+        if pol.halve_dt:
+            t1 = run(self.dt / 2.0)
+            note("half_dt_1", t1[4])
+            if hw.ok(t1[4]):
+                saved = (self.tree, self.payload)
+                self.tree, self.payload = t1[0], t1[1]
+                t2 = run(self.dt / 2.0)
+                self.tree, self.payload = saved
+                note("half_dt_2", t2[4])
+                if hw.ok(t2[4]):
+                    return t2[0], t2[1], t2[3], t2[4], "half_dt", False, False
+        # rung 3: host re-level at freshly chosen depth/capacity (overflow,
+        # capacity-drop faults)
+        if pol.relevel:
+            self._relevel()
+            t = run(self.dt)
+            note("relevel", t[4])
+            if hw.ok(t[4]):
+                return t[0], t[1], t[3], t[4], "relevel", True, False
+        # rung 4: root-box expansion (particles escaped the domain)
+        if pol.expand_domain and saw_ood:
+            self._expand_domain()
+            t = run(self.dt)
+            note("expand_domain", t[4])
+            if hw.ok(t[4]):
+                return t[0], t[1], t[3], t[4], "expand_domain", True, False
+        # rung 5: plan fallback block -> slab -> uniform (bad plan/exchange)
+        if pol.plan_fallback and self.mesh is not None and self.nparts > 1:
+            for name, fb in self._fallback_plans():
+                t = run(self.dt, plan=fb)
+                note(f"plan_{name}", t[4])
+                if hw.ok(t[4]):
+                    self.plan = fb
+                    self.plan_grid = None
+                    counts = self.counts()
+                    self.subtree_assign = assignment_from_plan(
+                        fb, self.params.cut)
+                    self._cached_lb = plan_stats(fb, counts,
+                                                 self.params)["load_balance"]
+                    return t[0], t[1], t[3], t[4], f"plan_{name}", False, True
+        # rung 6: the jnp reference route (serial, no kernels, monolithic)
+        if pol.reference_route:
+            t = run(self.dt, reference=True)
+            note("reference", t[4])
+            if hw.ok(t[4]):
+                return t[0], t[1], t[3], t[4], "reference", False, False
+        # rung 7: rollback to the last good checkpoint (once per step)
+        fault_step = self.step_count + 1
+        if (pol.rollback and self._ckpt is not None
+                and fault_step not in self._rolled_back_steps
+                and self._ckpt.latest_step() is not None):
+            self._rolled_back_steps.add(fault_step)
+            self.rollback()
+            return None, None, 0, first_health, "rollback", False, False
+        raise StepperFaultError(FaultReport(
+            step=fault_step, attempts=attempts,
+            plan=self.plan.describe(), level=self.params.level, dt=self.dt))
+
+    def _fallback_plans(self):
+        """Simpler-plan candidates in escalation order, current plan and
+        infeasible geometries excluded (a slab needs 2 leaf rows/device)."""
+        out = []
+        n = 1 << self.params.level
+        if n < 2 * self.nparts:
+            return out
+        counts = self.counts()
+        is_block = isinstance(self.plan, BlockPlan) and self.plan.grid[1] > 1
+        if is_block:
+            out.append(("slab", plan_from_counts(counts, self.params,
+                                                 self.nparts,
+                                                 method="model")))
+        uni = uniform_plan(self.params.level, self.nparts)
+        if uni != self.plan:
+            out.append(("uniform", uni))
+        return out
+
+    # -- stepping ------------------------------------------------------------
+
+    def step(self) -> StepRecord:
+        """Advance one RK2 step; time it; periodically re-plan.
+
+        Guarded steppers check the on-device health word and walk the
+        recovery ladder on any fault; a rollback record carries
+        ``recovered="rollback"`` and does NOT advance ``step_count``."""
+        t0 = time.perf_counter()
+        recovered, releveled, fb_replanned = "", False, False
+        tree, payload, ok, occ, health = self._run_rk2(
+            self.dt, faults=self._active_faults(0))
+        if self.guard:
+            if not hw.ok(health):
+                (tree, payload, occ, health, recovered, releveled,
+                 fb_replanned) = self._recover(health)
+                if tree is None:        # rolled back: step did not advance
+                    seconds = time.perf_counter() - t0
+                    rec = StepRecord(step=self.step_count, seconds=seconds,
+                                     load_balance=self._cached_lb,
+                                     replanned=False, releveled=False,
+                                     level=self.params.level,
+                                     recovered="rollback",
+                                     health=hw.pack(health))
+                    self.history.append(rec)
+                    return rec
+        elif not ok:
+            # legacy (unguarded) overflow path: the old tree is still
+            # intact — re-level on the host and redo the step safely.
+            releveled = True
+            self._relevel()
+            tree, payload, ok, occ, health = self._run_rk2(self.dt)
+            if not ok:
                 raise RuntimeError(
                     "leaf box overflow persists after re-leveling; "
                     "increase slots_headroom or lower target_per_box")
         # the timer covers everything the step actually cost, including a
-        # re-level + recompile when one happened
+        # re-level/recovery + recompile when one happened
         seconds = time.perf_counter() - t0
         self.tree, self.payload = tree, payload
         self.step_count += 1
-        replanned = False
+        if self.faults is not None:
+            # host-side fault site: corrupt this step's wall-clock sample
+            seconds *= self.faults.time_factor(self.step_count)
+        replanned = fb_replanned
         self._counts_cache = None       # tree advanced: drop stale counts
         if self.step_count % self.replan_every == 0:
             # occ comes off the step's own outputs (already on host after
             # block_until_ready) — the check itself syncs nothing extra
-            replanned = self.maybe_replan(occ=int(occ))
+            replanned = self.maybe_replan(occ=int(occ)) or replanned
         rec = StepRecord(step=self.step_count, seconds=seconds,
                          load_balance=self._cached_lb,
-                         replanned=replanned, releveled=releveled,
-                         level=self.params.level)
+                         replanned=replanned,
+                         releveled=releveled or bool(recovered == "relevel"),
+                         level=self.params.level, recovered=recovered,
+                         health=0 if health is None else hw.pack(health))
         self.history.append(rec)
+        if (self._ckpt is not None and self.checkpoint_every
+                and self.step_count % self.checkpoint_every == 0):
+            self.save_checkpoint()
         return rec
 
     def stats(self) -> dict:

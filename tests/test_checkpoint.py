@@ -1,0 +1,161 @@
+"""CheckpointManager with FMM pytrees + the stepper's elastic restore.
+
+Pins the crash-safety contract (a crash mid-save never corrupts the
+previous checkpoint: LATEST is written last, after the atomic directory
+rename), keep-last-k GC, complex/bool FMM array roundtrips, and
+``VortexStepper.from_checkpoint`` restoring tree/payload BIT-EXACT onto a
+different device count (the plan is rebuilt from the restored counts; the
+arrays are device-count independent).
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.core.stepper import VortexStepper
+from repro.core.vortex import lamb_oseen_particles
+
+
+def _fmm_trees(seed=0, n=8, s=4):
+    rng = np.random.default_rng(seed)
+    z = (rng.random((n, n, s)) + 1j * rng.random((n, n, s))).astype(
+        np.complex64)
+    q = (rng.standard_normal((n, n, s))
+         + 1j * rng.standard_normal((n, n, s))).astype(np.complex64)
+    mask = rng.random((n, n, s)) < 0.5
+    return {"tree": {"z": z, "q": q, "mask": mask},
+            "payload": {"r0": z * 2.0}}
+
+
+def _templates(trees):
+    import jax
+    return jax.tree_util.tree_map(np.zeros_like, trees)
+
+
+def test_fmm_pytree_roundtrip(tmp_path):
+    trees = _fmm_trees()
+    mgr = CheckpointManager(str(tmp_path), async_save=False)
+    mgr.save(5, trees, {"level": 3})
+    out, meta = mgr.restore(_templates(trees), step=5)
+    assert meta["step"] == 5 and meta["level"] == 3
+    np.testing.assert_array_equal(out["tree"]["z"], trees["tree"]["z"])
+    np.testing.assert_array_equal(out["tree"]["mask"], trees["tree"]["mask"])
+    np.testing.assert_array_equal(out["payload"]["r0"],
+                                  trees["payload"]["r0"])
+    assert out["tree"]["z"].dtype == np.complex64
+    assert mgr.load_meta(5)["level"] == 3
+    assert mgr.load_meta()["step"] == 5
+
+
+def test_crash_mid_save_leaves_latest_intact(tmp_path):
+    trees = _fmm_trees()
+    mgr = CheckpointManager(str(tmp_path), async_save=False)
+    mgr.save(1, trees, {"tag": "good"})
+
+    # simulate a crash mid-save of step 2: npz files written, but the
+    # process dies before the tmp-dir rename / LATEST update
+    import repro.checkpoint.manager as M
+    orig_rename = os.rename
+
+    def crash(src, dst):
+        raise RuntimeError("simulated crash before atomic rename")
+
+    os.rename = crash
+    try:
+        with pytest.raises(RuntimeError, match="simulated crash"):
+            mgr.save(2, _fmm_trees(seed=9), {"tag": "bad"})
+    finally:
+        os.rename = orig_rename
+
+    assert mgr.latest_step() == 1
+    assert mgr.all_steps() == [1]
+    out, meta = mgr.restore(_templates(trees))
+    assert meta["tag"] == "good"
+    np.testing.assert_array_equal(out["tree"]["z"], trees["tree"]["z"])
+    # a later successful save cleans up and moves LATEST forward
+    mgr.save(3, trees, {"tag": "next"})
+    assert mgr.latest_step() == 3
+
+
+def test_keep_last_k_gc(tmp_path):
+    trees = _fmm_trees()
+    mgr = CheckpointManager(str(tmp_path), keep=3, async_save=False)
+    for s in range(1, 7):
+        mgr.save(s, trees, None)
+    assert mgr.all_steps() == [4, 5, 6]
+    assert mgr.latest_step() == 6
+    out, meta = mgr.restore(_templates(trees), step=4)
+    assert meta["step"] == 4
+
+
+def test_stepper_checkpoint_cycle(tmp_path):
+    """Serial stepper: periodic snapshots land, rollback is bit-exact on
+    tree AND payload, and from_checkpoint resumes the identical state."""
+    pos, gamma, sigma = lamb_oseen_particles(24)
+    r0 = np.hypot(pos[:, 0] - 0.5, pos[:, 1] - 0.5)
+    st = VortexStepper(pos, gamma, sigma, p=6, dt=0.002,
+                       payload={"r0": r0 + 0j},
+                       checkpoint_dir=str(tmp_path), checkpoint_every=2)
+    for _ in range(4):
+        st.step()
+    st._ckpt.wait()
+    assert st._ckpt.all_steps() == [2, 4]
+    z4 = np.asarray(st.tree.z).copy()
+    p4 = np.asarray(st.payload["r0"]).copy()
+    st.step()
+    st.rollback()
+    assert st.step_count == 4
+    assert np.array_equal(np.asarray(st.tree.z), z4)
+    assert np.array_equal(np.asarray(st.payload["r0"]), p4)
+
+    st2 = VortexStepper.from_checkpoint(str(tmp_path))
+    assert st2.step_count == 4
+    assert st2.sigma == st.sigma and st2.dt == st.dt and st2.p == st.p
+    assert np.array_equal(np.asarray(st2.tree.z), z4)
+    assert np.array_equal(np.asarray(st2.payload["r0"]), p4)
+    st2.step()     # the restored stepper keeps stepping
+
+
+def test_elastic_restore_onto_different_device_count(tmp_path):
+    """A checkpoint written by a 1-device stepper restores bit-exact onto a
+    4-device mesh (and steps there); runs in a subprocess to force host
+    devices without polluting this process."""
+    body = textwrap.dedent(f"""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+        import numpy as np
+        import jax
+        from jax.sharding import Mesh
+        from repro.core.stepper import VortexStepper
+        from repro.core.vortex import lamb_oseen_particles
+
+        d = {str(tmp_path)!r}
+        pos, gamma, sigma = lamb_oseen_particles(56)
+        st = VortexStepper(pos, gamma, sigma, p=6, dt=0.002,
+                           target_per_box=3.0,
+                           checkpoint_dir=d, checkpoint_every=2)
+        st.step(); st.step()
+        st._ckpt.wait()
+        z2 = np.asarray(st.tree.z)
+
+        mesh = Mesh(np.array(jax.devices()), ("data",))
+        st4 = VortexStepper.from_checkpoint(d, mesh=mesh)
+        assert st4.nparts == 4
+        assert st4.step_count == 2
+        assert np.array_equal(np.asarray(st4.tree.z), z2), "not bit-exact"
+        assert st4.plan.nparts == 4
+        st4.step()
+        print("elastic ok")
+    """)
+    env = dict(os.environ,
+               PYTHONPATH=os.path.join(os.path.dirname(__file__), "..",
+                                       "src"))
+    env.pop("XLA_FLAGS", None)
+    r = subprocess.run([sys.executable, "-c", body], capture_output=True,
+                       text=True, timeout=900, env=env)
+    assert r.returncode == 0, f"\nSTDOUT:\n{r.stdout}\nSTDERR:\n{r.stderr}"
+    assert "elastic ok" in r.stdout

@@ -1,0 +1,208 @@
+"""Fault-injection drills: every injection site on 4 forced host devices.
+
+The acceptance criterion per site: the guarded stepper either RECOVERS —
+and its final state matches the uninjected run within f32 tolerance
+(bit-exact for plain-retry recoveries, which re-run the identical program
+from the intact pre-step tree) — or raises the typed
+:class:`StepperFaultError` carrying a structured :class:`FaultReport`.
+
+Each scenario runs in a subprocess (jax pins the host device count at
+first init; the rest of the suite needs exactly 1 device).
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+_PRELUDE = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    import numpy as np
+    import jax
+    from jax.sharding import Mesh
+    from repro.core.stepper import (RecoveryPolicy, StepperFaultError,
+                                    VortexStepper)
+    from repro.core.faults import FaultInjector, FaultSpec
+    from repro.core import health as hw
+
+    assert len(jax.devices()) == 4
+    mesh = Mesh(np.array(jax.devices()), ("data",))
+    rng = np.random.default_rng(1)
+    pos = 0.02 + 0.96 * rng.random((300, 2))     # every device band occupied
+    gamma = rng.standard_normal(300) * 0.1
+    KW = dict(sigma=0.02, p=6, dt=0.002, mesh=mesh)
+
+    def run(faults=None, steps=3, **extra):
+        st = VortexStepper(pos, gamma, faults=faults, **KW, **extra)
+        recs = [st.step() for _ in range(steps)]
+        return st, recs
+""")
+
+
+def _run(body, timeout=900):
+    env = dict(os.environ,
+               PYTHONPATH=os.path.join(os.path.dirname(__file__), "..",
+                                       "src"))
+    env.pop("XLA_FLAGS", None)
+    r = subprocess.run([sys.executable, "-c", _PRELUDE + textwrap.dedent(body)],
+                       capture_output=True, text=True, timeout=timeout,
+                       env=env)
+    assert r.returncode == 0, f"\nSTDOUT:\n{r.stdout}\nSTDERR:\n{r.stderr}"
+    return r.stdout
+
+
+def test_transient_faults_recover_bit_exact():
+    """Non-sticky faults fire only on attempt 0: the ladder's plain retry
+    re-runs the identical program from the intact pre-step tree, so the
+    recovered trajectory is BIT-EXACT vs the uninjected run."""
+    _run("""
+        st0, _ = run()
+        z0 = np.asarray(st0.tree.z)
+        for site, kw in [("halo_nan", {}), ("tile_corrupt", {}),
+                         ("teleport", dict(magnitude=0.6)),
+                         ("overflow", {})]:
+            st, recs = run(FaultInjector(FaultSpec(site, step=2, **kw)))
+            assert recs[1].recovered == "retry_1", (site, recs[1])
+            assert recs[1].health != 0, site     # adopted attempt's word...
+            assert hw.ok(hw.unpack(recs[1].health)), site  # ...is healthy
+            assert np.array_equal(np.asarray(st.tree.z), z0), site
+            assert recs[0].recovered == "" and recs[2].recovered == "", site
+        print("transient ok")
+    """)
+
+
+def test_sticky_teleport_recovers_via_domain_expansion():
+    """A sticky teleport whose (physical) magnitude fits a doubled root box
+    escalates past retry/half-dt/re-level to the domain-expansion rung."""
+    _run("""
+        st0, _ = run()
+        p0, g0 = st0.particles()
+        st, recs = run(FaultInjector(
+            FaultSpec("teleport", step=2, sticky=True, magnitude=0.6)))
+        assert recs[1].recovered == "expand_domain", recs[1]
+        assert st.domain.size >= 2.0, st.domain
+        # the injected shift is real physics from here on: positions differ
+        # from the uninjected run, but must be finite and inside the domain
+        p1, g1 = st.particles()
+        assert np.isfinite(p1).all()
+        u = st.domain.to_unit(p1)
+        assert (u >= 0).all() and (u <= 1).all()
+        np.testing.assert_allclose(np.sort(g1), np.sort(g0), rtol=1e-5)
+        print("expand ok")
+    """)
+
+
+def test_sticky_halo_nan_recovers_via_reference_route():
+    """A sticky halo fault poisons every sharded exchange; only the serial
+    jnp reference route (no exchange) escapes it.  The recovered state must
+    match the uninjected run within f32 tolerance."""
+    _run("""
+        st0, _ = run()
+        z0 = np.asarray(st0.tree.z)
+        pol = RecoveryPolicy(expand_domain=False)   # pin the rung
+        st, recs = run(FaultInjector(
+            FaultSpec("halo_nan", step=2, sticky=True)), policy=pol)
+        assert recs[1].recovered == "reference", recs[1]
+        za, zb = np.sort_complex(np.asarray(st.tree.z).ravel()), \
+            np.sort_complex(z0.ravel())
+        np.testing.assert_allclose(za, zb, atol=5e-5)
+        print("reference ok")
+    """)
+
+
+def test_grid_bound_halo_fault_recovers_via_plan_fallback():
+    """``only_grid`` pins the halo fault to the 2-D block exchange: the
+    plan-fallback rung adopts the 1-D slab plan and escapes it."""
+    _run("""
+        st, recs = run(FaultInjector(
+            FaultSpec("halo_nan", step=2, sticky=True, only_grid=(2, 2))),
+            plan_grid=(2, 2), target_per_box=3.0,
+            policy=RecoveryPolicy(expand_domain=False))
+        assert recs[1].recovered == "plan_slab", recs[1]
+        assert recs[1].replanned
+        from repro.core.plan import SlabPlan
+        assert isinstance(st.plan, SlabPlan) or st.plan.grid[1] == 1
+        # the adopted fallback sticks: later steps run it cleanly
+        assert recs[2].recovered == ""
+        print("fallback ok")
+    """)
+
+
+def test_unrecoverable_fault_raises_typed_error_with_report():
+    """A sticky overflow (every particle clumped into one leaf box) defeats
+    every compute rung; with no checkpoint to roll back to, the stepper
+    must raise the typed error with the structured ladder report."""
+    _run("""
+        st = VortexStepper(pos, gamma, faults=FaultInjector(
+            FaultSpec("overflow", step=2, sticky=True)), **KW)
+        st.step()
+        try:
+            st.step()
+        except StepperFaultError as e:
+            rep = e.report
+            assert rep.step == 2
+            rungs = [a["rung"] for a in rep.attempts]
+            assert rungs[0] == "step" and len(rungs) >= 3, rungs
+            assert all("health" in a for a in rep.attempts)
+            assert rep.attempts[0]["health"]["leaf_overflow"] == 1
+            assert "unrecoverable" in str(e)
+        else:
+            raise AssertionError("expected StepperFaultError")
+        # the pre-step state was never clobbered by the failed attempts
+        assert st.step_count == 1
+        print("typed error ok")
+    """)
+
+
+def test_rollback_restores_last_checkpoint_bit_exact():
+    """With every compute rung disabled, a sticky fault falls through to
+    the rollback rung: the stepper restores the last snapshot bit-exact
+    and does NOT advance; a second encounter of the same faulty step
+    raises instead of looping."""
+    _run("""
+        import tempfile
+        d = tempfile.mkdtemp()
+        pol = RecoveryPolicy(max_retries=0, halve_dt=False, relevel=False,
+                             expand_domain=False, plan_fallback=False,
+                             reference_route=False)
+        st = VortexStepper(pos, gamma, faults=FaultInjector(
+            FaultSpec("teleport", step=3, sticky=True, magnitude=2.0)),
+            policy=pol, checkpoint_dir=d, checkpoint_every=1, **KW)
+        st.step(); st.step()
+        st._ckpt.wait()
+        z2 = np.asarray(st.tree.z).copy()
+        rec = st.step()                      # faulty step -> rollback
+        assert rec.recovered == "rollback", rec
+        assert st.step_count == 2
+        assert np.array_equal(np.asarray(st.tree.z), z2)
+        try:
+            st.step()                        # same step, same sticky fault
+        except StepperFaultError as e:
+            assert e.report.step == 3
+        else:
+            raise AssertionError("expected StepperFaultError after rollback")
+        print("rollback ok")
+    """)
+
+
+def test_time_inflation_does_not_thrash_replanning():
+    """The host-side fault: one corrupted wall-clock sample.  The
+    median/clip filter keeps the measured-feedback loop stable — the
+    dynamic stepper replans identically with and without the inflated
+    sample."""
+    _run("""
+        from repro.core.stepper import host_wallclock_times, robust_wall
+        def plans(faults):
+            st, recs = run(faults, steps=8, dynamic=True, replan_every=2)
+            t = host_wallclock_times(st)
+            assert t is None or np.isfinite(t).all()
+            return [r.replanned for r in recs], st.plan
+        base_flags, base_plan = plans(None)
+        inf_flags, inf_plan = plans(FaultInjector(
+            FaultSpec("time_inflate", step=3, magnitude=50.0)))
+        assert inf_plan == base_plan, (base_plan, inf_plan)
+        # the filter itself: one 50x outlier moves the estimate < 2x
+        clean = [0.01, 0.011, 0.009, 0.0105]
+        assert robust_wall(clean + [0.5]) < 2 * robust_wall(clean)
+        print("time inflate ok")
+    """)

@@ -1,0 +1,177 @@
+"""On-device health word (core/health.py) + its driver integration.
+
+Pins the packed-word layout, the merge semantics (flags max, counts sum),
+the NaN/Inf and out-of-domain sentinels, the serial/sharded drivers'
+``with_health`` outputs, and the two zero-cost guarantees: disabled fault
+injection returns the SAME array object (no trace change) and the
+unguarded serial driver lowers with no finiteness sentinels at all.
+
+Also the overflow-bugfix grep-guard: ``quadtree.rebuild_tree`` silently
+drops surplus particles when a leaf overflows, so EVERY call site in src/
+must consume its ``ok`` flag (and the guarded stepper folds the dropped
+count into the health word).
+"""
+import pathlib
+import re
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import health as hw
+from repro.core.faults import (FaultInjector, FaultSpec, corrupt_halo,
+                               corrupt_positions, corrupt_tile)
+from repro.core.fmm import fmm_velocity
+from repro.core.quadtree import Domain, build_tree
+from repro.core.stepper import robust_wall
+from repro.core.vortex import lamb_oseen_particles
+
+SRC = pathlib.Path(__file__).resolve().parents[1] / "src"
+
+
+# -- word layout / algebra ---------------------------------------------------
+
+
+def test_pack_unpack_roundtrip():
+    vec = np.zeros(hw.N_FIELDS, np.int32)
+    vec[hw.F_VEL] = 1
+    vec[hw.F_HALO] = 1
+    vec[hw.F_OOD] = 37
+    vec[hw.F_DROPPED] = 5
+    vec[hw.F_OCC] = 19
+    word = hw.pack(vec)
+    assert isinstance(word, int)
+    back = hw.unpack(word)
+    np.testing.assert_array_equal(back, vec)
+    assert not hw.ok(vec)
+    assert hw.ok(hw.unpack(hw.pack(np.zeros(hw.N_FIELDS, np.int32))))
+
+
+def test_pack_saturates_counts():
+    vec = np.zeros(hw.N_FIELDS, np.int32)
+    vec[hw.F_OOD] = 1 << 20        # far beyond the 12-bit OOD field
+    vec[hw.F_DROPPED] = 10_000     # beyond the 8-bit dropped field
+    back = hw.unpack(hw.pack(vec))
+    assert back[hw.F_OOD] == (1 << 12) - 1
+    assert back[hw.F_DROPPED] == (1 << 8) - 1
+    assert not hw.ok(back)
+
+
+def test_describe_names_every_field():
+    vec = np.arange(hw.N_FIELDS, dtype=np.int32)
+    d = hw.describe(vec)
+    assert len(d) >= hw.N_FIELDS - 1          # spare field may be hidden
+    assert d["out_of_domain"] == hw.F_OOD
+    assert d["max_occupancy"] == hw.F_OCC
+
+
+def test_merge_flags_max_counts_sum():
+    a = np.zeros(hw.N_FIELDS, np.int32)
+    b = np.zeros(hw.N_FIELDS, np.int32)
+    a[hw.F_VEL], b[hw.F_VEL] = 1, 1
+    a[hw.F_OOD], b[hw.F_OOD] = 3, 4
+    a[hw.F_OCC], b[hw.F_OCC] = 10, 7
+    m = np.asarray(hw.merge(jnp.asarray(a), jnp.asarray(b)))
+    assert m[hw.F_VEL] == 1          # flag: max, not sum
+    assert m[hw.F_OOD] == 7          # count: sum across substeps/devices
+    assert m[hw.F_OCC] == 10         # gauge: max
+
+    stacked = jnp.stack([jnp.asarray(a), jnp.asarray(b)])
+    g = np.asarray(hw.device_combine(stacked))
+    np.testing.assert_array_equal(g, m)
+
+
+def test_nonfinite_and_ood_sentinels():
+    z = jnp.asarray([[0.2 + 0.3j, jnp.nan + 0j], [0.9 + 0.9j, 5.0 + 0.5j]])
+    mask = jnp.asarray([[True, False], [True, True]])
+    assert int(hw.nonfinite(z)) == 1
+    assert int(hw.nonfinite(z, mask)) == 0       # the NaN slot is dead
+    assert int(hw.nonfinite(jnp.asarray([1.0, 2.0]))) == 0
+    # out-of-domain counts LIVE particles outside [0, 1)^2 only
+    assert int(hw.out_of_domain_count(z, mask)) == 1
+    assert int(hw.out_of_domain_count(z, jnp.zeros_like(mask))) == 0
+
+
+def test_robust_wall_rejects_outliers():
+    assert robust_wall([1.0, 1.1, 0.9, 100.0]) == pytest.approx(1.0, rel=0.2)
+    assert robust_wall([1.0, 1.1, 0.9, 1e-9]) == pytest.approx(1.0, rel=0.2)
+    assert robust_wall([2.0]) == 2.0
+
+
+# -- driver integration ------------------------------------------------------
+
+
+def test_serial_fmm_with_health():
+    pos, gamma, sigma = lamb_oseen_particles(40)
+    tree, _ = build_tree(pos, gamma, level=4, sigma=sigma)
+    w_plain = fmm_velocity(tree, p=8)
+    w, h = fmm_velocity(tree, p=8, with_health=True)
+    np.testing.assert_array_equal(np.asarray(w), np.asarray(w_plain))
+    assert hw.ok(np.asarray(h))
+    # poison one live particle position -> velocity + coefficients flagged
+    bad_z = tree.z.reshape(-1).at[np.flatnonzero(
+        np.asarray(tree.mask).reshape(-1))[0]].set(jnp.nan + 0j)
+    bad = tree.__class__(z=bad_z.reshape(tree.z.shape), q=tree.q,
+                         mask=tree.mask, level=tree.level, sigma=tree.sigma)
+    _, h_bad = fmm_velocity(bad, p=8, with_health=True)
+    h_bad = np.asarray(h_bad)
+    assert h_bad[hw.F_VEL] == 1
+    assert not hw.ok(h_bad)
+
+
+def test_disabled_injection_is_identity():
+    x = jnp.ones((4, 4), jnp.complex64)
+    m = jnp.ones((4, 4), bool)
+    assert corrupt_tile(x, (), 0) is x
+    assert corrupt_halo(x, (), 0, (4, 1)) is x
+    assert corrupt_positions(x, m, ()) is x
+    # an injector with faults at OTHER steps contributes nothing either
+    inj = FaultInjector(FaultSpec("halo_nan", step=7))
+    assert inj.active(3) == ()
+    assert inj.time_factor(3) == 1.0
+
+
+def test_unguarded_serial_driver_lowers_without_sentinels():
+    pos, gamma, sigma = lamb_oseen_particles(24)
+    tree, _ = build_tree(pos, gamma, level=3, sigma=sigma)
+    hlo = jax.jit(lambda t: fmm_velocity(t, p=6)).lower(tree).as_text()
+    assert "is_finite" not in hlo
+
+
+# -- the rebuild_tree overflow-drop grep-guard -------------------------------
+
+
+def test_every_rebuild_tree_call_site_checks_ok():
+    """``rebuild_tree`` returns ``(tree, aux, ok)`` and silently drops
+    overflow particles; a call site that ignores ``ok`` loses particles
+    without any signal.  Every call in src/ must bind all three outputs
+    with a real name for the flag (no ``_``)."""
+    pattern = re.compile(r"^\s*(?P<lhs>[^=#]+)=\s*rebuild_tree\(",
+                         re.MULTILINE)
+    sites = []
+    for path in SRC.rglob("*.py"):
+        text = path.read_text()
+        for m in pattern.finditer(text):
+            lhs = [x.strip() for x in m.group("lhs").split(",")]
+            sites.append((path.name, m.group(0).strip(), lhs))
+    assert sites, "expected at least one rebuild_tree call site"
+    for name, line, lhs in sites:
+        assert len(lhs) == 3, (name, line, "must unpack (tree, aux, ok)")
+        assert lhs[-1] not in ("_", "__"), \
+            (name, line, "the ok flag must not be discarded")
+
+
+def test_domain_roundtrip_and_covering():
+    d = Domain(origin=(-1.5, 2.0), size=4.0)
+    pos = np.array([[0.0, 3.0], [2.0, 5.5]])
+    np.testing.assert_allclose(d.from_unit(d.to_unit(pos)), pos, atol=1e-12)
+    assert Domain().is_identity
+    got = Domain.covering(pos, margin=0.25)
+    u = got.to_unit(pos)
+    assert (u > 0).all() and (u < 1).all()
+    # covering(at_least=...) never orphans the old root box
+    grown = Domain.covering(pos, margin=0.25, at_least=d)
+    for corner in ([-1.5, 2.0], [2.5, 6.0]):
+        uc = grown.to_unit(np.asarray([corner]))
+        assert (uc >= 0).all() and (uc <= 1).all()
