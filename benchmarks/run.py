@@ -462,6 +462,110 @@ def bench_overlap(rows, quick=False):
             rows.append((name, 0.0, f"failed:{type(e).__name__}:{detail}"))
 
 
+def bench_pipeline(rows, quick=False):
+    """Substep-pipelined asynchrony vs the serial issue order (DESIGN.md
+    §12) on 4 forced host devices (subprocess: jax locks the device count
+    at first init).
+
+    ``pipeline_on`` / ``pipeline_off`` time the full RK2 step with the
+    cross-substep P2P prefetch + gather/root-tree overlap vs the
+    pre-pipeline ordering (interleaved reps, min per mode; paired in one
+    process).  Host CPU collectives cannot actually overlap compute, so
+    the pin is the one that transfers to real backends: pipelining must
+    not LOSE (<= 1.10x, jitter allowance), while the issue-order win is
+    pinned structurally in ``gather_overlap``.
+
+    ``gather_overlap`` parses both lowered StableHLO modules (trace order
+    is preserved) and reports the cut-level all_gather's *issue depth* —
+    dot_generals between issue and first consumption.  Pins: depth must
+    GROW under pipelining (that window is what the GPU latency-hiding
+    scheduler fills), and the collective_permute count must be EQUAL
+    across modes (the prefetch replaces the exchange, never duplicates
+    it).  Violations mark the row failed:, CI-fatal.
+    """
+    ndev = 4
+    m_side, level, p = (80, 5, 8) if quick else (160, 6, 12)
+    body = textwrap.dedent(f"""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count={ndev}"
+        import time
+        import numpy as np
+        import jax
+        from jax.sharding import Mesh
+        from repro.core import parallel_fmm as pf
+        from repro.core.cost_model import ModelParams
+        from repro.core.plan import plan_from_counts
+        from repro.core.quadtree import build_tree
+        from repro.core.stepper import rk2_step
+        from repro.core.vortex import lamb_oseen_particles
+        from repro.launch.hlo_analysis import collective_issue_depths
+
+        mesh = Mesh(np.array(jax.devices()[:{ndev}]), ("data",))
+        pos, gamma, sigma = lamb_oseen_particles({m_side})
+        tree, index = build_tree(pos, gamma, level={level}, sigma=sigma)
+        params = ModelParams(level={level}, cut=4, p={p}, slots=tree.slots)
+        plan = plan_from_counts(index.counts, params, {ndev}, method="model")
+
+        fns = {{}}
+        for pl in (True, False):
+            fn = (lambda pl=pl: jax.block_until_ready(rk2_step(
+                tree, 1e-4, p={p}, mesh=mesh, plan=plan,
+                pipeline=pl)[0].z))
+            fn()                               # compile + warm
+            fns[pl] = fn
+        t = {{True: [], False: []}}
+        for _ in range(10):                    # interleaved, paired reps
+            for pl in (False, True):
+                t0 = time.perf_counter()
+                fns[pl]()
+                t[pl].append(time.perf_counter() - t0)
+        on, off = min(t[True]) * 1e6, min(t[False]) * 1e6
+        tag = "" if on <= 1.10 * off else "failed:pipeline_slower_"
+        print(f"ROW pipeline_on {{on:.1f}} {{tag}}"
+              f"vs_serial_order={{off / on:.2f}}x_rows="
+              + "/".join(map(str, plan.rows)))
+        print(f"ROW pipeline_off {{off:.1f}} serial_issue_order_baseline")
+
+        # structural pin: issue depth of the cut-level all_gather, and
+        # equal permute counts (prefetch replaces, never duplicates)
+        depths = {{}}
+        for pl in (True, False):
+            text = jax.jit(lambda tr: pf.parallel_fmm_evaluate(
+                tr, {p}, mesh=mesh, plan=plan,
+                pipeline=pl)).lower(tree).as_text()
+            depths[pl] = collective_issue_depths(text)
+        ag_on = max(depths[True]["all_gather"], default=0)
+        ag_off = max(depths[False]["all_gather"], default=0)
+        np_on = len(depths[True]["collective_permute"])
+        np_off = len(depths[False]["collective_permute"])
+        ok = ag_on > ag_off and np_on == np_off
+        tag = "" if ok else "failed:issue_order_"
+        print(f"ROW gather_overlap {{float(ag_on):.1f}} {{tag}}"
+              f"gather_issue_depth={{ag_on}}_was={{ag_off}}"
+              f"_permutes={{np_on}}_was={{np_off}}")
+    """)
+    env = dict(os.environ)
+    src_dir = os.path.abspath(os.path.join(os.path.dirname(__file__), "..",
+                                           "src"))
+    old_pp = env.get("PYTHONPATH", "")
+    env["PYTHONPATH"] = src_dir + (os.pathsep + old_pp if old_pp else "")
+    names = ("pipeline_on", "pipeline_off", "gather_overlap")
+    try:
+        proc = subprocess.run([sys.executable, "-c", body],
+                              capture_output=True, text=True, env=env,
+                              timeout=1800)
+        got = [l.split(maxsplit=3) for l in proc.stdout.splitlines()
+               if l.startswith("ROW")]
+        if proc.returncode != 0 or len(got) != len(names):
+            raise RuntimeError(proc.stderr[-300:])
+        for _, name, us, derived in got:
+            rows.append((name, float(us), derived))
+    except Exception as e:  # report, never abort the whole harness
+        detail = " ".join(str(e).split())[-160:].replace(",", ";")
+        for name in names:
+            rows.append((name, 0.0, f"failed:{type(e).__name__}:{detail}"))
+
+
 def bench_guarded_step(rows, quick=False):
     """Guarded vs unguarded RK2 step on 4 forced host devices.
 
@@ -652,7 +756,8 @@ def main() -> None:
     for bench in (bench_fig6_stage_timings, bench_fig7_9_scaling,
                   bench_table12_memory, bench_kernels, bench_m2l_staging_bytes,
                   bench_parallel_multidevice, bench_plan_execution,
-                  bench_overlap, bench_guarded_step, bench_plan_halo,
+                  bench_overlap, bench_pipeline, bench_guarded_step,
+                  bench_plan_halo,
                   bench_equations,
                   bench_moe_placement):
         bench(rows, quick=quick)

@@ -50,6 +50,10 @@ def main():
     ap.add_argument("--replan-every", type=int, default=4)
     ap.add_argument("--no-overlap", action="store_true",
                     help="disable interior/rim comm-compute overlap")
+    ap.add_argument("--no-pipeline", action="store_true",
+                    help="disable substep pipelining (cross-substep P2P "
+                         "prefetch + gather/root-tree overlap); the serial "
+                         "issue order of the pre-pipeline driver")
     ap.add_argument("--use-kernels", action="store_true")
     ap.add_argument("--debug-nans", action="store_true",
                     help="jax_debug_nans: crash on the first NaN any jitted "
@@ -114,7 +118,8 @@ def main():
         mesh=mesh, use_kernels=args.use_kernels,
         plan_method="uniform" if args.plan == "uniform" else "model",
         dynamic=(args.plan == "dynamic"), plan_grid=plan_grid,
-        overlap=not args.no_overlap, replan_every=args.replan_every,
+        overlap=not args.no_overlap, pipeline=not args.no_pipeline,
+        replan_every=args.replan_every,
         guard=not args.no_guard,
         checkpoint_every=args.checkpoint_every)
     if args.resume:

@@ -19,17 +19,29 @@ def jax_enable_x64(use_x64: bool) -> None:
     jax.config.update("jax_enable_x64", bool(use_x64))
 
 
+# GPU flags appended (idempotently) by set_platform.  The async-collective
+# pair makes the substep pipeline's issue-before-consume ordering
+# (DESIGN.md §12) an actual overlap on GPU: collectives run on their own
+# high-priority stream while the latency-hiding scheduler slots the
+# independent compute between issue and first use — without them the
+# reordered HLO still executes serially on one stream.
+_GPU_FLAGS = (
+    "--xla_gpu_triton_gemm_any=True",
+    "--xla_gpu_enable_latency_hiding_scheduler=true",
+    "--xla_gpu_enable_async_collectives=true",
+    "--xla_gpu_enable_highest_priority_async_stream=true",
+)
+
+
 def set_platform(platform: str = "cpu") -> None:
     """Pin the backend to 'cpu', 'gpu', or 'tpu'."""
     import jax
     jax.config.update("jax_platform_name", platform)
     if platform == "gpu":
         # https://jax.readthedocs.io/en/latest/gpu_performance_tips.html
-        os.environ["XLA_FLAGS"] = (
-            os.environ.get("XLA_FLAGS", "")
-            + " --xla_gpu_triton_gemm_any=True"
-            + " --xla_gpu_enable_latency_hiding_scheduler=true"
-        ).strip()
+        cur = os.environ.get("XLA_FLAGS", "")
+        add = [f for f in _GPU_FLAGS if f not in cur.split()]
+        os.environ["XLA_FLAGS"] = " ".join([cur] + add).strip()
 
 
 def set_cpu_cores(n: int) -> None:

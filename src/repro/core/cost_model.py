@@ -184,7 +184,7 @@ def comm_root_tree(params: ModelParams) -> float:
 
 
 def comm_overlap_effective(comm_bytes, hide_work, params: ModelParams,
-                           overlap: bool = True):
+                           overlap: bool = True, extra_hide=0.0):
     """Serial-residue cost of an overlapped halo exchange (DESIGN.md §9).
 
     The paper's running-time model (Eqs 16-20) prices communication as a
@@ -194,12 +194,52 @@ def comm_overlap_effective(comm_bytes, hide_work, params: ModelParams,
     ``hide_work`` is the modeled interior work available to hide behind
     (same units as ``work_leaf`` / ``work_subtree``); without overlap the
     full serial price is returned.  Accepts scalars or per-device arrays.
+
+    ``extra_hide`` is the substep pipeline's ENLARGED hiding budget
+    (DESIGN.md §12): additional flops traced between a collective's issue
+    and its first consumption — the replicated root-tree sweep the
+    pipelined driver defers past the sharded M2L work
+    (:func:`work_root_tree`) and the cross-substep window the prefetched
+    P2P exchange flies through (:func:`work_upward`).  It simply joins
+    ``hide_work`` under the same max(0, ...) residue, so more hiding can
+    never price WORSE than less.  Ignored when ``overlap`` is False (the
+    serial ordering has nothing in flight).
     """
     t_comm = params.t_byte * np.asarray(comm_bytes, dtype=np.float64)
     if not overlap:
         return t_comm
-    return np.maximum(0.0, t_comm - params.t_flop *
-                      np.asarray(hide_work, dtype=np.float64))
+    hide = (np.asarray(hide_work, dtype=np.float64)
+            + np.asarray(extra_hide, dtype=np.float64))
+    return np.maximum(0.0, t_comm - params.t_flop * hide)
+
+
+def work_root_tree(params: ModelParams) -> float:
+    """Flops of the replicated root-tree sweep (levels 2..k M2L/L2L plus
+    the below-cut M2M chain), paid identically on every device.
+
+    Under the pipelined driver (DESIGN.md §12) this compute runs only at
+    the cut-level all_gather's first consumption point — i.e. AFTER all
+    sharded-level M2L work — so it is hiding budget for the per-level halo
+    exchanges still in flight, on top of the interior extents.
+    """
+    k, p = params.cut, params.p
+    boxes = sum(4 ** l for l in range(2, k + 1))
+    return float(boxes * work_nonleaf(p))
+
+
+def work_upward(params: ModelParams, leaf_boxes) -> np.ndarray:
+    """P2M + subtree M2M flops for ``leaf_boxes`` local leaf boxes — the
+    substep k+1 compute available to hide a CROSS-substep prefetched P2P
+    exchange (DESIGN.md §12): the stepper issues the next substep's packed
+    exchange right after rebinning, and the upward sweep of the next
+    evaluation runs before the exchanged rim is first read.  Dense layout
+    pays every slot, so the P2M term scales with ``params.slots``.
+    """
+    lb = np.asarray(leaf_boxes, dtype=np.float64)
+    p2m = lb * params.slots * 2.0 * params.p
+    # subtree M2M boxes above the leaves: sum_{j>=1} 4^-j ~ 1/3 of leaves
+    m2m = (lb / 3.0) * params.p * params.p
+    return p2m + m2m
 
 
 # ---------------------------------------------------------------------------

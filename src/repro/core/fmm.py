@@ -377,7 +377,8 @@ def fmm_velocity_singular(tree: Tree, p: int) -> jnp.ndarray:
 
 
 def flops_estimate(tree_level: int, slots: int, p: int, eq=None,
-                   grid: tuple[int, int] | None = None) -> dict:
+                   grid: tuple[int, int] | None = None,
+                   cut: int | None = None) -> dict:
     """Rough FLOP census per stage (used by benchmarks & cost-model checks).
 
     The M2L term counts 27 (p x p) apply-accumulates per box — and since
@@ -398,6 +399,16 @@ def flops_estimate(tree_level: int, slots: int, p: int, eq=None,
     ``grid=(Pr, Pc)`` device grid — not the three unfused (z, q, mask)
     rounds the pre-PR-4 census priced.  ``grid=None`` means serial (zero
     collectives).
+
+    Since the substep pipeline (DESIGN.md §12) the census also reports
+    the overlap windows the pipelined issue order opens: ``cut`` is the
+    gather cut level (``plan.level - plan.sharded_depth()``; default 2),
+    ``gather_overlap_flops`` is the sharded M2L work issued between the
+    cut-level all_gather and its first consumption (the root-tree
+    sweep), and ``p2p_prefetch_rounds`` counts packed exchange rounds
+    issued a substep ahead of their consumer (1 per RK2 step when
+    sharded, 0 serial).  These are windows, not extra work — they are
+    NOT summed into ``total``.
     """
     eq = eqs.get_equation(eq)
     L, s, C = tree_level, slots, eq.nout
@@ -421,4 +432,10 @@ def flops_estimate(tree_level: int, slots: int, p: int, eq=None,
     stages["p2p_exchange_collectives"] = float(collectives)
     n = 1 << L
     stages["p2p_exchange_bytes"] = float(collectives * n * planes * s * 4)
+    if cut is None:
+        cut = min(2, L)
+    stages["gather_overlap_flops"] = (
+        0.0 if grid is None else
+        sum(4 ** l for l in range(cut + 1, L + 1)) * 27 * p * p * cmul)
+    stages["p2p_prefetch_rounds"] = 0.0 if grid is None else 1.0
     return stages

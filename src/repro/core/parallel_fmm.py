@@ -46,6 +46,15 @@ the two orderings share the same slab implementations and agree to f32
 roundoff.  ``plan.halo_volume`` prices the rim recompute and
 ``plan.plan_comm_cost`` the overlap-aware serial comm residue.
 
+Substep pipelining (DESIGN.md §12) extends the frontier further:
+``pipeline=True`` defers the cut-level all_gather's first consumption past
+all sharded-level M2L compute (the gather hides behind the downward sweep
+instead of serializing in front of the root tree), and
+``parallel_fmm_p2p_prefetch`` lets the RK2 stepper issue the NEXT
+substep's packed P2P exchange while the current substep's trailing work
+finishes — the cross-substep double buffer, consumed via the
+``p2p_halo`` argument.
+
 M2L and P2P themselves are the SAME slab implementations the serial driver
 uses (core/fmm.py: ``m2l_slab_fn`` / ``p2p_slab_fn``, column halos handled
 by the shared ``expansions.m2l_slab_stack`` geometry); this module only
@@ -105,15 +114,22 @@ def _tile_halo(x: jnp.ndarray, width: int, rows_valid, cols_valid,
     Domain-edge tiles receive zeros (consistent with the serial zero
     padding).  Devices are laid out ``d = i * Pc + j`` on the 1-D mesh
     axis; all four exchanges are single-hop ``ppermute``.
+
+    A single-rank axis is degenerate: its ghost strips are structurally
+    zero, so no collective is issued for it — and when the COLUMN axis is
+    degenerate the row strips are shipped at raw width ``cmax`` instead of
+    the column-extended ``cmax + 2w``, since the 2w extra columns would
+    carry known zeros.  A ``Pr x 1`` slab therefore pays exactly one
+    axis's ppermute round at minimal width (pinned by HLO-shape tests);
+    the exchanged values are identical either way.
     """
     Pr, Pc = grid
     w = width
     rmax, cmax = x.shape[0], x.shape[1]
     trail = x.shape[2:]
+    zi = (0,) * len(trail)
     # -- phase 1: columns (east/west neighbors own my exact row range) -----
-    if Pc == 1:
-        recv_l = recv_r = jnp.zeros((rmax, w) + trail, x.dtype)
-    else:
+    if Pc > 1:
         right_edge = jax.lax.dynamic_slice_in_dim(x, cols_valid - w, w, 1)
         left_edge = x[:, :w]
         # my right edge -> east neighbor's left halo, and vice versa
@@ -123,24 +139,26 @@ def _tile_halo(x: jnp.ndarray, width: int, rows_valid, cols_valid,
         recv_r = jax.lax.ppermute(left_edge, axis_name,
                                   [(i * Pc + j, i * Pc + j - 1)
                                    for i in range(Pr) for j in range(1, Pc)])
-    xc = jnp.zeros((rmax, cmax + 2 * w) + trail, x.dtype)
-    xc = jax.lax.dynamic_update_slice_in_dim(xc, x, w, 1)
-    xc = jax.lax.dynamic_update_slice_in_dim(xc, recv_l, 0, 1)
-    xc = jax.lax.dynamic_update_slice_in_dim(xc, recv_r, w + cols_valid, 1)
-    # -- phase 2: rows of the column-extended strips (corners ride along) --
-    if Pr == 1:
-        recv_t = recv_b = jnp.zeros((w, cmax + 2 * w) + trail, x.dtype)
+        xc = jnp.zeros((rmax, cmax + 2 * w) + trail, x.dtype)
+        xc = jax.lax.dynamic_update_slice_in_dim(xc, x, w, 1)
+        xc = jax.lax.dynamic_update_slice_in_dim(xc, recv_l, 0, 1)
+        xc = jax.lax.dynamic_update_slice_in_dim(xc, recv_r, w + cols_valid, 1)
+        c0 = 0
     else:
+        xc, c0 = x, w          # raw-width strips, placed at column offset w
+    # -- phase 2: rows of the column-extended strips (corners ride along) --
+    buf = jnp.zeros((rmax + 2 * w, cmax + 2 * w) + trail, x.dtype)
+    buf = jax.lax.dynamic_update_slice(buf, xc, (w, c0) + zi)
+    if Pr > 1:
         bot_edge = jax.lax.dynamic_slice_in_dim(xc, rows_valid - w, w, 0)
         top_edge = xc[:w]
         recv_t = jax.lax.ppermute(bot_edge, axis_name,
                                   [(d, d + Pc) for d in range((Pr - 1) * Pc)])
         recv_b = jax.lax.ppermute(top_edge, axis_name,
                                   [(d, d - Pc) for d in range(Pc, Pr * Pc)])
-    buf = jnp.zeros((rmax + 2 * w, cmax + 2 * w) + trail, x.dtype)
-    buf = jax.lax.dynamic_update_slice_in_dim(buf, xc, w, 0)
-    buf = jax.lax.dynamic_update_slice_in_dim(buf, recv_t, 0, 0)
-    buf = jax.lax.dynamic_update_slice_in_dim(buf, recv_b, w + rows_valid, 0)
+        buf = jax.lax.dynamic_update_slice(buf, recv_t, (0, c0) + zi)
+        buf = jax.lax.dynamic_update_slice(buf, recv_b,
+                                           (w + rows_valid, c0) + zi)
     return buf
 
 
@@ -171,9 +189,10 @@ def _unpack_particles(buf: jnp.ndarray, dtype, q_real: bool = False):
     return z, q, m
 
 
-def _parallel_fmm_body(z, q, mask, *targets, plan: BlockPlan, l_cut: int,
+def _parallel_fmm_body(z, q, mask, *extra, plan: BlockPlan, l_cut: int,
                        p: int, sigma, axis_name: str, use_kernels: bool,
-                       overlap: bool, eq, with_health: bool = False,
+                       overlap: bool, eq, pipeline: bool = False,
+                       prefetched: bool = False, with_health: bool = False,
                        faults: tuple = ()):
     """Runs on each device over its padded (rows_max, cols_max, s) tile.
 
@@ -188,13 +207,33 @@ def _parallel_fmm_body(z, q, mask, *targets, plan: BlockPlan, l_cut: int,
     model, Eqs 16-20).  Both orderings share the identical slab
     implementations and agree to f32 roundoff.
 
+    ``pipeline=True`` additionally defers the first CONSUMPTION of the
+    cut-level ``all_gather`` (DESIGN.md §12): every sharded level's M2L
+    output is computed right after the gather is issued — it depends only
+    on local MEs and the per-level exchanges — so the gather's flight time
+    hides behind the bulk of the downward sweep instead of serializing in
+    front of the replicated root tree; the root-tree sweep then runs at
+    the gathered buffer's first use and the precomputed M2L outputs fold
+    into the L2L chain unchanged (same adds, same order: the two orderings
+    trace the same ops).  ``pipeline=False`` traces exactly the pre-§12
+    program.
+
+    ``prefetched=True`` means the LAST positional argument is the packed
+    P2P halo buffer already exchanged by
+    :func:`parallel_fmm_p2p_prefetch` (the cross-substep double buffer);
+    the body then skips its own exchange round but still applies fault
+    injection and the health sentinel to the buffer, so the guarded paths
+    see identical data either way.
+
     Everything kernel-specific — charge map, translation operators, packed
     P2P payload width, L2P modes, output arity — comes from the equation
     spec ``eq``; ``targets``, when present, is the ``(z_t, mask_t)`` pair
     of a passive target tile evaluated against the sources' expansions and
     near field (same plan, same halos).
     """
-    zt, mt = targets if targets else (None, None)
+    extra = list(extra)
+    p2p_pre = extra.pop() if prefetched else None
+    zt, mt = extra if extra else (None, None)
     L = plan.level
     Pr, Pc = plan.grid
     rows_max, cols_max = plan.rows_max, plan.cols_max
@@ -226,9 +265,14 @@ def _parallel_fmm_body(z, q, mask, *targets, plan: BlockPlan, l_cut: int,
     # Issued first under ``overlap`` so the collective is in flight through
     # the entire upward sweep; only the rim strips of the near field read
     # it.  The payload width is spec-dependent (real-charge equations drop
-    # the Im q plane); targets are tile-local and exchange nothing.
-    p2p_buf = halo(_pack_particles(z, q, mask, eq.q_is_real), 1,
-                   my_rows, my_cols)
+    # the Im q plane); targets are tile-local and exchange nothing.  A
+    # prefetched buffer (the cross-substep double buffer, DESIGN.md §12)
+    # replaces the exchange but not the fault/health plumbing downstream.
+    if p2p_pre is not None:
+        p2p_buf = p2p_pre
+    else:
+        p2p_buf = halo(_pack_particles(z, q, mask, eq.q_is_real), 1,
+                       my_rows, my_cols)
     p2p_buf = _faults.corrupt_halo(p2p_buf, faults, di, (Pr, Pc))
     halo_bad = hw.nonfinite(p2p_buf) if with_health else None
     z_buf, q_buf, m_buf = _unpack_particles(p2p_buf, dtype, eq.q_is_real)
@@ -263,6 +307,30 @@ def _parallel_fmm_body(z, q, mask, *targets, plan: BlockPlan, l_cut: int,
     # unequal tiles are reassembled by the plan's static 2-D owner maps.
     cut_shift = L - l_cut
     gathered = jax.lax.all_gather(me[l_cut], axis_name, axis=0, tiled=False)
+
+    def sharded_m2l(lv, bad):
+        """One sharded level's M2L: interior+rim under ``overlap``, else the
+        monolithic exchange-then-slab (local MEs only — no gather input)."""
+        shift = L - lv
+        rv, cv = my_rows >> shift, my_cols >> shift
+        if overlap:
+            return fmm.m2l_tile_overlapped(m2l_slab, me[lv], me_bufs[lv],
+                                           lv, rv, cv), bad
+        me_buf = halo(me[lv], ex.M2L_HALO, rv, cv)
+        if with_health:
+            bad = jnp.maximum(bad, hw.nonfinite(me_buf))
+        return m2l_slab(me_buf, lv, col_halo=ex.M2L_HALO), bad
+
+    # pipeline (DESIGN.md §12): consume NOTHING from the gather yet — every
+    # sharded level's M2L reads only local MEs and the per-level exchanges,
+    # so this bulk compute hides the all_gather's flight time.  The outputs
+    # fold into the L2L chain below with the same adds in the same order.
+    le_m2l: dict[int, jnp.ndarray] = {}
+    if pipeline:
+        for lv in range(l_cut + 1, L + 1):
+            le_m2l[lv], halo_bad = sharded_m2l(lv, halo_bad)
+
+    # first consumption of the gathered buffer: the replicated root tree
     owner, loc_r, loc_c = plan.tile_maps(cut_shift)
     me_cut_full = gathered[jnp.asarray(owner), jnp.asarray(loc_r),
                            jnp.asarray(loc_c)]
@@ -297,16 +365,10 @@ def _parallel_fmm_body(z, q, mask, *targets, plan: BlockPlan, l_cut: int,
     if L > l_cut:
         le_prev = slice_tile(le_rep[l_cut], cut_shift)
     for lv in range(l_cut + 1, L + 1):
-        shift = L - lv
-        rv, cv = my_rows >> shift, my_cols >> shift
-        if overlap:
-            le_lv = fmm.m2l_tile_overlapped(m2l_slab, me[lv], me_bufs[lv],
-                                            lv, rv, cv)
+        if pipeline:
+            le_lv = le_m2l[lv]
         else:
-            me_buf = halo(me[lv], ex.M2L_HALO, rv, cv)
-            if with_health:
-                halo_bad = jnp.maximum(halo_bad, hw.nonfinite(me_buf))
-            le_lv = m2l_slab(me_buf, lv, col_halo=ex.M2L_HALO)
+            le_lv, halo_bad = sharded_m2l(lv, halo_bad)
         le_lv = le_lv + ex.l2l(le_prev, p)
         le_prev = le_lv
     le_leaf = le_prev if L > l_cut else slice_tile(le_rep[L], 0)
@@ -341,7 +403,7 @@ def _parallel_fmm_body(z, q, mask, *targets, plan: BlockPlan, l_cut: int,
 @functools.partial(jax.jit, static_argnames=("p", "mesh", "mesh_axis",
                                              "use_kernels", "plan",
                                              "overlap", "eq", "with_health",
-                                             "faults"))
+                                             "faults", "pipeline"))
 def parallel_fmm_evaluate(tree: Tree, p: int, mesh: Optional[Mesh] = None,
                           mesh_axis: str = "data",
                           use_kernels: bool = False,
@@ -349,7 +411,8 @@ def parallel_fmm_evaluate(tree: Tree, p: int, mesh: Optional[Mesh] = None,
                           overlap: bool = True, eq=None,
                           targets: Optional[Tree] = None,
                           with_health: bool = False,
-                          faults: tuple = ()):
+                          faults: tuple = (), pipeline: bool = True,
+                          p2p_halo: Optional[jnp.ndarray] = None):
     """Distributed FMM evaluation of any registered equation, plan-driven.
 
     ``plan`` maps devices to contiguous parity-even leaf-row bands
@@ -380,6 +443,15 @@ def parallel_fmm_evaluate(tree: Tree, p: int, mesh: Optional[Mesh] = None,
     the same program — the guard costs no extra host sync.  ``faults`` is
     the static tuple of active :class:`~repro.core.faults.FaultSpec`s
     (empty = the exact injection-free program).
+
+    ``pipeline=True`` (default) extends the overlap frontier (DESIGN.md
+    §12): the cut-level all_gather's first consumption is deferred past
+    all sharded-level M2L compute.  ``pipeline=False`` traces exactly the
+    pre-§12 ordering (the bit-identical escape hatch).  ``p2p_halo``, when
+    given, is the already-exchanged packed particle buffer from
+    :func:`parallel_fmm_p2p_prefetch` (the cross-substep double buffer, in
+    device-tile layout): the body consumes it instead of issuing its own
+    exchange round.
     """
     eq = _eqs.get_equation(eq)
     if mesh is None:
@@ -418,9 +490,17 @@ def parallel_fmm_evaluate(tree: Tree, p: int, mesh: Optional[Mesh] = None,
             targets.mask[src_r, src_c] & v)
 
     l_cut = block.level - block.sharded_depth()
+    pre = () if p2p_halo is None else (p2p_halo,)
+    if pre:
+        planes = 4 if eq.q_is_real else 5
+        want = (P_ * (rows_max + 2), cols_max + 2, planes, tree.slots)
+        if tuple(p2p_halo.shape) != want:
+            raise ValueError(f"p2p_halo shape {tuple(p2p_halo.shape)} does "
+                             f"not match plan/equation (expected {want})")
     body = functools.partial(_parallel_fmm_body, plan=block, l_cut=l_cut, p=p,
                              sigma=tree.sigma, axis_name=mesh_axis,
                              use_kernels=use_kernels, overlap=overlap, eq=eq,
+                             pipeline=pipeline, prefetched=bool(pre),
                              with_health=with_health, faults=faults)
     spec = P(mesh_axis, None, None)
     out_spec = spec if eq.nout == 1 else P(mesh_axis, None, None, None)
@@ -429,18 +509,83 @@ def parallel_fmm_evaluate(tree: Tree, p: int, mesh: Optional[Mesh] = None,
     # pallas_call has no shard_map replication rule; disable the check on
     # the kernel route (numerics are unaffected — outputs stay sharded).
     kwargs = {_CHECK_KW: False} if (use_kernels and _CHECK_KW) else {}
+    pre_spec = (P(mesh_axis, None, None, None),) * len(pre)
     fn = _shard_map(body, mesh=mesh,
-                    in_specs=(spec,) * (3 + len(t_sh)),
+                    in_specs=(spec,) * (3 + len(t_sh)) + pre_spec,
                     out_specs=out_spec, **kwargs)
     if with_health:
-        w, h = fn(z_sh, q_sh, m_sh, *t_sh)
+        w, h = fn(z_sh, q_sh, m_sh, *t_sh, *pre)
         health = hw.device_combine(h.reshape(P_, hw.N_FIELDS))
     else:
-        w = fn(z_sh, q_sh, m_sh, *t_sh)
+        w = fn(z_sh, q_sh, m_sh, *t_sh, *pre)
     if not identity:
         sct_r, sct_c = block.scatter_index()
         w = w[jnp.asarray(sct_r), jnp.asarray(sct_c)]
     return (w, health) if with_health else w
+
+
+@functools.partial(jax.jit, static_argnames=("mesh", "mesh_axis", "plan",
+                                             "eq"))
+def parallel_fmm_p2p_prefetch(tree: Tree, mesh: Optional[Mesh] = None,
+                              mesh_axis: str = "data",
+                              plan: Optional[Union[SlabPlan,
+                                                   BlockPlan]] = None,
+                              eq=None) -> jnp.ndarray:
+    """Issue ONLY the packed (z, q, mask) P2P halo exchange for ``tree``.
+
+    The cross-substep double buffer (DESIGN.md §12): the RK2 stepper calls
+    this the moment substep k+1's rebinned particles exist — while substep
+    k's trailing reductions are still pending — and hands the result to
+    :func:`parallel_fmm_evaluate` via ``p2p_halo``, which then consumes the
+    buffer instead of issuing its own round.  Under an async-collective
+    backend the exchange's flight time hides behind everything traced
+    between issue and first rim use (the guard reductions, the next
+    evaluation's resharding and upward sweep).  The exchanged bytes are
+    identical to the inline round — fault injection and the health
+    sentinel are applied by the CONSUMER, exactly as on the inline path,
+    so recovery semantics don't change.
+
+    Returns the halo'd packed buffer in device-tile layout,
+    ``(P * (rows_max + 2), cols_max + 2, planes, slots)``; the plan/mesh
+    fallbacks mirror :func:`parallel_fmm_evaluate` so the pair always
+    agrees on the layout.
+    """
+    eq = _eqs.get_equation(eq)
+    if mesh is None:
+        mesh = Mesh(np.array(jax.devices()[:1]), ("data",))
+    P_ = mesh.shape[mesh_axis]
+    if plan is None:
+        plan = uniform_plan(tree.level, P_)
+    block = plan.as_block() if isinstance(plan, SlabPlan) else plan
+    n = tree.nside
+    rows_max, cols_max = block.rows_max, block.cols_max
+    identity = (block.grid[1] == 1 and block.is_uniform
+                and P_ * rows_max == n)
+    if identity:
+        z_sh, q_sh, m_sh = tree.z, tree.q, tree.mask
+    else:
+        src_r, src_c, valid = block.gather_index()
+        src_r, src_c = jnp.asarray(src_r), jnp.asarray(src_c)
+        v = jnp.asarray(valid)[:, :, None]
+        z_sh = jnp.where(v, tree.z[src_r, src_c], 0)
+        q_sh = jnp.where(v, tree.q[src_r, src_c], 0)
+        m_sh = tree.mask[src_r, src_c] & v
+    Pr, Pc = block.grid
+
+    def body(z, q, m):
+        if eq.q_is_real:
+            q = (q.real + 0j).astype(z.dtype)
+        di = jax.lax.axis_index(mesh_axis)
+        dev = np.arange(Pr * Pc)
+        my_rows = jnp.asarray(np.asarray(block.rows, np.int32)[dev // Pc])[di]
+        my_cols = jnp.asarray(np.asarray(block.cols, np.int32)[dev % Pc])[di]
+        return _tile_halo(_pack_particles(z, q, m, eq.q_is_real), 1,
+                          my_rows, my_cols, mesh_axis, (Pr, Pc))
+
+    spec = P(mesh_axis, None, None)
+    fn = _shard_map(body, mesh=mesh, in_specs=(spec,) * 3,
+                    out_specs=P(mesh_axis, None, None, None))
+    return fn(z_sh, q_sh, m_sh)
 
 
 def parallel_fmm_velocity(tree: Tree, p: int, mesh: Optional[Mesh] = None,
@@ -448,9 +593,11 @@ def parallel_fmm_velocity(tree: Tree, p: int, mesh: Optional[Mesh] = None,
                           use_kernels: bool = False,
                           plan: Optional[Union[SlabPlan, BlockPlan]] = None,
                           overlap: bool = True, with_health: bool = False,
-                          faults: tuple = ()):
+                          faults: tuple = (), pipeline: bool = True,
+                          p2p_halo: Optional[jnp.ndarray] = None):
     """Complex velocity W per slot — the vortex-kernel form of
     :func:`parallel_fmm_evaluate` (the registry's bit-compatible default)."""
     return parallel_fmm_evaluate(tree, p, mesh, mesh_axis, use_kernels,
                                  plan, overlap, eq=_eqs.VORTEX,
-                                 with_health=with_health, faults=faults)
+                                 with_health=with_health, faults=faults,
+                                 pipeline=pipeline, p2p_halo=p2p_halo)

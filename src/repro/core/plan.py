@@ -738,7 +738,8 @@ def plan_stats(plan, counts: np.ndarray, params: ModelParams) -> dict:
 
 def replan(counts: np.ndarray, params: ModelParams, nparts: int,
            prev_plan=None, measured_times: np.ndarray | None = None,
-           method: str = "model", grid=None, overlap: bool = True):
+           method: str = "model", grid=None, overlap: bool = True,
+           pipeline: bool = True):
     """Dynamic re-planning: current counts + measured per-device times.
 
     Without measurements this is a pure a-priori re-plan from the drifted
@@ -751,7 +752,9 @@ def replan(counts: np.ndarray, params: ModelParams, nparts: int,
     ``grid="auto"`` re-runs the per-axis grid autotuner
     (:func:`autotune_plan`) with the measured scale, so slab vs block and
     ``(Pr, Pc)`` are themselves re-chosen from the drifted distribution
-    (``overlap`` selects the comm term the score uses).
+    (``overlap`` and ``pipeline`` select the comm term the score uses —
+    they must match the executing driver's flags or the model scores a
+    different program than the one that runs).
     """
     if grid == "auto":
         scale = None
@@ -759,7 +762,8 @@ def replan(counts: np.ndarray, params: ModelParams, nparts: int,
             scale = measured_row_scale(prev_plan, counts, params,
                                        measured_times)
         return autotune_plan(counts, params, nparts, method=method,
-                             cell_weight_scale=scale, overlap=overlap)
+                             cell_weight_scale=scale, overlap=overlap,
+                             pipeline=pipeline)
     if grid is None and isinstance(prev_plan, BlockPlan):
         grid = prev_plan.grid
     scale = None
@@ -909,7 +913,8 @@ def halo_volume(plan, params: ModelParams, executed: bool = False) -> dict:
 
 def plan_comm_cost(plan, counts: np.ndarray, params: ModelParams,
                    overlap: bool = True, executed: bool = True,
-                   weight_scale: np.ndarray | None = None) -> np.ndarray:
+                   weight_scale: np.ndarray | None = None,
+                   pipeline: bool = True) -> np.ndarray:
     """(nparts,) modeled serial communication cost per device.
 
     ``overlap=False`` is the paper's Eq 16-20 price: ``t_byte`` times the
@@ -925,6 +930,14 @@ def plan_comm_cost(plan, counts: np.ndarray, params: ModelParams,
     a slow device's interior takes longer in wall clock, so it hides the
     same exchange more easily — the comm term sees the same device speeds
     the balance term uses.
+
+    ``pipeline=True`` (default, matching the drivers) enlarges the hiding
+    budget with the substep pipeline's windows (DESIGN.md §12): the
+    replicated root-tree sweep now runs between the halo collectives'
+    issue and the rim consumption (``cost_model.work_root_tree``), and the
+    prefetched cross-substep P2P exchange additionally flies through the
+    next substep's upward sweep (``cost_model.work_upward``).  The enlarged
+    budget can only shrink the residue, never grow it.
     """
     block = plan.as_block() if isinstance(plan, SlabPlan) else plan
     m2l_b, p2p_b, _, _ = _halo_device_stats(block, params, executed)
@@ -937,20 +950,32 @@ def plan_comm_cost(plan, counts: np.ndarray, params: ModelParams,
                      block.interior_extents(cm.P2P_HALO_ROWS)],
                     dtype=np.float64)
     hide = loads * ints / np.maximum(area, 1.0)
-    return cm.comm_overlap_effective(bytes_d, hide, params, overlap=overlap)
+    extra = 0.0
+    if pipeline:
+        extra = cm.work_root_tree(params) + cm.work_upward(params, area)
+        if weight_scale is not None:
+            # a slow device's pipeline windows stretch too: scale by its
+            # mean slowdown, like the interior budget above
+            mean_scale = loads / np.maximum(
+                plan_loads(plan, counts, params), 1e-30)
+            extra = extra * mean_scale
+    return cm.comm_overlap_effective(bytes_d, hide, params, overlap=overlap,
+                                     extra_hide=extra)
 
 
 def plan_score(plan, counts: np.ndarray, params: ModelParams,
                overlap: bool = True,
-               weight_scale: np.ndarray | None = None) -> float:
+               weight_scale: np.ndarray | None = None,
+               pipeline: bool = True) -> float:
     """Modeled bottleneck step cost: Eq-20 max over devices of work plus
     the overlap-aware serial comm residue — the objective the grid
     autotuner minimizes.  Smaller is better.  ``weight_scale`` feeds both
     terms, so the balance and comm-hiding models see the same measured
-    device speeds."""
+    device speeds; ``pipeline`` selects the §12 enlarged hiding budget the
+    executing driver actually has."""
     loads = plan_loads(plan, counts, params, weight_scale)
     comm = plan_comm_cost(plan, counts, params, overlap=overlap,
-                          weight_scale=weight_scale)
+                          weight_scale=weight_scale, pipeline=pipeline)
     return float((params.t_flop * loads + comm).max())
 
 
@@ -964,7 +989,7 @@ def candidate_grids(nparts: int) -> list[tuple[int, int]]:
 def autotune_plan(counts: np.ndarray, params: ModelParams, nparts: int,
                   method: str = "model",
                   cell_weight_scale: np.ndarray | None = None,
-                  overlap: bool = True):
+                  overlap: bool = True, pipeline: bool = True):
     """Per-axis plan autotuning (ROADMAP): choose slab vs block AND the
     ``(Pr, Pc)`` device grid at replan time.
 
@@ -1002,7 +1027,7 @@ def autotune_plan(counts: np.ndarray, params: ModelParams, nparts: int,
                                           method=method,
                                           cell_weight_scale=cell_weight_scale)
         score = plan_score(plan, counts, params, overlap=overlap,
-                           weight_scale=cell_weight_scale)
+                           weight_scale=cell_weight_scale, pipeline=pipeline)
         if best is None or score < best[0]:
             best = (score, plan)
     if best is None:

@@ -47,7 +47,7 @@ from . import health as hw
 from . import partition as pt
 from ..checkpoint.manager import CheckpointManager
 from .fmm import fmm_velocity
-from .parallel_fmm import parallel_fmm_velocity
+from .parallel_fmm import parallel_fmm_p2p_prefetch, parallel_fmm_velocity
 from .plan import (BlockPlan, SlabPlan, assignment_from_plan, autotune_plan,
                    candidate_grids, measured_row_scale, plan_from_counts,
                    plan_loads, plan_stats, replan, uniform_plan)
@@ -55,13 +55,14 @@ from .quadtree import Domain, Tree, build_tree, choose_level, rebuild_tree
 
 
 def _velocity(tree, p, mesh, mesh_axis, use_kernels, plan, overlap,
-              with_health=False, faults=()):
+              with_health=False, faults=(), pipeline=True, p2p_halo=None):
     if mesh is None:
         return fmm_velocity(tree, p, use_kernels=use_kernels,
                             with_health=with_health)
     return parallel_fmm_velocity(tree, p, mesh, mesh_axis, use_kernels, plan,
                                  overlap, with_health=with_health,
-                                 faults=faults)
+                                 faults=faults, pipeline=pipeline,
+                                 p2p_halo=p2p_halo)
 
 
 def robust_wall(samples, clip: float = 4.0) -> float:
@@ -79,6 +80,24 @@ def robust_wall(samples, clip: float = 4.0) -> float:
     return float(np.median(keep)) if keep.size else med
 
 
+def clean_wall_samples(records) -> list[float]:
+    """Steady-state wall-clock samples from a list of :class:`StepRecord`s.
+
+    Drops every FLAGGED record (replanned, releveled, or recovered — those
+    steps paid a host rebuild and/or recovery reruns inside their own
+    timer) AND each flagged record's successor: a re-plan, an
+    occupancy-guard re-level, and a domain expansion are all ADOPTED after
+    their step ran, so the retrace for the new static plan / tree shapes
+    lands on the FOLLOWING step's sample.  Without the successor drop one
+    retrace-contaminated sample per adoption leaks into the window and
+    only :func:`robust_wall`'s clip saves the estimate.
+    """
+    flagged = [bool(r.replanned or r.releveled or r.recovered)
+               for r in records]
+    return [r.seconds for i, r in enumerate(records)
+            if not flagged[i] and not (i > 0 and flagged[i - 1])]
+
+
 def host_wallclock_times(stepper: "VortexStepper"):
     """Default ``measured_times_fn``: per-device times from the host-side
     step wall clock.
@@ -90,22 +109,17 @@ def host_wallclock_times(stepper: "VortexStepper"):
     interval without inventing per-device resolution — the resulting rates
     are uniform, so the re-plan stays count-driven until real per-device
     timers (jax profiler device runtimes / TPU counters — the ROADMAP
-    item) replace this hook.  Recompile-dominated samples are excluded:
-    a re-level or an in-step recovery pays its rebuild inside its own
-    (flagged) step, but a re-plan is adopted AFTER its step ran, so the
-    retrace for the new static plan lands on the FOLLOWING step — both the
-    flagged record and its successor are dropped.  The surviving samples go
+    item) replace this hook.  Recompile-dominated samples are excluded via
+    :func:`clean_wall_samples`: every adoption that changes the jitted
+    step's static shapes — a re-plan, an occupancy-guard re-level, a
+    recovery re-level, a domain expansion, a rollback — happens AFTER its
+    step ran, so the retrace lands on the FOLLOWING step; both the flagged
+    record and its successor are dropped.  The surviving samples go
     through :func:`robust_wall` (median/clip), so one corrupted sample
     can't thrash the replanner.  Returns None until a clean steady-state
     step exists.
     """
-    recs = stepper.history
-    clean = [r.seconds for prev, r in zip([None] + recs[:-1], recs)
-             if not (r.replanned or r.releveled or r.recovered)
-             and not (prev is not None
-                      and (prev.replanned or prev.releveled
-                           or prev.recovered))]
-    recent = clean[-6:]
+    recent = clean_wall_samples(stepper.history)[-6:]
     if not recent:
         return None
     wall = robust_wall(recent)
@@ -122,11 +136,12 @@ def host_wallclock_times(stepper: "VortexStepper"):
 
 @functools.partial(jax.jit, static_argnames=("p", "mesh", "mesh_axis",
                                              "use_kernels", "plan",
-                                             "overlap", "guard", "faults"))
+                                             "overlap", "pipeline", "guard",
+                                             "faults"))
 def rk2_step(tree: Tree, dt, payload=None, *, p: int, mesh=None,
              mesh_axis: str = "data", use_kernels: bool = False,
              plan: Optional[SlabPlan] = None, overlap: bool = True,
-             guard: bool = False, faults: tuple = ()):
+             pipeline: bool = True, guard: bool = False, faults: tuple = ()):
     """One jitted RK2 midpoint step; ``dz/dt = conj(W)`` (W = u - iv).
 
     ``payload`` is an optional pytree of per-slot (n, n, s) arrays carried
@@ -142,20 +157,49 @@ def rk2_step(tree: Tree, dt, payload=None, *, p: int, mesh=None,
     exact unguarded program.  ``faults`` is the static tuple of active
     :class:`~repro.core.faults.FaultSpec`s (injected on the first substep;
     empty tuple = the injection-free program, bit for bit).
+
+    ``pipeline=True`` (default) runs the substep pipeline (DESIGN.md §12)
+    on sharded meshes: substep 2's packed P2P exchange is ISSUED the
+    moment the rebinned midpoint tree exists — before substep 1's trailing
+    guard reductions and substep 2's resharding/upward sweep, all of which
+    then hide the collective's flight — and its evaluation consumes the
+    prefetched buffer.  The gather-overlap stage inside each evaluation is
+    gated by the same flag.  The exchanged bytes and every consuming op
+    are identical, so the two orderings agree bit-for-bit in value;
+    ``pipeline=False`` traces exactly the pre-§12 program (the escape
+    hatch the equivalence tests pin).
     """
     v1 = _velocity(tree, p, mesh, mesh_axis, use_kernels, plan, overlap,
-                   with_health=guard, faults=faults)
+                   with_health=guard, faults=faults, pipeline=pipeline)
     w1, h1 = v1 if guard else (v1, None)
     z_mid = jnp.where(tree.mask, tree.z + 0.5 * dt * jnp.conj(w1), tree.z)
     z_mid = flt.corrupt_positions(z_mid, tree.mask, faults)
     live0 = tree.mask.sum()
-    ood1 = hw.out_of_domain_count(z_mid, tree.mask) if guard else None
+    ood1 = None
+    if guard and not pipeline:
+        ood1 = hw.out_of_domain_count(z_mid, tree.mask)
     aux = (tree.z, payload) if payload is not None else (tree.z,)
     t_mid, aux, ok1 = rebuild_tree(tree, z_mid, aux=aux)
     z0 = aux[0]
 
+    # cross-substep double buffer (DESIGN.md §12): issue substep 2's packed
+    # exchange as soon as the rebinned particles exist, then deliberately
+    # order substep 1's trailing guard reduction AFTER the issue — that
+    # reduction plus the next evaluation's resharding/upward sweep is the
+    # compute window the collective flies through.  Ownership rule: the
+    # buffer is read-only from issue to consumption; fault injection and
+    # the health sentinel run at the CONSUMER (inside the evaluation), so
+    # the guarded paths observe identical data on both orderings.
+    p2p_pre = None
+    if pipeline and mesh is not None:
+        p2p_pre = parallel_fmm_p2p_prefetch(t_mid, mesh=mesh,
+                                            mesh_axis=mesh_axis, plan=plan)
+    if guard and pipeline:
+        ood1 = hw.out_of_domain_count(z_mid, tree.mask)
+
     v2 = _velocity(t_mid, p, mesh, mesh_axis, use_kernels, plan, overlap,
-                   with_health=guard, faults=faults)
+                   with_health=guard, faults=faults, pipeline=pipeline,
+                   p2p_halo=p2p_pre)
     w2, h2 = v2 if guard else (v2, None)
     z_new = jnp.where(t_mid.mask, z0 + dt * jnp.conj(w2), t_mid.z)
     ood2 = hw.out_of_domain_count(z_new, t_mid.mask) if guard else None
@@ -265,7 +309,7 @@ class VortexStepper:
                  *, p: int = 12, dt: float = 0.005, mesh=None,
                  mesh_axis: str = "data", use_kernels: bool = False,
                  plan_method: str = "model", dynamic: bool = False,
-                 plan_grid=None, overlap: bool = True,
+                 plan_grid=None, overlap: bool = True, pipeline: bool = True,
                  replan_every: int = 4, replan_tol: float = 0.05,
                  target_per_box: float = 8.0, slots_headroom: float = 2.0,
                  occupancy_guard: float = 0.9, cut: Optional[int] = None,
@@ -281,7 +325,8 @@ class VortexStepper:
         self._init_config(
             p=p, dt=dt, mesh=mesh, mesh_axis=mesh_axis,
             use_kernels=use_kernels, plan_method=plan_method, dynamic=dynamic,
-            plan_grid=plan_grid, overlap=overlap, replan_every=replan_every,
+            plan_grid=plan_grid, overlap=overlap, pipeline=pipeline,
+            replan_every=replan_every,
             replan_tol=replan_tol, target_per_box=target_per_box,
             slots_headroom=slots_headroom, occupancy_guard=occupancy_guard,
             cut=cut, sigma=sigma, measured_times_fn=measured_times_fn,
@@ -297,13 +342,14 @@ class VortexStepper:
                      replan_tol, target_per_box, slots_headroom,
                      occupancy_guard, cut, sigma, measured_times_fn, guard,
                      policy, faults, checkpoint_dir, checkpoint_every,
-                     checkpoint_keep, domain):
+                     checkpoint_keep, domain, pipeline=True):
         self.p, self.dt = p, float(dt)
         self.mesh, self.mesh_axis = mesh, mesh_axis
         self.use_kernels = use_kernels
         self.plan_method = plan_method
         self.dynamic = dynamic
         self.overlap = overlap
+        self.pipeline = bool(pipeline)
         self.plan_grid = plan_grid if plan_grid in (None, "auto") \
             else tuple(plan_grid)
         self.replan_every = max(int(replan_every), 1)
@@ -387,7 +433,8 @@ class VortexStepper:
         if self.plan_grid == "auto":
             self.plan = autotune_plan(counts, self.params, self.nparts,
                                       method=self.plan_method,
-                                      overlap=self.overlap)
+                                      overlap=self.overlap,
+                                      pipeline=self.pipeline)
         else:
             self.plan = plan_from_counts(counts, self.params, self.nparts,
                                          method=self.plan_method,
@@ -501,7 +548,8 @@ class VortexStepper:
         if self.plan_grid == "auto":
             self.plan = autotune_plan(counts, self.params, self.nparts,
                                       method=self.plan_method,
-                                      overlap=self.overlap)
+                                      overlap=self.overlap,
+                                      pipeline=self.pipeline)
         else:
             self.plan = plan_from_counts(counts, self.params, self.nparts,
                                          method=self.plan_method,
@@ -530,7 +578,8 @@ class VortexStepper:
                         mesh_axis: str = "data", step: Optional[int] = None,
                         use_kernels: bool = False, plan_method: str = None,
                         dynamic: bool = False, plan_grid=None,
-                        overlap: bool = True, replan_every: int = 4,
+                        overlap: bool = True, pipeline: bool = True,
+                        replan_every: int = 4,
                         replan_tol: float = 0.05,
                         target_per_box: float = 8.0,
                         slots_headroom: float = 2.0,
@@ -556,6 +605,7 @@ class VortexStepper:
             use_kernels=use_kernels,
             plan_method=plan_method or meta.get("plan_method", "model"),
             dynamic=dynamic, plan_grid=plan_grid, overlap=overlap,
+            pipeline=pipeline,
             replan_every=replan_every, replan_tol=replan_tol,
             target_per_box=target_per_box, slots_headroom=slots_headroom,
             occupancy_guard=occupancy_guard, cut=meta["cut"],
@@ -569,7 +619,7 @@ class VortexStepper:
     # -- the dynamic loop ----------------------------------------------------
 
     def maybe_replan(self, measured_times: Optional[np.ndarray] = None,
-                     occ: Optional[int] = None) -> bool:
+                     occ: Optional[int] = None) -> str:
         """Re-level if occupancy approaches capacity; re-plan if it pays.
 
         ``occ`` (max leaf occupancy) is normally read off the jitted step's
@@ -577,26 +627,31 @@ class VortexStepper:
         triggers no extra device sync; the counts grid is then pulled once
         per replan interval to refresh the reported load balance and (when
         dynamic) drive the re-plan.
-        Returns True when a new plan (or tree level) was adopted."""
+        Returns what was adopted: ``"relevel"`` when the occupancy guard
+        rebuilt the tree, ``"replan"`` when a new plan was adopted, ``""``
+        otherwise — truthiness-compatible with the old bool return, but
+        lets :meth:`step` record the correct ``releveled``/``replanned``
+        flags (both adoptions retrace on the NEXT step, which
+        :func:`clean_wall_samples` relies on)."""
         if occ is None:
             occ = int(np.asarray(self.tree.mask.sum(axis=-1).max()))
         if occ >= self.occupancy_guard * self.params.slots:
             self._relevel()
-            return True
+            return "relevel"
         counts = self.counts()
         self._counts_cache = counts     # reused by host_wallclock_times
         self._cached_lb = plan_stats(self.plan, counts,
                                      self.params)["load_balance"]
         if not self.dynamic:
-            return False
+            return ""
         if measured_times is None and self.measured_times_fn is not None:
             measured_times = self.measured_times_fn(self)
         new_plan = replan(counts, self.params, self.nparts,
                           prev_plan=self.plan, measured_times=measured_times,
                           method=self.plan_method, grid=self.plan_grid,
-                          overlap=self.overlap)
+                          overlap=self.overlap, pipeline=self.pipeline)
         if new_plan == self.plan:
-            return False
+            return ""
         # adopt when the modeled bottleneck (measured-rate-weighted when
         # times are available) improves by more than the tolerance
         scale = None
@@ -606,7 +661,7 @@ class VortexStepper:
         old_max = plan_loads(self.plan, counts, self.params, scale).max()
         new_max = plan_loads(new_plan, counts, self.params, scale).max()
         if new_max > (1.0 - self.replan_tol) * old_max:
-            return False
+            return ""
         self.plan = new_plan
         self._cached_lb = plan_stats(new_plan, counts,
                                      self.params)["load_balance"]
@@ -620,7 +675,7 @@ class VortexStepper:
         else:
             self.subtree_assign = assignment_from_plan(new_plan,
                                                        self.params.cut)
-        return True
+        return "replan"
 
     # -- guarded execution ---------------------------------------------------
 
@@ -646,14 +701,15 @@ class VortexStepper:
         if reference:
             out = rk2_step(self.tree, dt, self.payload, p=self.p, mesh=None,
                            use_kernels=False, plan=None, overlap=False,
-                           guard=self.guard, faults=faults)
+                           pipeline=False, guard=self.guard, faults=faults)
         else:
             out = rk2_step(
                 self.tree, dt, self.payload, p=self.p, mesh=self.mesh,
                 mesh_axis=self.mesh_axis, use_kernels=self.use_kernels,
                 plan=None if self.mesh is None
                 else (plan if plan is not None else self.plan),
-                overlap=self.overlap, guard=self.guard, faults=faults)
+                overlap=self.overlap, pipeline=self.pipeline,
+                guard=self.guard, faults=faults)
         tree, payload, ok, occ, health = out
         jax.block_until_ready(tree.z)
         return (tree, payload, bool(ok), int(occ),
@@ -817,7 +873,9 @@ class VortexStepper:
         if self.step_count % self.replan_every == 0:
             # occ comes off the step's own outputs (already on host after
             # block_until_ready) — the check itself syncs nothing extra
-            replanned = self.maybe_replan(occ=int(occ)) or replanned
+            action = self.maybe_replan(occ=int(occ))
+            replanned = replanned or action == "replan"
+            releveled = releveled or action == "relevel"
         rec = StepRecord(step=self.step_count, seconds=seconds,
                          load_balance=self._cached_lb,
                          replanned=replanned,

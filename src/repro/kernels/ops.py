@@ -18,6 +18,14 @@ tests), so the table can be retuned per backend without touching numerics.
 Lane padding (``lane_pad=None`` -> pad on real TPU only) pads the kernels'
 lane axes (``s`` for P2P, ``4p`` for M2L) to multiples of 128 inside the
 wrappers; padded lanes are structural zeros, so this too is numerics-free.
+
+Under the substep pipeline (DESIGN.md §12) the rim-strip launches of the
+overlapped driver may execute while a second exchange buffer is in
+flight (next substep's packed P2P halo, or the cut-level gather).  The
+kernels are oblivious to this: launch shapes, block tables, and operand
+buffers are unchanged — the in-flight buffer is a *different* array the
+consumer reads later, never an alias of a kernel operand, so no kernel
+ever races a collective.
 """
 from __future__ import annotations
 

@@ -244,3 +244,51 @@ def parse_collectives(hlo_text: str) -> dict:
     r = analyze_hlo(hlo_text)
     return {"per_kind": r["per_kind"], "total_bytes": r["collective_bytes"],
             "count": r["count"]}
+
+
+_SSA_DEF_RE = re.compile(r'^\s*(%[\w#]+(?::\d+)?)\s*=\s*"?stablehlo\.(\w+)"?')
+
+
+def collective_issue_depths(
+        stablehlo_text: str,
+        collectives: tuple = ("all_gather", "collective_permute"),
+        compute: tuple = ("dot_general", "convolution")) -> dict:
+    """Per-collective *issue depth* in a lowered StableHLO module.
+
+    StableHLO text preserves trace order, so the number of compute ops
+    that sit between a collective's SSA definition and the first use of
+    its result measures how much independent work the program issues the
+    collective ahead of — the quantity the substep pipeline (DESIGN.md
+    §12) restructures.  A depth of 0 means the result is consumed by the
+    next compute op; larger depths give XLA's latency-hiding scheduler a
+    window to overlap the transfer.
+
+    Returns ``{kind: [depth, ...]}`` with one entry per ``collectives``
+    kind, each listing the depth of every instance in issue order.
+    Depths count only ``compute`` ops (default: dot_general /
+    convolution — the FLOP carriers); elementwise glue is free to
+    reorder and would only add noise.
+    """
+    lines = stablehlo_text.splitlines()
+    depths: dict = {k: [] for k in collectives}
+    for i, line in enumerate(lines):
+        m = _SSA_DEF_RE.match(line)
+        if not m:
+            continue
+        rid, op = m.group(1), m.group(2)
+        if op not in collectives:
+            continue
+        # strip a tuple-index suffix so %5:2 pins uses of %5
+        rid = rid.split(":")[0]
+        use_re = re.compile(re.escape(rid) + r"\b")
+        depth = 0
+        for later in lines[i + 1:]:
+            # search only the rhs so another def of a same-prefix id
+            # (there are none in SSA, but be safe) can't false-match
+            rhs = later.split("=", 1)[-1]
+            if use_re.search(rhs):
+                break
+            if any("stablehlo." + c in rhs for c in compute):
+                depth += 1
+        depths[op].append(depth)
+    return depths

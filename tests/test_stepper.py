@@ -147,7 +147,7 @@ def test_occupancy_guard_relevels_before_overflow():
                        payload={"z0": pos0[:, 0] + 1j * pos0[:, 1]})
     n_before = int(st.tree.mask.sum())
     level_before = st.params.level
-    assert st.maybe_replan() is True              # guard fires -> re-level
+    assert st.maybe_replan() == "relevel"         # guard fires -> re-level
     assert int(st.tree.mask.sum()) == n_before    # no particle lost
     assert st.params.slots >= st.counts().max()
     # payload survived the host rebuild
@@ -170,3 +170,51 @@ def test_stepper_measured_times_fn_is_wired():
                        replan_every=1, measured_times_fn=timer)
     st.step()
     assert calls == [1]
+
+
+# ---------------------------------------------------------------------------
+# Wall-clock sample hygiene for the measured-feedback replanner
+# ---------------------------------------------------------------------------
+
+
+def test_clean_wall_samples_drops_every_retrace_successor():
+    """Regression (substep-pipelining PR): ANY adopted tree change —
+    replan, occupancy-guard re-level, recovery rung — retraces on the
+    FOLLOWING step, so the flagged record AND its successor must both be
+    dropped from the feedback window, not only replan successors."""
+    from repro.core.stepper import StepRecord, clean_wall_samples
+
+    def rec(step, sec, replanned=False, releveled=False, recovered=""):
+        return StepRecord(step=step, seconds=sec, load_balance=1.0,
+                          replanned=replanned, releveled=releveled,
+                          level=5, recovered=recovered)
+
+    records = [rec(1, 1.0),
+               rec(2, 9.0, replanned=True),     # flagged
+               rec(3, 9.0),                     # retrace successor
+               rec(4, 1.1),
+               rec(5, 9.0, releveled=True),     # guard re-level: flagged too
+               rec(6, 9.0),                     # its retrace successor
+               rec(7, 1.2),
+               rec(8, 9.0, recovered="expand_domain"),
+               rec(9, 9.0),                     # recovery retrace
+               rec(10, 1.3)]
+    assert clean_wall_samples(records) == [1.0, 1.1, 1.2, 1.3]
+    # flagged-first window: the leading record itself is dropped
+    assert clean_wall_samples([rec(1, 9.0, releveled=True),
+                               rec(2, 9.0), rec(3, 1.0)]) == [1.0]
+    assert clean_wall_samples([]) == []
+
+
+def test_occupancy_guard_relevel_is_recorded_as_relevel():
+    """Regression: the guard's re-level used to come back as a bare True
+    and was recorded as ``replanned`` — mislabeling the record and keeping
+    its inflated wall sample in the feedback window."""
+    pos0, gamma0, sigma = lamb_oseen_particles(40)
+    st = VortexStepper(pos0, gamma0, sigma, p=8, dt=0.004,
+                       slots_headroom=1.0, occupancy_guard=0.9,
+                       dynamic=True, replan_every=1)
+    rec = st.step()
+    assert rec.releveled and not rec.replanned
+    from repro.core.stepper import clean_wall_samples
+    assert clean_wall_samples(st.history) == []
