@@ -360,7 +360,6 @@ def bench_overlap(rows, quick=False):
     body = textwrap.dedent(f"""
         import os
         os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count={ndev}"
-        import re
         import time
         import numpy as np
         import jax
@@ -424,21 +423,27 @@ def bench_overlap(rows, quick=False):
                         jnp.complex64)
         q = z * 0.5
         m = jnp.asarray(rng.uniform(size=shape) > 0.3)
+        from repro.analysis import contracts as C
+        cc = C.collective_count("collective-permute", 4)
         stats = {{}}
+        lows = {{}}
         for name, fn in (("fused", fused), ("unfused", unfused)):
             jfn = jax.jit(pf._shard_map(fn, mesh=mesh, in_specs=(spec,) * 3,
                                         out_specs=(spec,) * 3, **kw))
-            nperm = len(re.findall(r"collective[-_]permute",
-                                   jfn.lower(z, q, m).as_text()))
+            lows[name] = C.Lowered(jfn, z, q, m, label=name)
+            nperm = cc.measure(lows[name].text(cc.ir))
             jax.block_until_ready(jfn(z, q, m))
             t0 = time.perf_counter()
             for _ in range(20):
                 jax.block_until_ready(jfn(z, q, m))
             stats[name] = ((time.perf_counter() - t0) / 20 * 1e6, nperm)
         (fus, nf), (unf, nu) = stats["fused"], stats["unfused"]
-        # the pin: the packed exchange must show the deterministic 3x
-        # collective reduction in the lowered HLO
-        tag = "" if nu == 3 * nf else "failed:collective_count_"
+        # the pin, now through the contract registry: the packed exchange
+        # compiles to exactly 4 collective-permutes (TRUE instance counts
+        # in the optimized HLO — the old regex counted textual mentions),
+        # a 3x reduction vs the three rounds it replaced
+        (res,) = C.evaluate(lows["fused"], [cc])
+        tag = "" if res.ok and nu == 3 * nf else "failed:collective_count_"
         print(f"ROW p2p_exchange_fused {{fus:.1f}} {{tag}}"
               f"collectives={{nf}}_was={{nu}}_unfused_us={{unf:.1f}}")
     """)
@@ -477,14 +482,17 @@ def bench_pipeline(rows, quick=False):
 
     ``gather_overlap`` parses both lowered StableHLO modules (trace order
     is preserved) and reports the cut-level all_gather's *issue depth* —
-    dot_generals between issue and first consumption.  Pins: depth must
-    GROW under pipelining (that window is what the GPU latency-hiding
-    scheduler fills), and the collective_permute count must be EQUAL
-    across modes (the prefetch replaces the exchange, never duplicates
-    it).  Violations mark the row failed:, CI-fatal.
+    dot_generals between issue and first consumption.  Pins, evaluated
+    through the trace-contract registry (repro/analysis/contracts):
+    ``issue_depth_grows`` — depth must GROW under pipelining (that window
+    is what the GPU latency-hiding scheduler fills) with EQUAL
+    collective_permute counts across modes (the prefetch replaces the
+    exchange, never duplicates it) — and ``min_issue_depth`` as an
+    absolute floor.  Violations mark the row failed:, CI-fatal.
     """
     ndev = 4
     m_side, level, p = (80, 5, 8) if quick else (160, 6, 12)
+    depth_floor = 8 if quick else 32
     body = textwrap.dedent(f"""
         import os
         os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count={ndev}"
@@ -526,20 +534,26 @@ def bench_pipeline(rows, quick=False):
               + "/".join(map(str, plan.rows)))
         print(f"ROW pipeline_off {{off:.1f}} serial_issue_order_baseline")
 
-        # structural pin: issue depth of the cut-level all_gather, and
-        # equal permute counts (prefetch replaces, never duplicates)
-        depths = {{}}
-        for pl in (True, False):
-            text = jax.jit(lambda tr: pf.parallel_fmm_evaluate(
-                tr, {p}, mesh=mesh, plan=plan,
-                pipeline=pl)).lower(tree).as_text()
-            depths[pl] = collective_issue_depths(text)
+        # structural pin, through the contract registry: the cut-level
+        # all_gather's issue depth must GROW under pipelining (and clear
+        # an absolute floor) while permute counts stay equal (prefetch
+        # replaces, never duplicates)
+        from repro.analysis import contracts as C
+        entry = pf.TRACE_ENTRY_POINTS["parallel_fmm_evaluate"]
+        lows = {{pl: C.Lowered(entry, tree, {p}, mesh, plan=plan,
+                               pipeline=pl, label="pipeline=" + str(pl))
+                for pl in (True, False)}}
+        res = C.evaluate(lows[True],
+                         [C.issue_depth_grows("all_gather"),
+                          C.min_issue_depth("all_gather", {depth_floor})],
+                         pair_with=lows[False])
+        depths = {{pl: collective_issue_depths(lows[pl].stablehlo)
+                  for pl in (True, False)}}
         ag_on = max(depths[True]["all_gather"], default=0)
         ag_off = max(depths[False]["all_gather"], default=0)
         np_on = len(depths[True]["collective_permute"])
         np_off = len(depths[False]["collective_permute"])
-        ok = ag_on > ag_off and np_on == np_off
-        tag = "" if ok else "failed:issue_order_"
+        tag = "" if not C.violations(res) else "failed:issue_order_"
         print(f"ROW gather_overlap {{float(ag_on):.1f}} {{tag}}"
               f"gather_issue_depth={{ag_on}}_was={{ag_off}}"
               f"_permutes={{np_on}}_was={{np_off}}")
@@ -744,6 +758,71 @@ def bench_moe_placement(rows, quick=False):
                  f"contiguous={naive.min()/max(naive.max(),1):.3f}"))
 
 
+def bench_trace_contracts(rows, quick=False):
+    """The static-analysis layer as a benchmark row: run the serial
+    trace-contract catalog (M2L no-staging + fewer-bytes, guard-free and
+    callback-free traces, no donation on ``rk2_step``, no f64 upcasts)
+    plus the repo lint pass in-process, and report checked/violations.
+    Any violation marks the row ``failed:``, which the CI guard treats as
+    fatal.  The multidevice contracts (fused-exchange counts, pipelined
+    issue depth, SPMD schedule consistency, retrace session) run in the
+    dedicated static-analysis CI job via ``python -m
+    repro.analysis.check``."""
+    try:
+        import pathlib
+
+        import jax
+        import jax.numpy as jnp
+
+        from repro.analysis import contracts as C
+        from repro.analysis import lint as L
+        from repro.core import expansions as ex
+        from repro.core.fmm import fmm_velocity
+        from repro.core.quadtree import build_tree
+        from repro.core.stepper import TRACE_ENTRY_POINTS
+        from repro.kernels import ops as kops
+
+        level, p = (3, 12) if quick else (4, 17)
+        n = 1 << level
+        rng = np.random.default_rng(0)
+        me = jnp.asarray(rng.normal(size=(n, n, p)) +
+                         1j * rng.normal(size=(n, n, p)), jnp.complex64)
+        kern = C.Lowered(jax.jit(lambda g: kops.m2l_apply(g, level, p)), me,
+                         label="m2l_apply")
+        fold = C.Lowered(jax.jit(lambda g: ex.m2l_reference(g, level, p)),
+                         me, label="m2l_reference")
+        m40 = C.Lowered(jax.jit(lambda g: ex.m2l_masked40(g, level, p)), me,
+                        label="m2l_masked40")
+        pos = rng.uniform(0.05, 0.95, size=(600, 2))
+        tree, _ = build_tree(pos, rng.normal(size=600), 3, sigma=0.02)
+        drv = C.Lowered(jax.jit(lambda t: fmm_velocity(t, p=6)), tree,
+                        label="fmm_velocity")
+        rk2 = C.Lowered(TRACE_ENTRY_POINTS["rk2_step"], tree, 1e-4, p=6,
+                        label="rk2_step")
+
+        staging = [C.no_staging_dim(40 * p), C.no_f64_upcast()]
+        results = C.evaluate(kern, staging) + C.evaluate(fold, staging)
+        results += C.evaluate(fold, [C.fewer_bytes("folded", "masked40")],
+                              pair_with=m40)
+        results += C.evaluate(drv, [C.sentinel_free(), C.no_host_callback(),
+                                    C.no_f64_upcast()])
+        results += C.evaluate(rk2, [C.sentinel_free(), C.not_donated("rk2"),
+                                    C.no_host_callback()])
+
+        src_root = pathlib.Path(__file__).resolve().parents[1] / "src" / \
+            "repro"
+        findings = L.run_lint(src_root)
+        checked = len(results) + len(L.DEFAULT_RULES)
+        nviol = len(C.violations(results)) + len(findings)
+        tag = "" if nviol == 0 else "failed:"
+        rows.append(("trace_contracts", 0.0,
+                     f"{tag}checked={checked}_violations={nviol}"))
+    except Exception as e:  # report, never abort the whole harness
+        detail = " ".join(str(e).split())[-160:].replace(",", ";")
+        rows.append(("trace_contracts", 0.0,
+                     f"failed:{type(e).__name__}:{detail}"))
+
+
 def main() -> None:
     quick = "--quick" in sys.argv
     json_path = None
@@ -759,6 +838,7 @@ def main() -> None:
                   bench_overlap, bench_pipeline, bench_guarded_step,
                   bench_plan_halo,
                   bench_equations,
+                  bench_trace_contracts,
                   bench_moe_placement):
         bench(rows, quick=quick)
     print("name,us_per_call,derived")

@@ -1,0 +1,30 @@
+"""Trace contracts: static analysis over lowered programs and the source tree.
+
+Four layers (DESIGN.md §13):
+
+* :mod:`repro.analysis.contracts` — declarative :class:`TraceContract`
+  objects evaluated against a jitted entry point's StableHLO / optimized
+  HLO text (the `launch/hlo_analysis` walker does the measuring).  Every
+  structural pin the perf/robustness PRs introduced — M2L no-staging,
+  fused-exchange collective counts, pipelined issue depth, guard-free
+  traces, no-donation on the recovery path — lives here as a named
+  contract instead of an inline regex.
+* :mod:`repro.analysis.schedule` — the SPMD collective-schedule verifier:
+  simulates the lowered module for every device id and statically checks
+  that all devices issue the SAME collective sequence (a mismatch is the
+  distributed-hang analog of a data race).
+* :mod:`repro.analysis.retrace` — jit cache-miss accounting across a
+  scripted session; an unexpected retrace is named down to the offending
+  argument.
+* :mod:`repro.analysis.lint` — AST rules over the source tree replacing
+  the grep-guards (spec-generic drivers, no host syncs in jitted code,
+  rebuild_tree ok-flag consumption, ...).
+
+``python -m repro.analysis.check`` runs all four; CI has a dedicated
+``static-analysis`` job on it.
+"""
+from repro.analysis.contracts import (  # noqa: F401
+    ContractResult, Lowered, TraceContract, collective_count, evaluate,
+    fewer_bytes, format_results, issue_depth_grows, min_issue_depth,
+    no_f64_upcast, no_host_callback, no_staging_dim, not_donated,
+    sentinel_free, violations)

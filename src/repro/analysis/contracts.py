@@ -1,0 +1,377 @@
+"""Declarative trace contracts over lowered/compiled program text.
+
+A :class:`TraceContract` states one structural invariant of a jitted entry
+point — "no staging buffer with a 680-wide dimension", "exactly 4
+collective-permutes", "the all_gather is issued >= 32 dots before first
+use" — and checks it against the program TEXT (StableHLO from
+``jit(f).lower(...)`` or optimized HLO from ``...compile().as_text()``).
+The measuring is done by the :mod:`repro.launch.hlo_analysis` walker; the
+contract owns the expectation and the failure message.
+
+Why text, not numerics: these invariants are about the *program*, not its
+outputs.  A regression that re-introduces the (nb, 40p) M2L gather buffer
+or un-fuses the packed P2P exchange produces bit-identical results and a
+silent slowdown; the contract turns it into a red check with a name.
+
+Each contract declares which IR it wants via ``ir``:
+
+* ``"stablehlo"`` — the lowered (pre-XLA) module.  Trace order is
+  preserved, so issue-depth and sentinel contracts read this one.
+* ``"hlo"`` — the optimized post-SPMD module.  Shapes are per-device and
+  fusion has happened, so byte/collective-count contracts read this one.
+
+:class:`Lowered` lazily materializes both texts from one jitted call
+signature so a catalog of contracts costs one ``lower()`` and at most one
+``compile()``.  Pair contracts (:func:`fewer_bytes`,
+:func:`issue_depth_grows`) compare two entry points — the "folded beats
+masked-40" and "pipelining grows the overlap window" pins.
+
+Declaring a new contract (DESIGN.md §13): subclass :class:`TraceContract`,
+implement ``measure(text) -> value`` and ``check(text) -> ContractResult``,
+give it a stable ``name`` — then add it to the entry-point catalog in
+:mod:`repro.analysis.check` and a planted-violation negative test in
+``tests/test_analysis.py``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Callable, Optional
+
+from repro.launch.hlo_analysis import (analyze_hlo, collective_issue_depths,
+                                       shape_dim_pattern)
+
+__all__ = [
+    "ContractResult", "Lowered", "TraceContract", "PairContract",
+    "collective_count", "evaluate", "fewer_bytes", "format_results",
+    "issue_depth_grows", "min_issue_depth", "no_f64_upcast",
+    "no_host_callback", "no_staging_dim", "not_donated", "sentinel_free",
+    "violations",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class ContractResult:
+    contract: str          # contract name, e.g. "no_staging_dim(680)"
+    ok: bool
+    detail: str            # measured value / first offending line
+    target: str = ""       # entry-point label, filled in by evaluate()
+
+    def __str__(self):
+        state = "OK  " if self.ok else "FAIL"
+        tgt = f" @ {self.target}" if self.target else ""
+        return f"[{state}] {self.contract}{tgt}: {self.detail}"
+
+
+def _snippet(text: str, match: "re.Match") -> str:
+    """The line containing ``match``, trimmed — failure messages should
+    show the offending instruction, not an offset."""
+    start = text.rfind("\n", 0, match.start()) + 1
+    end = text.find("\n", match.end())
+    line = text[start:end if end != -1 else len(text)].strip()
+    return line[:160]
+
+
+class TraceContract:
+    """One structural invariant over a single lowered/compiled module."""
+
+    ir = "hlo"             # which text check() wants: "hlo" | "stablehlo"
+    name = "trace-contract"
+
+    def measure(self, text: str):
+        """The quantity the contract constrains (for diagnostics/benches)."""
+        raise NotImplementedError
+
+    def check(self, text: str) -> ContractResult:
+        raise NotImplementedError
+
+    def _result(self, ok: bool, detail: str) -> ContractResult:
+        return ContractResult(self.name, bool(ok), detail)
+
+
+class PairContract:
+    """A comparative invariant between two modules (a, b)."""
+
+    ir = "hlo"
+    name = "pair-contract"
+
+    def check_pair(self, text_a: str, text_b: str) -> ContractResult:
+        raise NotImplementedError
+
+    def _result(self, ok: bool, detail: str) -> ContractResult:
+        return ContractResult(self.name, bool(ok), detail)
+
+
+# ---------------------------------------------------------------------------
+# the catalog of contract classes
+# ---------------------------------------------------------------------------
+
+
+class _NoStagingDim(TraceContract):
+    """No tensor in the module has a ``dim``-sized dimension — the M2L
+    no-HBM-staging pin: the pre-folding wrapper materialized a (nb, 40p)
+    gather buffer, so any 40p-wide shape is the regression signature."""
+
+    ir = "hlo"
+
+    def __init__(self, dim: int):
+        self.dim = int(dim)
+        self.name = f"no_staging_dim({dim})"
+        self._pat = shape_dim_pattern(self.dim)
+
+    def measure(self, text: str) -> int:
+        return len(self._pat.findall(text))
+
+    def check(self, text: str) -> ContractResult:
+        m = self._pat.search(text)
+        if m is None:
+            return self._result(True, f"no {self.dim}-wide buffer")
+        return self._result(False, f"staging buffer found: {_snippet(text, m)}")
+
+
+def no_staging_dim(dim: int) -> TraceContract:
+    return _NoStagingDim(dim)
+
+
+class _CollectiveCount(TraceContract):
+    """Instance count of one collective kind in the optimized module
+    (while-loop bodies multiplied by their trip counts — the
+    ``ModuleStats.add`` fix this PR regression-pins).  ``count`` pins
+    equality; ``max_count``/``min_count`` pin a band."""
+
+    ir = "hlo"
+
+    def __init__(self, kind: str, count: Optional[int] = None,
+                 min_count: Optional[int] = None,
+                 max_count: Optional[int] = None):
+        if count is None and min_count is None and max_count is None:
+            raise ValueError("pin at least one of count/min_count/max_count")
+        self.kind, self.count = kind, count
+        self.min_count, self.max_count = min_count, max_count
+        want = (f"=={count}" if count is not None else
+                "/".join(filter(None, [
+                    f">={min_count}" if min_count is not None else None,
+                    f"<={max_count}" if max_count is not None else None])))
+        self.name = f"collective_count({kind}, {want})"
+
+    def measure(self, text: str) -> int:
+        return int(analyze_hlo(text)["count_per_kind"].get(self.kind, 0))
+
+    def check(self, text: str) -> ContractResult:
+        got = self.measure(text)
+        ok = ((self.count is None or got == self.count)
+              and (self.min_count is None or got >= self.min_count)
+              and (self.max_count is None or got <= self.max_count))
+        return self._result(ok, f"{self.kind} x{got}")
+
+
+def collective_count(kind: str, count: Optional[int] = None, *,
+                     min_count: Optional[int] = None,
+                     max_count: Optional[int] = None) -> TraceContract:
+    return _CollectiveCount(kind, count, min_count, max_count)
+
+
+class _MinIssueDepth(TraceContract):
+    """The deepest instance of ``kind`` must be issued at least
+    ``min_depth`` compute ops before its first use — the substep-pipeline
+    pin (DESIGN.md §12): that window is what a latency-hiding scheduler
+    fills with overlap."""
+
+    ir = "stablehlo"
+
+    def __init__(self, kind: str, min_depth: int):
+        self.kind, self.min_depth = kind, int(min_depth)
+        self.name = f"min_issue_depth({kind}, {min_depth})"
+
+    def measure(self, text: str) -> int:
+        return max(collective_issue_depths(text, collectives=(self.kind,))
+                   [self.kind], default=0)
+
+    def check(self, text: str) -> ContractResult:
+        got = self.measure(text)
+        return self._result(got >= self.min_depth,
+                            f"max {self.kind} issue depth {got}")
+
+
+def min_issue_depth(kind: str, min_depth: int) -> TraceContract:
+    return _MinIssueDepth(kind, min_depth)
+
+
+class _NoPattern(TraceContract):
+    """Shared body of the absence contracts: the module text must not
+    match ``pattern`` at all."""
+
+    def __init__(self, name: str, pattern: str, ir: str, why: str):
+        self.name, self.ir, self.why = name, ir, why
+        self._pat = re.compile(pattern)
+
+    def measure(self, text: str) -> int:
+        return len(self._pat.findall(text))
+
+    def check(self, text: str) -> ContractResult:
+        m = self._pat.search(text)
+        if m is None:
+            return self._result(True, self.why)
+        return self._result(False, f"{self.why} violated: "
+                                   f"{_snippet(text, m)}")
+
+
+def no_f64_upcast() -> TraceContract:
+    """No f64/c128 tensor anywhere: the production path is f32/complex64
+    end to end (f64 lives only in the host-side oracles), so a double
+    tensor in a lowered module is an accidental upcast eating 2x HBM."""
+    return _NoPattern("no_f64_upcast", r"\b(?:f64|c128)\[", "stablehlo",
+                      "no f64/c128 tensor")
+
+
+def sentinel_free() -> TraceContract:
+    """``guard=False`` traces the exact unguarded program: no finiteness
+    sentinel ops at all (the PR-6 zero-cost guarantee — the guard's cost
+    is opt-in, never ambient)."""
+    return _NoPattern("sentinel_free", r"is_finite", "stablehlo",
+                      "no finiteness sentinels")
+
+
+def no_host_callback() -> TraceContract:
+    """No host callback custom-calls in the lowered module: a
+    ``pure_callback``/``io_callback``/debug print smuggled into the step
+    serializes every device program on a host round trip."""
+    return _NoPattern("no_host_callback",
+                      r"callback|CustomCall.*host", "stablehlo",
+                      "no host callbacks")
+
+
+def not_donated(argname: str = "buffers") -> TraceContract:
+    """No input buffer is donated (``tf.aliasing_output``): the guarded
+    stepper's recovery ladder retries the SAME step from the intact
+    pre-step tree, so ``rk2_step`` must never alias its inputs — donation
+    would hand the retry a poisoned operand."""
+    return _NoPattern(f"not_donated({argname})", r"tf\.aliasing_output",
+                      "stablehlo", "no donated input buffers")
+
+
+class _FewerBytes(PairContract):
+    """Module a must move strictly fewer fusion-aware HBM bytes than
+    module b (the parity-folded M2L vs the masked-40 formulation)."""
+
+    ir = "hlo"
+
+    def __init__(self, label_a: str = "a", label_b: str = "b"):
+        self.label_a, self.label_b = label_a, label_b
+        self.name = f"fewer_bytes({label_a} < {label_b})"
+
+    def check_pair(self, text_a: str, text_b: str) -> ContractResult:
+        ba = analyze_hlo(text_a)["bytes"]
+        bb = analyze_hlo(text_b)["bytes"]
+        return self._result(ba < bb,
+                            f"{self.label_a}={ba:.3e} {self.label_b}={bb:.3e}"
+                            f" ratio={bb / max(ba, 1.0):.2f}x")
+
+
+def fewer_bytes(label_a: str = "a", label_b: str = "b") -> PairContract:
+    return _FewerBytes(label_a, label_b)
+
+
+class _IssueDepthGrows(PairContract):
+    """Module a (pipelined) must issue ``kind`` strictly deeper than
+    module b (serial order), while the ``guard_kind`` instance count stays
+    EQUAL — the prefetch replaces the exchange, never duplicates it."""
+
+    ir = "stablehlo"
+
+    def __init__(self, kind: str = "all_gather",
+                 guard_kind: str = "collective_permute"):
+        self.kind, self.guard_kind = kind, guard_kind
+        self.name = f"issue_depth_grows({kind})"
+
+    def check_pair(self, text_a: str, text_b: str) -> ContractResult:
+        kinds = (self.kind, self.guard_kind)
+        da = collective_issue_depths(text_a, collectives=kinds)
+        db = collective_issue_depths(text_b, collectives=kinds)
+        deep_a = max(da[self.kind], default=0)
+        deep_b = max(db[self.kind], default=0)
+        n_a, n_b = len(da[self.guard_kind]), len(db[self.guard_kind])
+        ok = deep_a > deep_b and n_a == n_b
+        return self._result(ok, f"{self.kind} depth {deep_a} vs {deep_b}, "
+                                f"{self.guard_kind} x{n_a} vs x{n_b}")
+
+
+def issue_depth_grows(kind: str = "all_gather",
+                      guard_kind: str = "collective_permute") -> PairContract:
+    return _IssueDepthGrows(kind, guard_kind)
+
+
+# ---------------------------------------------------------------------------
+# evaluation engine
+# ---------------------------------------------------------------------------
+
+
+class Lowered:
+    """Lazy (stablehlo, hlo) text pair for one jitted call signature.
+
+    One catalog evaluation costs one ``lower()`` and — only if some
+    contract wants the optimized IR — one ``compile()``.  ``from_text``
+    builds one from raw text (tests plant violations that way).
+    """
+
+    def __init__(self, fn: Callable, *args, label: str = "", **kwargs):
+        self._lower = lambda: fn.lower(*args, **kwargs)
+        self.label = label or getattr(fn, "__name__", "entry")
+        self._lowered = None
+        self._texts: dict = {}
+
+    @classmethod
+    def from_text(cls, text: str, ir: str = "stablehlo", label: str = "text"):
+        self = cls.__new__(cls)
+        self._lower = None
+        self.label = label
+        self._lowered = None
+        # planted text stands in for both IRs unless the caller splits them
+        self._texts = {"stablehlo": text, "hlo": text, ir: text}
+        return self
+
+    def text(self, ir: str) -> str:
+        if ir not in self._texts:
+            if self._lowered is None:
+                self._lowered = self._lower()
+            if ir == "stablehlo":
+                self._texts[ir] = self._lowered.as_text()
+            elif ir == "hlo":
+                self._texts[ir] = self._lowered.compile().as_text()
+            else:
+                raise ValueError(f"unknown ir {ir!r}")
+        return self._texts[ir]
+
+    @property
+    def stablehlo(self) -> str:
+        return self.text("stablehlo")
+
+    @property
+    def hlo(self) -> str:
+        return self.text("hlo")
+
+
+def evaluate(lowered: Lowered, contracts,
+             pair_with: Optional[Lowered] = None) -> list:
+    """Check every contract against ``lowered`` (pair contracts against
+    ``(lowered, pair_with)``); results carry the entry-point label."""
+    out = []
+    for c in contracts:
+        if isinstance(c, PairContract):
+            if pair_with is None:
+                raise ValueError(f"{c.name} needs pair_with=")
+            r = c.check_pair(lowered.text(c.ir), pair_with.text(c.ir))
+            label = f"{lowered.label} vs {pair_with.label}"
+        else:
+            r = c.check(lowered.text(c.ir))
+            label = lowered.label
+        out.append(dataclasses.replace(r, target=label))
+    return out
+
+
+def violations(results) -> list:
+    return [r for r in results if not r.ok]
+
+
+def format_results(results) -> str:
+    return "\n".join(str(r) for r in results)

@@ -1,0 +1,375 @@
+"""AST lint rules over the source tree — the grep-guards, promoted.
+
+The repo accumulated source-level invariants enforced by regex greps
+scattered through the test suite (spec-generic drivers in
+``test_equations.py``, rebuild_tree ok-flag consumption in
+``test_health.py``).  Those regexes are brittle (a line break defeats
+them) and each invents its own failure format.  This module restates
+them — plus new rules for host syncs and nondeterminism inside
+jit-traced code — as AST rules with one registry and one finding format,
+shared by the tests, the ``python -m repro.analysis.check`` CLI, and CI.
+
+Jit-reachability: a function is *jit-traced* if it is decorated with
+``@jax.jit`` / ``@functools.partial(jax.jit, ...)`` or is referenced
+(called, or passed to ``functools.partial``) from a jit-traced function
+in the SAME module, transitively.  Same-module resolution keeps the
+analysis local and false-positive free: host-side drivers
+(``VortexStepper``, benchmarks) legitimately call ``float()``/``bool()``
+on device scalars, and they are not reachable from any jit root.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import pathlib
+from typing import Iterable, Optional
+
+__all__ = ["LintFinding", "LintRule", "DEFAULT_RULES", "run_lint",
+           "lint_source", "format_findings",
+    "EquationBranchRule", "HostSyncInJitRule", "StaticArgsRule",
+    "NondeterminismInJitRule", "RebuildTreeOkRule"]
+
+
+@dataclasses.dataclass(frozen=True)
+class LintFinding:
+    rule: str
+    path: str
+    line: int
+    message: str
+
+    def __str__(self):
+        return f"{self.path}:{self.line}: [{self.rule}] {self.message}"
+
+
+class LintRule:
+    name = "lint-rule"
+    # None = every file; else only paths whose tail matches one entry
+    applies_to: Optional[tuple] = None
+
+    def check(self, tree: ast.AST, src: str, path: str) -> list:
+        raise NotImplementedError
+
+    def _find(self, path: str, node: ast.AST, message: str) -> LintFinding:
+        return LintFinding(self.name, path, getattr(node, "lineno", 0),
+                           message)
+
+    def applies(self, path: str) -> bool:
+        if self.applies_to is None:
+            return True
+        norm = path.replace("\\", "/")
+        return any(norm.endswith(tail) for tail in self.applies_to)
+
+
+# ---------------------------------------------------------------------------
+# jit reachability (shared by the in-jit rules)
+# ---------------------------------------------------------------------------
+
+
+def _is_jit_decorator(dec: ast.AST) -> bool:
+    """@jax.jit, @jit, @functools.partial(jax.jit, ...), @partial(jit,...)"""
+    def names(node):
+        if isinstance(node, ast.Name):
+            return node.id
+        if isinstance(node, ast.Attribute):
+            return node.attr
+        return ""
+
+    if names(dec) == "jit":
+        return True
+    if isinstance(dec, ast.Call):
+        if names(dec.func) == "jit":
+            return True
+        if names(dec.func) == "partial" and dec.args:
+            return names(dec.args[0]) == "jit"
+    return False
+
+
+def jit_reachable_functions(tree: ast.AST) -> dict:
+    """{name: FunctionDef} of module-level functions reachable from a jit
+    root in the same module (roots included)."""
+    funcs = {n.name: n for n in tree.body
+             if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))}
+    roots = [name for name, fn in funcs.items()
+             if any(_is_jit_decorator(d) for d in fn.decorator_list)]
+    reachable, frontier = set(), list(roots)
+    while frontier:
+        name = frontier.pop()
+        if name in reachable:
+            continue
+        reachable.add(name)
+        # any Name reference counts as an edge: direct calls, and functions
+        # handed to functools.partial / shard_map / jax.lax.cond
+        for node in ast.walk(funcs[name]):
+            if isinstance(node, ast.Name) and node.id in funcs \
+                    and node.id != name:
+                frontier.append(node.id)
+    return {name: funcs[name] for name in reachable}
+
+
+def _attr_tail(node: ast.AST) -> str:
+    return node.attr if isinstance(node, ast.Attribute) else (
+        node.id if isinstance(node, ast.Name) else "")
+
+
+def _expr_touches_device_values(node: ast.AST) -> bool:
+    """Heuristic: the expression contains a jnp./lax./jax. call — i.e. it
+    produces a traced array, so wrapping it in float()/np.asarray() would
+    force a host sync (vs. static host data like plan rows, which is
+    fine)."""
+    for sub in ast.walk(node):
+        if isinstance(sub, ast.Attribute):
+            root = sub
+            while isinstance(root, ast.Attribute):
+                root = root.value
+            if isinstance(root, ast.Name) and root.id in ("jnp", "lax",
+                                                          "jax"):
+                return True
+    return False
+
+
+# ---------------------------------------------------------------------------
+# the rules
+# ---------------------------------------------------------------------------
+
+
+class EquationBranchRule(LintRule):
+    """Drivers and kernels consume ONLY the EquationSpec: no comparisons
+    against equation names and no isinstance checks on concrete equation
+    classes in the slab-path files (DESIGN.md §10 acceptance guard —
+    formerly a regex grep in tests/test_equations.py)."""
+
+    name = "no-equation-branches"
+    applies_to = ("core/fmm.py", "core/parallel_fmm.py", "kernels/ops.py",
+                  "kernels/m2l.py", "kernels/p2p.py")
+    _names = frozenset({"vortex", "laplace", "tracer"})
+
+    def check(self, tree, src, path):
+        out = []
+        for node in ast.walk(tree):
+            if isinstance(node, ast.Compare):
+                sides = [node.left] + list(node.comparators)
+                for s in sides:
+                    if isinstance(s, ast.Constant) and s.value in self._names:
+                        out.append(self._find(
+                            path, node, f"comparison against equation name "
+                            f"{s.value!r}; dispatch through the spec"))
+                        break
+                else:
+                    if any(_attr_tail(s) == "name" and
+                           isinstance(s, ast.Attribute) and
+                           _attr_tail(s.value) == "eq" for s in sides):
+                        out.append(self._find(
+                            path, node, "branch on eq.name; use the spec's "
+                            "hooks instead"))
+            if isinstance(node, ast.Call) and \
+                    _attr_tail(node.func) == "isinstance" and \
+                    len(node.args) == 2:
+                tail = _attr_tail(node.args[1])
+                if tail.endswith("Equation"):
+                    out.append(self._find(
+                        path, node, f"isinstance({tail}) in a driver; "
+                        "the slab path must be spec-generic"))
+        return out
+
+
+class HostSyncInJitRule(LintRule):
+    """No host syncs inside jit-traced functions: ``.item()``,
+    ``.tolist()``, ``jax.device_get``, or ``float()/int()/bool()/
+    np.asarray()`` wrapping a traced expression block the device stream
+    on a host round trip — inside a traced function they either fail at
+    trace time (ConcretizationError) or, worse, silently force the value
+    at a re-trace boundary."""
+
+    name = "no-host-sync-in-jit"
+    _casts = frozenset({"float", "int", "bool", "complex"})
+
+    def check(self, tree, src, path):
+        out = []
+        for fname, fn in jit_reachable_functions(tree).items():
+            for node in ast.walk(fn):
+                if not isinstance(node, ast.Call):
+                    continue
+                tail = _attr_tail(node.func)
+                if tail in ("item", "tolist") and \
+                        isinstance(node.func, ast.Attribute):
+                    out.append(self._find(
+                        path, node, f".{tail}() inside jit-traced "
+                        f"{fname}(): forces a host sync"))
+                elif tail == "device_get":
+                    out.append(self._find(
+                        path, node, f"jax.device_get inside jit-traced "
+                        f"{fname}()"))
+                elif (tail in self._casts or tail == "asarray") and \
+                        node.args and \
+                        _expr_touches_device_values(node.args[0]):
+                    what = tail + "()" if tail in self._casts \
+                        else "np.asarray()"
+                    # np.asarray on *static* host data (plan rows) is fine;
+                    # only traced expressions are findings
+                    if tail == "asarray" and \
+                            _attr_tail(node.func.value
+                                       if isinstance(node.func,
+                                                     ast.Attribute)
+                                       else node.func) in ("jnp", "jax"):
+                        continue        # jnp.asarray stays on device
+                    out.append(self._find(
+                        path, node, f"{what} around a traced expression "
+                        f"inside jit-traced {fname}(): host sync"))
+        return out
+
+
+class StaticArgsRule(LintRule):
+    """Every name in ``static_argnames`` must be a real parameter of the
+    decorated function (jax only errors when the arg is passed, so a
+    renamed parameter silently stops being static), and no parameter
+    carries a mutable (unhashable) default."""
+
+    name = "static-args-sound"
+
+    def _static_argnames(self, fn: ast.FunctionDef):
+        for dec in fn.decorator_list:
+            if not (isinstance(dec, ast.Call) and _is_jit_decorator(dec)):
+                continue
+            for kw in dec.keywords:
+                if kw.arg == "static_argnames":
+                    names = []
+                    for node in ast.walk(kw.value):
+                        if isinstance(node, ast.Constant) and \
+                                isinstance(node.value, str):
+                            names.append(node.value)
+                    return names
+        return None
+
+    def check(self, tree, src, path):
+        out = []
+        for fn in ast.walk(tree):
+            if not isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                continue
+            statics = self._static_argnames(fn)
+            if statics is None:
+                continue
+            params = {a.arg for a in (fn.args.posonlyargs + fn.args.args +
+                                      fn.args.kwonlyargs)}
+            for name in statics:
+                if name not in params:
+                    out.append(self._find(
+                        path, fn, f"static_argnames entry {name!r} is not "
+                        f"a parameter of {fn.name}()"))
+            for arg, default in list(zip(reversed(fn.args.args),
+                                         reversed(fn.args.defaults))) + \
+                    list(zip(fn.args.kwonlyargs, fn.args.kw_defaults)):
+                if default is not None and arg.arg in statics and \
+                        isinstance(default, (ast.List, ast.Dict, ast.Set)):
+                    out.append(self._find(
+                        path, default, f"static arg {arg.arg!r} of "
+                        f"{fn.name}() has an unhashable "
+                        f"{type(default).__name__.lower()} default"))
+        return out
+
+
+class NondeterminismInJitRule(LintRule):
+    """No ambient nondeterminism in jit-traced functions: wall-clock
+    reads (``time.time``, ``datetime.now``, ``perf_counter``) and the
+    legacy global numpy RNG (``np.random.*``) are evaluated ONCE at trace
+    time and then baked into the cached program — silently frozen, and
+    different per retrace."""
+
+    name = "no-nondeterminism-in-jit"
+    _calls = frozenset({"now", "time", "perf_counter", "monotonic",
+                        "time_ns", "utcnow"})
+
+    def check(self, tree, src, path):
+        out = []
+        for fname, fn in jit_reachable_functions(tree).items():
+            for node in ast.walk(fn):
+                if not isinstance(node, ast.Call):
+                    continue
+                tail = _attr_tail(node.func)
+                if tail in self._calls:
+                    out.append(self._find(
+                        path, node, f"{tail}() inside jit-traced "
+                        f"{fname}(): traced once, frozen into the cache"))
+                elif isinstance(node.func, ast.Attribute) and \
+                        _attr_tail(node.func.value) == "random" and \
+                        isinstance(node.func.value, ast.Attribute) and \
+                        _attr_tail(node.func.value.value) == "np":
+                    out.append(self._find(
+                        path, node, f"np.random.{tail}() inside jit-traced "
+                        f"{fname}(): use a jax PRNG key"))
+        return out
+
+
+class RebuildTreeOkRule(LintRule):
+    """``rebuild_tree`` silently drops particles on leaf overflow and
+    reports it only through its third output: every call site must bind
+    all three results and give the ok flag a real name (formerly a regex
+    in tests/test_health.py — the AST form also catches multi-line
+    calls)."""
+
+    name = "rebuild-tree-ok-consumed"
+
+    def check(self, tree, src, path):
+        out = []
+        for node in ast.walk(tree):
+            if not isinstance(node, ast.Assign):
+                continue
+            call = node.value
+            if not (isinstance(call, ast.Call) and
+                    _attr_tail(call.func) == "rebuild_tree"):
+                continue
+            tgt = node.targets[0]
+            names = [e.id for e in tgt.elts
+                     if isinstance(e, ast.Name)] \
+                if isinstance(tgt, ast.Tuple) else []
+            if not isinstance(tgt, ast.Tuple) or len(tgt.elts) != 3:
+                out.append(self._find(
+                    path, node, "rebuild_tree call must unpack "
+                    "(tree, aux, ok)"))
+            elif not names or names[-1] in ("_", "__"):
+                out.append(self._find(
+                    path, node, "rebuild_tree's ok flag is discarded; "
+                    "overflow drops would be silent"))
+        return out
+
+
+DEFAULT_RULES = (EquationBranchRule(), HostSyncInJitRule(),
+                 StaticArgsRule(), NondeterminismInJitRule(),
+                 RebuildTreeOkRule())
+
+
+# ---------------------------------------------------------------------------
+# drivers
+# ---------------------------------------------------------------------------
+
+
+def lint_source(src: str, path: str = "<string>",
+                rules: Iterable[LintRule] = DEFAULT_RULES) -> list:
+    """Lint one source string (tests plant violations this way)."""
+    tree = ast.parse(src)
+    out = []
+    for rule in rules:
+        if rule.applies(path):
+            out.extend(rule.check(tree, src, path))
+    return out
+
+
+def run_lint(root, rules: Iterable[LintRule] = DEFAULT_RULES) -> list:
+    """Lint every ``*.py`` under ``root`` (a directory or a single file).
+    Findings are sorted by (path, line) for stable output."""
+    root = pathlib.Path(root)
+    paths = [root] if root.is_file() else sorted(root.rglob("*.py"))
+    findings = []
+    for p in paths:
+        try:
+            src = p.read_text()
+        except (OSError, UnicodeDecodeError):
+            continue
+        findings.extend(lint_source(src, str(p), rules))
+    return sorted(findings, key=lambda f: (f.path, f.line))
+
+
+def format_findings(findings) -> str:
+    if not findings:
+        return "lint: clean"
+    return "\n".join([f"lint: {len(findings)} finding(s)"] +
+                     [f"  {f}" for f in findings])

@@ -1,0 +1,215 @@
+"""Retrace detector: jit cache-miss accounting with argument blame.
+
+A retrace of ``rk2_step``/``parallel_fmm_evaluate`` costs seconds of
+compile time; an *unexpected* one usually means a static argument stopped
+hashing stably (an EquationSpec losing its name/class identity, a plan
+object rebuilt with a fresh non-equal instance, a shape wobble from a
+re-level that should have been a cache hit).  PR 5 pinned "spec hash
+keeps jit caches honest" and PR 7's ``clean_wall_samples`` assumes
+steady-state steps do NOT recompile — this module makes both checkable.
+
+:class:`RetraceMonitor` wraps one jitted callable and watches its
+``_cache_size()`` across calls.  ``expect_hit``/``expect_miss`` assert
+the caching outcome; on an unexpected miss the monitor diffs the call's
+*signature* — static-argument reprs plus array (shape, dtype) leaves —
+against the previous call's and names exactly the arguments that
+changed.  ``run_session`` scripts the canonical lifecycle (cold compile,
+steady step, replan onto an equal plan, re-level, checkpoint restore,
+equation switch) and returns a report the CLI and CI consume.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+__all__ = ["RetraceMonitor", "RetraceViolation", "SessionEvent",
+           "signature_of", "diff_signatures"]
+
+
+class RetraceViolation(AssertionError):
+    """An unexpected jit cache outcome, with the blamed arguments."""
+
+
+def signature_of(args, kwargs) -> dict:
+    """Flatten a call into {path: descriptor}: arrays become
+    (shape, dtype) — a shape/dtype change legitimately retraces — and
+    everything else (the static args) becomes its repr, the same
+    identity-by-value jit hashes on."""
+    import jax
+
+    import numpy as np
+
+    leaves = jax.tree_util.tree_flatten_with_path((args, kwargs))[0]
+    sig = {}
+    for path, leaf in leaves:
+        key = jax.tree_util.keystr(path)
+        if hasattr(leaf, "shape") and hasattr(leaf, "dtype"):
+            # Host-resident numpy leaves key a SEPARATE jit cache entry
+            # from device arrays with identical avals — tag them so a
+            # restore-from-host retrace blames the right arguments.
+            kind = ":host" if isinstance(leaf, np.ndarray) else ""
+            sig[key] = f"array{tuple(leaf.shape)}:{leaf.dtype}{kind}"
+        else:
+            sig[key] = repr(leaf)
+    return sig
+
+
+def diff_signatures(old: Optional[dict], new: dict) -> list:
+    """Human-readable per-argument differences, ['path: old -> new', ...]."""
+    if old is None:
+        return ["<first call>"]
+    out = []
+    for key in sorted(set(old) | set(new)):
+        a, b = old.get(key, "<absent>"), new.get(key, "<absent>")
+        if a != b:
+            out.append(f"{key}: {a} -> {b}")
+    return out or ["<signatures identical — likely a non-hashable or "
+                   "identity-hashed static argument>"]
+
+
+@dataclasses.dataclass
+class SessionEvent:
+    step: str                  # script step label, e.g. "replan-equal"
+    expected: str              # "hit" | "miss"
+    got: str
+    blame: list                # argument diffs when got == "miss"
+
+    @property
+    def ok(self) -> bool:
+        return self.expected == self.got
+
+    def __str__(self):
+        state = "OK  " if self.ok else "FAIL"
+        extra = f" blame: {'; '.join(self.blame)}" if (
+            self.blame and not self.ok) else ""
+        return f"[{state}] {self.step}: expected {self.expected}, " \
+               f"got {self.got}{extra}"
+
+
+class RetraceMonitor:
+    """Watch one jitted callable's compile cache across a session."""
+
+    def __init__(self, jitted: Callable, name: str = ""):
+        if not hasattr(jitted, "_cache_size"):
+            raise TypeError(f"{name or jitted!r} is not a jitted function "
+                            "(no _cache_size); wrap with jax.jit first")
+        self.fn = jitted
+        self.name = name or getattr(jitted, "__name__", "jitted")
+        self.events: list = []
+        self._last_sig: Optional[dict] = None
+
+    @property
+    def cache_size(self) -> int:
+        return self.fn._cache_size()
+
+    def call(self, *args, expect: Optional[str] = None, step: str = "call",
+             strict: bool = True, **kwargs):
+        """Call through, recording whether the cache grew.  ``expect`` is
+        "hit"/"miss"/None; a violated expectation raises
+        :class:`RetraceViolation` (``strict=False`` records it only)."""
+        before = self.cache_size
+        out = self.fn(*args, **kwargs)
+        got = "miss" if self.cache_size > before else "hit"
+        sig = signature_of(args, kwargs)
+        blame = diff_signatures(self._last_sig, sig) if got == "miss" else []
+        self._last_sig = sig
+        ev = SessionEvent(step=step, expected=expect or got, got=got,
+                          blame=blame)
+        self.events.append(ev)
+        if strict and expect is not None and not ev.ok:
+            raise RetraceViolation(
+                f"{self.name}: unexpected {got} at step {step!r} "
+                f"(cache {before} -> {self.cache_size}); "
+                f"offending arguments: {'; '.join(blame) or 'none changed'}")
+        return out
+
+    def expect_hit(self, *args, step: str = "hit", **kwargs):
+        return self.call(*args, expect="hit", step=step, **kwargs)
+
+    def expect_miss(self, *args, step: str = "miss", **kwargs):
+        return self.call(*args, expect="miss", step=step, **kwargs)
+
+    @property
+    def ok(self) -> bool:
+        return all(e.ok for e in self.events)
+
+    def report(self) -> str:
+        head = f"retrace monitor [{self.name}]: " + \
+               ("OK" if self.ok else "VIOLATIONS")
+        return "\n".join([head] + [f"  {e}" for e in self.events])
+
+
+def run_session(level: int = 3, p: int = 4, n: int = 400) -> list:
+    """The scripted lifecycle, serial mesh (the CLI's retrace section).
+
+    Steps and their expectations:
+
+    * cold ``rk2_step``                         -> miss (first compile)
+    * steady second step                        -> hit
+    * replan onto an EQUAL plan (fresh object)  -> hit  (plans hash by value)
+    * re-level (tree shape changes)             -> miss (legitimate)
+    * checkpoint restore (same shapes)          -> hit
+    * ``parallel_fmm_evaluate`` equation switch -> miss, then hit both ways
+      (specs hash by name+class — PR 5's "spec hash keeps jit caches
+      honest")
+
+    Returns the combined event list; any ``not ev.ok`` entry is a finding.
+    """
+    import numpy as np
+
+    from repro.core import equations as eqs
+    from repro.core import parallel_fmm as pf
+    from repro.core import stepper as stp
+    from repro.core.cost_model import ModelParams
+    from repro.core.plan import plan_from_counts
+    from repro.core.quadtree import build_tree
+
+    rng = np.random.default_rng(0)
+    pos = rng.uniform(0.05, 0.95, size=(n, 2))
+    gamma = rng.normal(size=n)
+    tree, index = build_tree(pos, gamma, level, sigma=0.02)
+    params = ModelParams(level=level, cut=2, p=p, slots=tree.slots)
+    plan = plan_from_counts(index.counts, params, 1, method="model")
+
+    mon = RetraceMonitor(stp.rk2_step, "rk2_step")
+    mon.call(tree, 1e-4, p=p, plan=plan, expect="miss", step="cold-compile",
+             strict=False)
+    mon.call(tree, 1e-4, p=p, plan=plan, expect="hit", step="steady-step",
+             strict=False)
+    # replan: a fresh plan object with identical content must be a HIT —
+    # plans are value-hashed jit keys, not identity-hashed
+    plan2 = plan_from_counts(index.counts, params, 1, method="model")
+    mon.call(tree, 1e-4, p=p, plan=plan2, expect="hit", step="replan-equal",
+             strict=False)
+    # re-level: the tree's static shape changes — a legitimate retrace
+    tree_up, index_up = build_tree(pos, gamma, level + 1, sigma=0.02)
+    params_up = ModelParams(level=level + 1, cut=2, p=p, slots=tree_up.slots)
+    plan_up = plan_from_counts(index_up.counts, params_up, 1, method="model")
+    mon.call(tree_up, 1e-4, p=p, plan=plan_up, expect="miss", step="re-level",
+             strict=False)
+    # checkpoint restore: same shapes, same statics — must be a hit.
+    # The host round-trip (np.asarray = "read from disk") must be
+    # followed by a device put: raw numpy leaves key a SEPARATE jit
+    # cache entry from device arrays of identical aval, so restoring
+    # straight from host buffers silently recompiles every entry point.
+    import jax.numpy as jnp
+    host = {k: np.asarray(getattr(tree, k)) for k in ("z", "q", "mask")}
+    restored = tree.__class__(z=jnp.asarray(host["z"]),
+                              q=jnp.asarray(host["q"]),
+                              mask=jnp.asarray(host["mask"]),
+                              level=tree.level, sigma=tree.sigma)
+    mon.call(restored, 1e-4, p=p, plan=plan, expect="hit",
+             step="checkpoint-restore", strict=False)
+
+    # equation switch on the evaluation entry point
+    ltree, _ = build_tree(pos, gamma, level, sigma=0.02,
+                          charge_scale=eqs.LAPLACE.charge_scale)
+    mon2 = RetraceMonitor(pf.parallel_fmm_evaluate, "parallel_fmm_evaluate")
+    mon2.call(tree, p, expect="miss", step="vortex-cold", strict=False)
+    mon2.call(ltree, p, eq=eqs.LAPLACE, expect="miss", step="switch-laplace",
+              strict=False)
+    mon2.call(tree, p, expect="hit", step="switch-back-vortex", strict=False)
+    # a re-built spec INSTANCE equal to the registered one must also hit
+    mon2.call(ltree, p, eq=eqs.LaplaceEquation(), expect="hit",
+              step="fresh-spec-instance", strict=False)
+    return mon.events + mon2.events

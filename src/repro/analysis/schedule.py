@@ -1,0 +1,536 @@
+"""SPMD collective-schedule verifier: one program, every device id.
+
+Under ``shard_map`` all devices run ONE lowered module; per-device
+divergence can only enter through values derived from
+``stablehlo.partition_id`` / ``replica_id`` (that is how ``lax.cond`` on
+``axis_index`` lowers: a scalar chain ``partition_id -> divide ->
+remainder -> convert -> compare -> convert`` selecting a
+``stablehlo.case`` region).  A branch that makes one device skip a
+collective the others issue is the distributed-hang analog of a data
+race: every other device blocks in the collective forever, and nothing
+at trace time says so.
+
+This module makes that property checkable statically:
+
+1. parse the StableHLO module text into a region tree (functions,
+   ``case``/``if`` regions, ``while`` cond/body, ``func.call`` edges);
+2. for each device id, walk the tree with a tiny scalar evaluator —
+   constants, partition/replica id, integer arithmetic, compares,
+   converts — resolving every device-dependent branch;
+3. record the sequence of collective *events* (kind, result shape,
+   source-target pairs, replica groups, channel id) each device issues;
+4. verify the per-device sequences are mutually identical, and that each
+   event is internally sane (permute pairs have unique sources/targets
+   in range, replica groups are disjoint).
+
+``while`` bodies execute a data-dependent number of times, but the trip
+computation itself is shared by all devices, so body events are emitted
+once with ``in_loop=True`` — consistent bodies imply consistent
+execution.  A ``case`` whose selector the evaluator cannot resolve is
+accepted only if all its regions issue identical sequences; otherwise it
+is reported as an unresolvable divergence (conservative: no silent pass).
+
+Scope: this is a TRACE-level verifier on the pre-XLA module.  XLA will
+not introduce cross-partition divergence on its own (SPMD compilation is
+one program), so lowered-level consistency is the property that matters.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+from typing import Optional
+
+__all__ = ["CollectiveEvent", "ScheduleReport", "parse_module",
+           "extract_schedule", "verify_schedule", "verify_entry",
+           "COLLECTIVE_OPS"]
+
+COLLECTIVE_OPS = {
+    "stablehlo.collective_permute": "collective_permute",
+    "stablehlo.all_gather": "all_gather",
+    "stablehlo.all_reduce": "all_reduce",
+    "stablehlo.reduce_scatter": "reduce_scatter",
+    "stablehlo.all_to_all": "all_to_all",
+    "stablehlo.collective_broadcast": "collective_broadcast",
+}
+
+_FUNC_RE = re.compile(r"^\s*func\.func\s+(?:public\s+|private\s+)?"
+                      r"@([\w.\-$]+)\s*\((.*?)\)")
+_STMT_RE = re.compile(r'^\s*(?:(%[\w#:,.\s]+?)\s*=\s*)?'
+                      r'"?([\w.]+)"?\s*(.*)$')
+_ARG_RE = re.compile(r"(%[\w.\-]+)\s*:")
+_OPERAND_RE = re.compile(r"%[\w.\-]+(?:#\d+)?")
+_PAIRS_RE = re.compile(r"source_target_pairs\s*=\s*dense<(.*?)>")
+_GROUPS_RE = re.compile(r"replica_groups\s*=\s*dense<(.*?)>")
+_CHANNEL_RE = re.compile(r"channel_handle<handle\s*=\s*(\d+)")
+_RESULT_TY_RE = re.compile(r"->\s*(.+?)\s*$")
+_DENSE_SCALAR_RE = re.compile(r"dense<(-?\d+)>")
+_COMPARE_RE = re.compile(r"compare\s+(\w+)\s*,")
+_NPART_RE = re.compile(r"mhlo\.num_partitions\s*=\s*(\d+)")
+_NREPL_RE = re.compile(r"mhlo\.num_replicas\s*=\s*(\d+)")
+
+
+@dataclasses.dataclass(frozen=True)
+class CollectiveEvent:
+    """One collective issued by one device, in issue order."""
+    kind: str                              # e.g. "collective_permute"
+    shape: str                             # result type text
+    pairs: Optional[tuple] = None          # ((src, tgt), ...) for permutes
+    groups: Optional[tuple] = None         # replica groups, as tuples
+    channel: Optional[int] = None
+    in_loop: bool = False                  # emitted from a while body
+
+    def brief(self) -> str:
+        bits = [self.kind]
+        if self.channel is not None:
+            bits.append(f"ch={self.channel}")
+        if self.pairs is not None:
+            bits.append(f"pairs={list(map(list, self.pairs))}")
+        if self.groups is not None:
+            bits.append(f"groups={list(map(list, self.groups))}")
+        if self.in_loop:
+            bits.append("in_loop")
+        return " ".join(bits) + f" {self.shape}"
+
+
+@dataclasses.dataclass
+class Stmt:
+    results: Optional[str]      # lhs text ("%0" / "%0:2") or None
+    op: str                     # "stablehlo.add", "func.call", ...
+    line: str                   # full stripped text of the first line
+    regions: list               # list of blocks (lists of Stmt)
+
+
+# ---------------------------------------------------------------------------
+# parsing
+# ---------------------------------------------------------------------------
+
+
+def parse_module(text: str) -> dict:
+    """StableHLO text -> {function name: block}, block = [Stmt, ...]."""
+    lines = text.splitlines()
+    funcs: dict = {}
+    i = 0
+    while i < len(lines):
+        m = _FUNC_RE.match(lines[i])
+        if m:
+            name = m.group(1)
+            args = _ARG_RE.findall(m.group(2))
+            block, i = _parse_block(lines, i + 1)
+            funcs[name] = {"args": args, "block": block}
+            # _parse_block leaves i at the closing "}" of the function
+            i += 1
+            continue
+        i += 1
+    return funcs
+
+
+def _parse_block(lines, i):
+    """Parse statements until a line starting with '}' (not consumed)."""
+    block = []
+    while i < len(lines):
+        s = lines[i].strip()
+        if not s or s.startswith("^bb"):    # region arg header: skip
+            i += 1
+            continue
+        if s.startswith("}"):
+            return block, i
+        stmt, i = _parse_stmt(lines, i)
+        if stmt is not None:
+            block.append(stmt)
+    return block, i
+
+
+def _parse_stmt(lines, i):
+    s = lines[i].strip()
+    m = _STMT_RE.match(s)
+    if not m:
+        return None, i + 1
+    results, op, _rest = m.group(1), m.group(2), m.group(3)
+    stmt = Stmt(results=results, op=op, line=s, regions=[])
+    i += 1
+    if op == "stablehlo.while":
+        # form:  %r = stablehlo.while(...) : types \n cond { ... } do { ... }
+        if i < len(lines) and lines[i].strip().startswith("cond"):
+            cond, i = _parse_block(lines, i + 1)
+            stmt.regions.append(cond)
+            # at "} do {"
+            if i < len(lines) and "do" in lines[i]:
+                body, i = _parse_block(lines, i + 1)
+                stmt.regions.append(body)
+                i += 1                       # consume final "}"
+        return stmt, i
+    if s.endswith("({"):
+        # region list:  "op"(...) ({ ... }, { ... }) : type
+        while True:
+            region, i = _parse_block(lines, i)
+            stmt.regions.append(region)
+            close = lines[i].strip() if i < len(lines) else "})"
+            i += 1
+            if close.startswith("}, {") or close == "}, {":
+                continue
+            break                            # "}) : ..." closes the op
+        # the result type rides the closing line; keep it reachable
+        if i - 1 < len(lines):
+            stmt.line += " " + lines[i - 1].strip()
+        return stmt, i
+    if s.endswith("{"):
+        # generic single-region op (reduce with block, sort, scatter, ...)
+        region, i = _parse_block(lines, i)
+        stmt.regions.append(region)
+        i += 1                               # consume "}" / "}) : ..."
+        return stmt, i
+    return stmt, i
+
+
+# ---------------------------------------------------------------------------
+# per-device scalar evaluation + event extraction
+# ---------------------------------------------------------------------------
+
+
+def _parse_dense_nested(text: str):
+    """'[[0, 1], [1, 2]]' or '0' -> tuple of tuples (rows)."""
+    text = text.strip()
+    try:
+        val = json.loads(text)
+    except ValueError:
+        return None
+    if isinstance(val, (int, float)):
+        return ((int(val),),)
+    if val and not isinstance(val[0], list):
+        return (tuple(int(x) for x in val),)
+    return tuple(tuple(int(x) for x in row) for row in val)
+
+
+_ARITH = {
+    "stablehlo.add": lambda a, b: a + b,
+    "stablehlo.subtract": lambda a, b: a - b,
+    "stablehlo.multiply": lambda a, b: a * b,
+    "stablehlo.divide": lambda a, b: a // b if b else None,
+    "stablehlo.remainder": lambda a, b: a % b if b else None,
+    "stablehlo.and": lambda a, b: a & b,
+    "stablehlo.or": lambda a, b: a | b,
+    "stablehlo.xor": lambda a, b: a ^ b,
+    "stablehlo.maximum": max,
+    "stablehlo.minimum": min,
+}
+
+_CMP = {
+    "EQ": lambda a, b: a == b, "NE": lambda a, b: a != b,
+    "LT": lambda a, b: a < b, "LE": lambda a, b: a <= b,
+    "GT": lambda a, b: a > b, "GE": lambda a, b: a >= b,
+}
+
+
+class _Evaluator:
+    def __init__(self, funcs: dict, device: int, npartitions: int,
+                 nreplicas: int):
+        self.funcs = funcs
+        self.device = device
+        self.npartitions = npartitions
+        self.nreplicas = nreplicas
+        self.events: list = []
+        self.problems: list = []
+
+    # -- helpers ------------------------------------------------------------
+
+    def _operands(self, stmt: Stmt):
+        """SSA operand ids on the statement's rhs, in order."""
+        rhs = stmt.line
+        if stmt.results:
+            rhs = rhs.split("=", 1)[1]
+        # drop the trailing type annotation; operands precede it
+        rhs = rhs.split(" : ")[0]
+        return _OPERAND_RE.findall(rhs)
+
+    def _bind_results(self, env, stmt: Stmt, values):
+        if not stmt.results:
+            return
+        base = stmt.results.strip()
+        if ":" in base:                       # tuple result "%0:2"
+            rid, n = base.split(":")
+            n = int(n)
+            for k in range(n):
+                env[f"{rid}#{k}"] = values[k] if values and k < len(values) \
+                    else None
+            env[rid] = None
+        else:
+            env[base] = values[0] if values else None
+
+    def _event_from(self, stmt: Stmt, in_loop: bool) -> CollectiveEvent:
+        line = stmt.line
+        pairs = groups = None
+        pm = _PAIRS_RE.search(line)
+        if pm:
+            pairs = _parse_dense_nested(pm.group(1))
+            pairs = tuple(tuple(p) for p in pairs) if pairs else None
+        gm = _GROUPS_RE.search(line)
+        if gm:
+            groups = _parse_dense_nested(gm.group(1))
+        cm = _CHANNEL_RE.search(line)
+        tm = _RESULT_TY_RE.search(line)
+        return CollectiveEvent(
+            kind=COLLECTIVE_OPS[stmt.op],
+            shape=tm.group(1) if tm else "?",
+            pairs=pairs, groups=groups,
+            channel=int(cm.group(1)) if cm else None,
+            in_loop=in_loop)
+
+    # -- execution ----------------------------------------------------------
+
+    def run(self, entry: str = "main"):
+        if entry not in self.funcs:
+            # single-function modules (planted fixtures) may name it anything
+            entry = next(iter(self.funcs))
+        f = self.funcs[entry]
+        self._run_block(f["block"], {a: None for a in f["args"]},
+                        in_loop=False)
+        return self.events
+
+    def _run_block(self, block, env, in_loop):
+        returned = None
+        for stmt in block:
+            returned = self._run_stmt(stmt, env, in_loop)
+        return returned
+
+    def _run_stmt(self, stmt: Stmt, env, in_loop):
+        op = stmt.op
+        if op in COLLECTIVE_OPS:
+            self.events.append(self._event_from(stmt, in_loop))
+            self._bind_results(env, stmt, [None])
+            return None
+        if op in ("return", "stablehlo.return", "func.return"):
+            return [env.get(o) for o in self._operands(stmt)]
+        if op == "stablehlo.constant":
+            sm = _DENSE_SCALAR_RE.search(stmt.line)
+            self._bind_results(env, stmt,
+                               [int(sm.group(1))] if sm else [None])
+            return None
+        if op == "stablehlo.partition_id":
+            self._bind_results(
+                env, stmt, [self.device if self.npartitions > 1 else 0])
+            return None
+        if op == "stablehlo.replica_id":
+            self._bind_results(
+                env, stmt, [self.device if self.nreplicas > 1 else 0])
+            return None
+        if op in ("stablehlo.convert", "stablehlo.bitcast_convert",
+                  "stablehlo.reshape", "stablehlo.not"):
+            ops_ = self._operands(stmt)
+            v = env.get(ops_[0]) if ops_ else None
+            if op == "stablehlo.not" and v is not None:
+                v = 0 if v else 1
+            self._bind_results(env, stmt, [v])
+            return None
+        if op in _ARITH:
+            ops_ = self._operands(stmt)
+            a = env.get(ops_[0]) if len(ops_) > 0 else None
+            b = env.get(ops_[1]) if len(ops_) > 1 else None
+            v = _ARITH[op](a, b) if a is not None and b is not None else None
+            self._bind_results(env, stmt, [v])
+            return None
+        if op == "stablehlo.compare":
+            dm = _COMPARE_RE.search(stmt.line)
+            ops_ = self._operands(stmt)
+            v = None
+            if dm and len(ops_) >= 2:
+                a, b = env.get(ops_[0]), env.get(ops_[1])
+                if a is not None and b is not None:
+                    v = int(_CMP[dm.group(1)](a, b))
+            self._bind_results(env, stmt, [v])
+            return None
+        if op == "stablehlo.select":
+            ops_ = self._operands(stmt)
+            v = None
+            if len(ops_) == 3:
+                p = env.get(ops_[0])
+                if p is not None:
+                    v = env.get(ops_[1] if p else ops_[2])
+            self._bind_results(env, stmt, [v])
+            return None
+        if op in ("stablehlo.case", "stablehlo.if"):
+            self._run_branch(stmt, env, in_loop)
+            return None
+        if op == "stablehlo.while":
+            # regions: [cond, body]; trip is data-dependent but shared by
+            # all devices -> one symbolic pass, events tagged in_loop
+            for region in stmt.regions:
+                self._run_block(region, dict(env), in_loop=True)
+            self._bind_results(env, stmt, None)
+            return None
+        if op in ("call", "func.call"):
+            cm = re.search(r"@([\w.\-$]+)", stmt.line)
+            callee = self.funcs.get(cm.group(1)) if cm else None
+            if callee is not None:
+                args = self._operands(stmt)
+                cenv = {a: env.get(v) for a, v in zip(callee["args"], args)}
+                for a in callee["args"]:
+                    cenv.setdefault(a, None)
+                ret = self._run_block(callee["block"], cenv, in_loop)
+                self._bind_results(env, stmt, ret)
+            else:
+                self._bind_results(env, stmt, None)
+            return None
+        # any other op: run regions (reduce/sort bodies may not contain
+        # collectives, but be conservative), result unknown
+        for region in stmt.regions:
+            self._run_block(region, dict(env), in_loop)
+        self._bind_results(env, stmt, None)
+        return None
+
+    def _run_branch(self, stmt: Stmt, env, in_loop):
+        ops_ = self._operands(stmt)
+        sel = env.get(ops_[0]) if ops_ else None
+        nreg = len(stmt.regions)
+        if not nreg:
+            return
+        if op_is_if := (stmt.op == "stablehlo.if"):
+            # region 0 = true branch
+            idx = None if sel is None else (0 if sel else 1)
+        else:
+            # case: out-of-range index executes the last region
+            idx = None if sel is None else min(max(sel, 0), nreg - 1)
+        if idx is not None:
+            self._run_block(stmt.regions[idx], dict(env), in_loop)
+            return
+        # selector unresolved: all regions must issue identical sequences
+        seqs = []
+        for region in stmt.regions:
+            sub = _Evaluator(self.funcs, self.device, self.npartitions,
+                             self.nreplicas)
+            sub._run_block(region, dict(env), in_loop)
+            seqs.append(sub.events)
+            self.problems.extend(sub.problems)
+        if any(s != seqs[0] for s in seqs[1:]):
+            self.problems.append(
+                f"unresolvable divergent {'if' if op_is_if else 'case'}: "
+                f"selector {ops_[0] if ops_ else '?'} is not statically "
+                f"known and its regions issue different collective "
+                f"sequences ({[len(s) for s in seqs]} events per region)")
+        self.events.extend(seqs[0])
+
+
+# ---------------------------------------------------------------------------
+# public API
+# ---------------------------------------------------------------------------
+
+
+def extract_schedule(text: str, device: int,
+                     npartitions: Optional[int] = None) -> tuple:
+    """The collective sequence device ``device`` issues, plus problems
+    local to that device's evaluation."""
+    funcs = parse_module(text)
+    npart = npartitions
+    if npart is None:
+        m = _NPART_RE.search(text)
+        npart = int(m.group(1)) if m else 1
+    rm = _NREPL_RE.search(text)
+    nrepl = int(rm.group(1)) if rm else 1
+    ev = _Evaluator(funcs, device, npart, nrepl)
+    ev.run()
+    return ev.events, ev.problems
+
+
+@dataclasses.dataclass
+class ScheduleReport:
+    ok: bool
+    ndev: int
+    schedules: list            # per-device [CollectiveEvent, ...]
+    problems: list             # human-readable findings
+    label: str = ""
+
+    def diff_text(self) -> str:
+        head = f"schedule report [{self.label}] ndev={self.ndev}: " + \
+               ("CONSISTENT" if self.ok else "DIVERGENT")
+        lines = [head]
+        lines.extend(f"  problem: {p}" for p in self.problems)
+        counts = {len(s) for s in self.schedules}
+        if not self.ok or len(counts) > 1:
+            for d, seq in enumerate(self.schedules):
+                lines.append(f"  device {d}: {len(seq)} collectives")
+                for k, e in enumerate(seq):
+                    lines.append(f"    [{k}] {e.brief()}")
+        elif self.schedules:
+            seq = self.schedules[0]
+            lines.append(f"  all devices: {len(seq)} collectives")
+            for k, e in enumerate(seq):
+                lines.append(f"    [{k}] {e.brief()}")
+        return "\n".join(lines)
+
+
+def _check_event_sanity(e: CollectiveEvent, ndev: int, where: str) -> list:
+    problems = []
+    if e.pairs is not None:
+        srcs = [p[0] for p in e.pairs]
+        tgts = [p[1] for p in e.pairs]
+        if len(set(srcs)) != len(srcs):
+            problems.append(f"{where}: duplicate sources in permute pairs "
+                            f"{list(map(list, e.pairs))}")
+        if len(set(tgts)) != len(tgts):
+            problems.append(f"{where}: duplicate targets in permute pairs "
+                            f"{list(map(list, e.pairs))}")
+        bad = [d for d in srcs + tgts if not 0 <= d < ndev]
+        if bad:
+            problems.append(f"{where}: device ids {sorted(set(bad))} out of "
+                            f"range [0, {ndev})")
+    if e.groups is not None:
+        seen: set = set()
+        for g in e.groups:
+            dup = seen.intersection(g)
+            if dup:
+                problems.append(f"{where}: replica groups overlap on "
+                                f"{sorted(dup)}")
+            seen.update(g)
+        bad = [d for d in seen if d >= 0 and not d < ndev]
+        if bad:
+            problems.append(f"{where}: replica-group ids {sorted(bad)} out "
+                            f"of range [0, {ndev})")
+    return problems
+
+
+def verify_schedule(text: str, ndev: Optional[int] = None,
+                    label: str = "") -> ScheduleReport:
+    """Statically verify the per-device collective schedules of one
+    lowered module are mutually consistent and internally sane."""
+    if ndev is None:
+        m = _NPART_RE.search(text)
+        rm = _NREPL_RE.search(text)
+        ndev = max(int(m.group(1)) if m else 1,
+                   int(rm.group(1)) if rm else 1)
+    schedules, problems = [], []
+    for d in range(ndev):
+        seq, probs = extract_schedule(text, d, npartitions=ndev)
+        schedules.append(seq)
+        problems.extend(f"device {d}: {p}" for p in probs)
+    # cross-device consistency: every device must issue the same sequence
+    ref = schedules[0]
+    for d, seq in enumerate(schedules[1:], start=1):
+        if seq == ref:
+            continue
+        n = min(len(ref), len(seq))
+        k = next((i for i in range(n) if ref[i] != seq[i]), n)
+        if k < n:
+            problems.append(
+                f"device {d} diverges from device 0 at event {k}: "
+                f"[{ref[k].brief()}] vs [{seq[k].brief()}]")
+        else:
+            longer, who = (ref, 0) if len(ref) > len(seq) else (seq, d)
+            problems.append(
+                f"device {d} issues {len(seq)} collectives, device 0 "
+                f"issues {len(ref)}; first unmatched: "
+                f"[{longer[k].brief()}] only on device {who} — the other "
+                f"devices would block in this collective forever")
+    # intra-event sanity (sequence-consistent events are identical across
+    # devices, so checking device 0's is enough)
+    for k, e in enumerate(ref):
+        problems.extend(_check_event_sanity(e, ndev, f"event {k}"))
+    return ScheduleReport(ok=not problems, ndev=ndev, schedules=schedules,
+                          problems=problems, label=label)
+
+
+def verify_entry(fn, *args, ndev: Optional[int] = None, label: str = "",
+                 **kwargs) -> ScheduleReport:
+    """Lower a jitted entry point and verify its collective schedules."""
+    text = fn.lower(*args, **kwargs).as_text()
+    return verify_schedule(text, ndev=ndev,
+                           label=label or getattr(fn, "__name__", "entry"))

@@ -588,6 +588,16 @@ def parallel_fmm_p2p_prefetch(tree: Tree, mesh: Optional[Mesh] = None,
     return fn(z_sh, q_sh, m_sh)
 
 
+# Named jitted entry points the static-analysis layer lowers and checks
+# (repro/analysis: trace contracts, SPMD schedule verifier, retrace
+# detector).  Keys are stable names — contracts reference entry points by
+# name, so renaming a function here is an API change, not a refactor.
+TRACE_ENTRY_POINTS = {
+    "parallel_fmm_evaluate": parallel_fmm_evaluate,
+    "parallel_fmm_p2p_prefetch": parallel_fmm_p2p_prefetch,
+}
+
+
 def parallel_fmm_velocity(tree: Tree, p: int, mesh: Optional[Mesh] = None,
                           mesh_axis: str = "data",
                           use_kernels: bool = False,

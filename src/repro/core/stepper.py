@@ -219,6 +219,13 @@ def rk2_step(tree: Tree, dt, payload=None, *, p: int, mesh=None,
     return t_new, aux, ok1 & ok2, occ, health
 
 
+# Named jitted entry point for the static-analysis layer (repro/analysis):
+# contracts lower "rk2_step" by name (sentinel-free when guard=False, no
+# donated buffers — the recovery ladder retries from the intact pre-step
+# tree), and the retrace detector monitors its compile cache.
+TRACE_ENTRY_POINTS = {"rk2_step": rk2_step}
+
+
 @dataclasses.dataclass(frozen=True)
 class RecoveryPolicy:
     """The recovery ladder's knobs, in escalation order (DESIGN.md §11)."""

@@ -73,23 +73,35 @@ def _bytes_of(shapes) -> int:
 
 
 class ModuleStats:
-    __slots__ = ("flops", "bytes", "coll", "coll_count", "by_op")
+    __slots__ = ("flops", "bytes", "coll", "coll_count", "coll_counts",
+                 "by_op", "op_count")
 
     def __init__(self):
         self.flops = 0.0
         self.bytes = 0.0
         self.coll = defaultdict(float)
-        self.coll_count = 0
+        self.coll_count = 0.0
+        self.coll_counts = defaultdict(float)  # instance count per kind
         self.by_op = defaultdict(float)   # bytes per op kind (diagnostics)
+        self.op_count = defaultdict(float)  # instance count per op kind
 
     def add(self, other, mult: float = 1.0):
+        # EVERY additive stat is scaled by the while trip count, counts
+        # included: a collective inside a known-trip-count loop body
+        # executes ``mult`` times per module execution (regression-pinned
+        # in tests/test_analysis.py — the pre-fix code under-counted
+        # ``coll_count`` and the per-op diagnostics by the trip count).
         self.flops += other.flops * mult
         self.bytes += other.bytes * mult
         for k, v in other.coll.items():
             self.coll[k] += v * mult
-        self.coll_count += other.coll_count
+        self.coll_count += other.coll_count * mult
+        for k, v in other.coll_counts.items():
+            self.coll_counts[k] += v * mult
         for k, v in other.by_op.items():
             self.by_op[k] += v * mult
+        for k, v in other.op_count.items():
+            self.op_count[k] += v * mult
 
 
 def analyze_hlo(hlo_text: str) -> dict:
@@ -162,8 +174,10 @@ def analyze_hlo(hlo_text: str) -> dict:
                     nbytes = res_bytes * (max(gsize, 1) if kind == "reduce-scatter" else 1)
                     st.coll[kind] += nbytes
                     st.coll_count += 1
+                    st.coll_counts[kind] += 1
                     st.bytes += res_bytes
                     st.by_op["collective"] += res_bytes
+                    st.op_count["collective"] += 1
                     is_coll = True
                     break
             if is_coll:
@@ -195,6 +209,7 @@ def analyze_hlo(hlo_text: str) -> dict:
             if opname in _MATERIALIZING:
                 st.bytes += res_bytes
                 st.by_op[opname] += res_bytes
+                st.op_count[opname] += 1
             for callee in _CALL_RE.findall(s):
                 calls[cname].append(callee)
             # also capture cond constants for trip fallback
@@ -226,8 +241,10 @@ def analyze_hlo(hlo_text: str) -> dict:
         "bytes": st.bytes,
         "collective_bytes": float(sum(st.coll.values())),
         "per_kind": dict(st.coll),
-        "count": st.coll_count,
+        "count": int(round(st.coll_count)),
+        "count_per_kind": {k: int(round(v)) for k, v in st.coll_counts.items()},
         "bytes_by_op": dict(st.by_op),
+        "count_by_op": {k: int(round(v)) for k, v in st.op_count.items()},
     }
 
 
@@ -247,6 +264,7 @@ def parse_collectives(hlo_text: str) -> dict:
 
 
 _SSA_DEF_RE = re.compile(r'^\s*(%[\w#]+(?::\d+)?)\s*=\s*"?stablehlo\.(\w+)"?')
+_FUNC_RE = re.compile(r"^\s*func\.func\b")
 
 
 def collective_issue_depths(
@@ -268,6 +286,20 @@ def collective_issue_depths(
     Depths count only ``compute`` ops (default: dot_general /
     convolution — the FLOP carriers); elementwise glue is free to
     reorder and would only add noise.
+
+    Hardened corner cases (unit-pinned in tests/test_analysis.py):
+
+      * tuple-result collectives (``%5:2 = "stablehlo.all_gather" ...``)
+        pin uses of both ``%5`` and the indexed ``%5#k`` forms;
+      * SSA ids are FUNCTION-scoped: the use scan stops at the enclosing
+        function's end, so an unrelated ``%5`` in a later function body
+        can never terminate the window early (and a dead result's depth
+        counts only to its own function's end);
+      * a use on the same line as another tracked collective's def (the
+        ``%7 = collective_permute(%5)`` chain) terminates the window
+        BEFORE that def's own window opens, keeping windows independent;
+      * compute ops on the first-use line itself do not count toward the
+        depth (the consumer is the window's end, not part of it).
     """
     lines = stablehlo_text.splitlines()
     depths: dict = {k: [] for k in collectives}
@@ -278,11 +310,15 @@ def collective_issue_depths(
         rid, op = m.group(1), m.group(2)
         if op not in collectives:
             continue
-        # strip a tuple-index suffix so %5:2 pins uses of %5
-        rid = rid.split(":")[0]
-        use_re = re.compile(re.escape(rid) + r"\b")
+        # strip tuple-arity (%5:2) / tuple-index (%5#0) suffixes so the
+        # base id pins uses of every result component
+        rid = rid.split(":")[0].split("#")[0]
+        # %5 or %5#k, not %50 (\b guards the id; #\d+ covers tuple uses)
+        use_re = re.compile(re.escape(rid) + r"(?:#\d+)?\b")
         depth = 0
         for later in lines[i + 1:]:
+            if _FUNC_RE.match(later):
+                break               # SSA scope ends with the function
             # search only the rhs so another def of a same-prefix id
             # (there are none in SSA, but be safe) can't false-match
             rhs = later.split("=", 1)[-1]

@@ -1,0 +1,467 @@
+"""Unit pins for the static-analysis subsystem (src/repro/analysis).
+
+Four groups:
+
+* ``launch/hlo_analysis`` hardening — the while-body trip-count
+  regression (``ModuleStats.add`` must multiply collective COUNTS, not
+  just bytes) and the ``collective_issue_depths`` corner cases
+  (tuple-result collectives, function-scoped SSA ids, same-line
+  def+use chains, compute on the use line);
+* the trace-contract catalog — every contract class gets at least one
+  planted-violation negative test via ``Lowered.from_text``, plus a
+  real positive control (a genuinely donated jit buffer must trip
+  ``not_donated``);
+* the AST lint rules — planted good/bad snippets through
+  ``lint_source``, and the real tree must lint clean;
+* the retrace monitor — miss/hit accounting against a live jit cache,
+  argument blame on an unexpected miss, and the host-resident-leaf tag
+  that names the restore-without-device-put foot-gun.
+"""
+import pathlib
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.analysis import contracts as C
+from repro.analysis import lint as L
+from repro.analysis.retrace import (RetraceMonitor, RetraceViolation,
+                                    diff_signatures, signature_of)
+from repro.launch.hlo_analysis import analyze_hlo, collective_issue_depths
+
+SRC_REPRO = pathlib.Path(__file__).resolve().parents[1] / "src" / "repro"
+
+
+# ---------------------------------------------------------------------------
+# hlo_analysis: while-body trip multiplication of collective counts
+# ---------------------------------------------------------------------------
+
+# Optimized-HLO skeleton: one collective-permute inside a while body whose
+# backend_config pins a known trip count of 7.  The pre-fix ModuleStats.add
+# scaled bytes by the trip count but added counts unscaled, so this module
+# reported count == 1.
+_WHILE_HLO = """\
+HloModule planted_while
+
+%wcond (c.1: (s32[])) -> pred[] {
+  %c.1 = (s32[]) parameter(0)
+  ROOT %lt = pred[] constant(1)
+}
+
+%wbody (b.1: (s32[])) -> (s32[]) {
+  %b.1 = (s32[]) parameter(0)
+  %cp = f32[8]{0} collective-permute(%b.1), source_target_pairs={{0,1},{1,0}}
+  ROOT %t = (s32[]) tuple(%b.1)
+}
+
+ENTRY %main (a.1: s32[]) -> (s32[]) {
+  %a.1 = s32[] parameter(0)
+  ROOT %w = (s32[]) while((s32[]) %a.1), condition=%wcond, body=%wbody, backend_config={"known_trip_count":{"n":"7"}}
+}
+"""
+
+
+def test_while_body_collective_count_multiplied_by_trip():
+    r = analyze_hlo(_WHILE_HLO)
+    assert r["count"] == 7, r
+    assert r["count_per_kind"] == {"collective-permute": 7}, r
+    assert r["count_by_op"]["collective"] == 7, r
+
+
+def test_while_body_collective_count_real_scan():
+    """A real jitted scan with a known trip count: the compiled module's
+    per-kind count must equal the trip count x per-iteration instances."""
+    trips = 5
+
+    def step(x, _):
+        return x * 2.0 + 1.0, None
+
+    fn = jax.jit(lambda x: jax.lax.scan(step, x, None, length=trips)[0])
+    txt = fn.lower(jnp.ones((8,), jnp.float32)).compile().as_text()
+    r = analyze_hlo(txt)
+    # no collectives here — but the while body's materializing ops must be
+    # scaled: op_count is trip-multiplied the same way coll_counts is
+    assert r["count"] == 0
+    assert all(v == int(v) for v in r["count_by_op"].values())
+
+
+# ---------------------------------------------------------------------------
+# hlo_analysis: collective_issue_depths corner cases
+# ---------------------------------------------------------------------------
+
+_DEPTH_TUPLE = """\
+module {
+  func.func public @main(%arg0: tensor<4xf32>) -> tensor<4xf32> {
+    %0:2 = "stablehlo.all_gather"(%arg0, %arg0) : (tensor<4xf32>, tensor<4xf32>) -> (tensor<4xf32>, tensor<4xf32>)
+    %1 = stablehlo.dot_general %arg0, %arg0 : tensor<4xf32>
+    %2 = stablehlo.dot_general %1, %1 : tensor<4xf32>
+    %3 = stablehlo.add %0#1, %2 : tensor<4xf32>
+    return %3 : tensor<4xf32>
+  }
+}
+"""
+
+
+def test_issue_depth_tuple_result_indexed_use():
+    d = collective_issue_depths(_DEPTH_TUPLE)
+    assert d["all_gather"] == [2], d
+
+
+_DEPTH_SCOPED = """\
+module {
+  func.func private @a(%arg0: tensor<4xf32>) -> tensor<4xf32> {
+    %5 = "stablehlo.all_gather"(%arg0) : (tensor<4xf32>) -> tensor<4xf32>
+    %6 = stablehlo.dot_general %arg0, %arg0 : tensor<4xf32>
+    return %6 : tensor<4xf32>
+  }
+  func.func private @b(%arg0: tensor<4xf32>) -> tensor<4xf32> {
+    %4 = stablehlo.dot_general %arg0, %arg0 : tensor<4xf32>
+    %5 = stablehlo.dot_general %4, %4 : tensor<4xf32>
+    %6 = stablehlo.add %5, %5 : tensor<4xf32>
+    return %6 : tensor<4xf32>
+  }
+}
+"""
+
+
+def test_issue_depth_ssa_ids_are_function_scoped():
+    """@a's dead %5 window ends at @a's closing brace; @b's unrelated %5
+    must neither terminate it early nor extend it with @b's dots."""
+    d = collective_issue_depths(_DEPTH_SCOPED)
+    assert d["all_gather"] == [1], d
+
+
+_DEPTH_CHAIN = """\
+module {
+  func.func public @main(%arg0: tensor<4xf32>) -> tensor<4xf32> {
+    %5 = "stablehlo.all_gather"(%arg0) : (tensor<4xf32>) -> tensor<4xf32>
+    %6 = stablehlo.dot_general %arg0, %arg0 : tensor<4xf32>
+    %7 = "stablehlo.collective_permute"(%5) : (tensor<4xf32>) -> tensor<4xf32>
+    %8 = stablehlo.dot_general %6, %6 : tensor<4xf32>
+    %9 = stablehlo.add %7, %8 : tensor<4xf32>
+    return %9 : tensor<4xf32>
+  }
+}
+"""
+
+
+def test_issue_depth_same_line_def_and_use_chain():
+    """%5 is consumed on the line that DEFINES %7: %5's window must close
+    there (depth 1) and %7's window opens after it (depth 1)."""
+    d = collective_issue_depths(_DEPTH_CHAIN)
+    assert d["all_gather"] == [1], d
+    assert d["collective_permute"] == [1], d
+
+
+_DEPTH_USE_LINE = """\
+module {
+  func.func public @main(%arg0: tensor<4xf32>) -> tensor<4xf32> {
+    %0 = "stablehlo.all_gather"(%arg0) : (tensor<4xf32>) -> tensor<4xf32>
+    %1 = stablehlo.dot_general %0, %arg0 : tensor<4xf32>
+    return %1 : tensor<4xf32>
+  }
+}
+"""
+
+
+def test_issue_depth_compute_on_use_line_not_counted():
+    d = collective_issue_depths(_DEPTH_USE_LINE)
+    assert d["all_gather"] == [0], d
+
+
+# ---------------------------------------------------------------------------
+# trace contracts: one planted violation per contract class
+# ---------------------------------------------------------------------------
+
+
+def _planted(text, ir="stablehlo"):
+    return C.Lowered.from_text(text, ir=ir, label="planted")
+
+
+def test_no_staging_dim_planted_violation_and_pass():
+    bad = _planted("  %x = f32[256,680]{1,0} copy(%p)\n", ir="hlo")
+    good = _planted("  %x = f32[256,40]{1,0} copy(%p)\n", ir="hlo")
+    (r_bad,) = C.evaluate(bad, [C.no_staging_dim(680)])
+    (r_good,) = C.evaluate(good, [C.no_staging_dim(680)])
+    assert not r_bad.ok and "680" in r_bad.detail
+    assert r_good.ok
+
+
+_TWO_PERMUTES_HLO = """\
+HloModule planted_counts
+
+ENTRY %main (a.1: f32[8]) -> f32[8] {
+  %a.1 = f32[8]{0} parameter(0)
+  %c1 = f32[8]{0} collective-permute(%a.1), source_target_pairs={{0,1},{1,0}}
+  ROOT %c2 = f32[8]{0} collective-permute(%c1), source_target_pairs={{0,1},{1,0}}
+}
+"""
+
+
+def test_collective_count_planted_violation_and_pass():
+    low = _planted(_TWO_PERMUTES_HLO, ir="hlo")
+    (r_bad,) = C.evaluate(low, [C.collective_count("collective-permute", 4)])
+    (r_good,) = C.evaluate(low, [C.collective_count("collective-permute", 2)])
+    (r_band,) = C.evaluate(low, [C.collective_count("collective-permute",
+                                                    max_count=3)])
+    assert not r_bad.ok and "x2" in r_bad.detail
+    assert r_good.ok and r_band.ok
+
+
+def test_min_issue_depth_planted_violation():
+    (r,) = C.evaluate(_planted(_DEPTH_USE_LINE),
+                      [C.min_issue_depth("all_gather", 8)])
+    assert not r.ok and "depth 0" in r.detail
+    (r2,) = C.evaluate(_planted(_DEPTH_TUPLE),
+                       [C.min_issue_depth("all_gather", 2)])
+    assert r2.ok
+
+
+@pytest.mark.parametrize("factory,needle", [
+    (C.no_f64_upcast, "f64[4]"),
+    (C.sentinel_free, "is_finite"),
+    (C.no_host_callback, "stablehlo.custom_call @xla_python_cpu_callback"),
+    (C.not_donated, "tf.aliasing_output = 0"),
+])
+def test_absence_contracts_planted_violations(factory, needle):
+    bad = _planted(f"  %0 = {needle} something : tensor<4xf32>\n")
+    good = _planted("  %0 = stablehlo.add %a, %b : tensor<4xf32>\n")
+    (r_bad,) = C.evaluate(bad, [factory()])
+    (r_good,) = C.evaluate(good, [factory()])
+    assert not r_bad.ok, (factory, r_bad)
+    # failure messages show the offending line, not an offset
+    assert needle.split()[0].lstrip("%") in r_bad.detail or \
+        needle in r_bad.detail
+    assert r_good.ok
+
+
+def test_not_donated_real_positive_control():
+    """A genuinely donated input must trip the contract: jit with
+    donate_argnums marks the buffer with tf.aliasing_output."""
+    donating = jax.jit(lambda x: x * 2.0, donate_argnums=0)
+    low = C.Lowered(donating, jnp.ones((8,), jnp.float32), label="donating")
+    (r,) = C.evaluate(low, [C.not_donated("x")])
+    assert not r.ok, r
+    assert "aliasing_output" in r.detail
+
+
+def test_fewer_bytes_pair_planted():
+    small = _planted("ENTRY %main (p: f32[4]) -> f32[4] {\n"
+                     "  %p = f32[4]{0} parameter(0)\n"
+                     "  ROOT %c = f32[4]{0} copy(%p)\n}\n", ir="hlo")
+    big = _planted("ENTRY %main (p: f32[4]) -> f32[1000] {\n"
+                   "  %p = f32[1000]{0} parameter(0)\n"
+                   "  ROOT %c = f32[1000]{0} copy(%p)\n}\n", ir="hlo")
+    (r_ok,) = C.evaluate(small, [C.fewer_bytes("small", "big")],
+                         pair_with=big)
+    (r_bad,) = C.evaluate(big, [C.fewer_bytes("big", "small")],
+                          pair_with=small)
+    assert r_ok.ok and not r_bad.ok
+    assert "ratio" in r_ok.detail
+
+
+def test_issue_depth_grows_pair_planted():
+    deep, shallow = _planted(_DEPTH_CHAIN), _planted(_DEPTH_USE_LINE)
+    # _DEPTH_CHAIN: ag depth 1, 1 permute; _DEPTH_USE_LINE: ag depth 0,
+    # 0 permutes -> depth grows but the permute-count guard differs
+    (r_guard,) = C.evaluate(deep, [C.issue_depth_grows("all_gather")],
+                            pair_with=shallow)
+    assert not r_guard.ok, r_guard
+    # same module on both sides: depth does not strictly grow -> violation
+    (r_flat,) = C.evaluate(deep, [C.issue_depth_grows("all_gather")],
+                           pair_with=deep)
+    assert not r_flat.ok
+    # planted pass: deep vs a permute-matched shallow module
+    shallow_matched = _planted(_DEPTH_CHAIN.replace(
+        "%6 = stablehlo.dot_general %arg0, %arg0 : tensor<4xf32>",
+        "%6 = stablehlo.add %arg0, %arg0 : tensor<4xf32>"))
+    (r_ok,) = C.evaluate(deep, [C.issue_depth_grows("all_gather")],
+                         pair_with=shallow_matched)
+    assert r_ok.ok, r_ok
+
+
+def test_pair_contract_requires_pair_with():
+    with pytest.raises(ValueError):
+        C.evaluate(_planted(_DEPTH_CHAIN), [C.issue_depth_grows()])
+
+
+def test_lowered_lazy_real_entry_and_labels():
+    low = C.Lowered(jax.jit(lambda x: x + 1.0),
+                    jnp.ones((4,), jnp.float32), label="inc")
+    results = C.evaluate(low, [C.no_f64_upcast(), C.sentinel_free()])
+    assert all(r.ok for r in results)
+    assert all(r.target == "inc" for r in results)
+    assert C.violations(results) == []
+    assert "OK" in C.format_results(results)
+
+
+# ---------------------------------------------------------------------------
+# lint rules: planted snippets
+# ---------------------------------------------------------------------------
+
+
+def test_lint_equation_branch_rule():
+    bad = ("def drive(eq, x, kind):\n"
+           "    if eq.name == kind:\n"
+           "        return x\n"
+           "    if kind == 'vortex':\n"
+           "        return 2 * x\n"
+           "    if isinstance(eq, LaplaceEquation):\n"
+           "        return -x\n")
+    findings = L.lint_source(bad, path="core/fmm.py")
+    assert len(findings) == 3, findings
+    assert any("eq.name" in f.message for f in findings)
+    assert any("'vortex'" in f.message for f in findings)
+    assert any("isinstance" in f.message for f in findings)
+    # the rule is scoped to the slab-path files
+    assert L.lint_source(bad, path="core/stepper.py") == []
+    good = "def drive(eq, x):\n    return eq.p2p(x)\n"
+    assert L.lint_source(good, path="core/fmm.py") == []
+
+
+def test_lint_host_sync_rule_reaches_through_helpers():
+    bad = ("import jax\n"
+           "def helper(x):\n"
+           "    return x.sum().item()\n"
+           "@jax.jit\n"
+           "def f(x):\n"
+           "    return helper(x)\n")
+    findings = L.lint_source(bad, path="core/x.py")
+    assert len(findings) == 1 and ".item()" in findings[0].message
+    # the same sync in a host-side function NOT reachable from a jit root
+    # is legitimate (drivers read device scalars)
+    ok = ("import jax\n"
+          "def host_driver(x):\n"
+          "    return float(jax.device_put(x).sum())\n")
+    host = L.lint_source(ok, path="core/x.py")
+    assert host == [], host
+
+
+def test_lint_host_sync_rule_cast_of_traced_expr():
+    bad = ("import jax\nimport jax.numpy as jnp\n"
+           "@jax.jit\n"
+           "def f(x):\n"
+           "    return float(jnp.sum(x))\n")
+    findings = L.lint_source(bad, path="core/x.py")
+    assert len(findings) == 1 and "float()" in findings[0].message
+    # np.asarray on static host data and jnp.asarray on device are fine
+    ok = ("import jax\nimport numpy as np\nimport jax.numpy as jnp\n"
+          "@jax.jit\n"
+          "def f(x, plan):\n"
+          "    rows = np.asarray(plan.rows)\n"
+          "    return jnp.asarray(jnp.sum(x))\n")
+    assert L.lint_source(ok, path="core/x.py") == []
+
+
+def test_lint_static_args_rule():
+    bad = ("import functools, jax\n"
+           "@functools.partial(jax.jit, static_argnames=('p', 'mesh'))\n"
+           "def f(x, p):\n"
+           "    return x * p\n")
+    findings = L.lint_source(bad, path="core/x.py")
+    assert len(findings) == 1 and "'mesh'" in findings[0].message
+    mutable = ("import functools, jax\n"
+               "@functools.partial(jax.jit, static_argnames=('faults',))\n"
+               "def f(x, faults=[]):\n"
+               "    return x\n")
+    findings = L.lint_source(mutable, path="core/x.py")
+    assert len(findings) == 1 and "unhashable" in findings[0].message
+    good = ("import functools, jax\n"
+            "@functools.partial(jax.jit, static_argnames=('p',))\n"
+            "def f(x, p=4):\n"
+            "    return x * p\n")
+    assert L.lint_source(good, path="core/x.py") == []
+
+
+def test_lint_nondeterminism_rule():
+    bad = ("import jax, time\nimport numpy as np\n"
+           "@jax.jit\n"
+           "def f(x):\n"
+           "    return x * time.time() + np.random.normal()\n")
+    findings = L.lint_source(bad, path="core/x.py")
+    assert len(findings) == 2, findings
+    assert any("time()" in f.message for f in findings)
+    assert any("np.random.normal()" in f.message for f in findings)
+    # wall-clock reads in host-side benchmark code are fine
+    ok = "import time\ndef bench():\n    return time.perf_counter()\n"
+    assert L.lint_source(ok, path="benchmarks/x.py") == []
+
+
+def test_lint_rebuild_tree_rule():
+    bad_arity = "t = rebuild_tree(x)\n"
+    bad_discard = "t, aux, _ = rebuild_tree(x)\n"
+    good = "t, aux, ok = rebuild_tree(x)\n"
+    multiline = "t, aux, ok = rebuild_tree(\n    x,\n    level=3)\n"
+    assert len(L.lint_source(bad_arity, path="a.py")) == 1
+    assert len(L.lint_source(bad_discard, path="a.py")) == 1
+    assert L.lint_source(good, path="a.py") == []
+    # the AST form catches multi-line calls the old regex could not see
+    assert L.lint_source(multiline, path="a.py") == []
+
+
+def test_repo_lints_clean():
+    findings = L.run_lint(SRC_REPRO)
+    assert findings == [], L.format_findings(findings)
+
+
+# ---------------------------------------------------------------------------
+# retrace monitor
+# ---------------------------------------------------------------------------
+
+
+def test_retrace_monitor_hit_miss_and_blame():
+    fn = jax.jit(lambda x, k: x * k, static_argnames=("k",))
+    mon = RetraceMonitor(fn, "toy")
+    x = jnp.ones((4,), jnp.float32)
+    mon.expect_miss(x, k=2, step="cold")
+    mon.expect_hit(x, k=2, step="steady")
+    # changed static arg: a legitimate miss, blame names it
+    mon.call(x, k=3, expect="miss", step="retune")
+    assert mon.ok
+    mon.call(x, k=4, expect="hit", step="surprise", strict=False)
+    assert not mon.ok
+    bad = [e for e in mon.events if not e.ok]
+    assert len(bad) == 1 and bad[0].step == "surprise"
+    assert any("'k'" in b or "k]" in b for b in bad[0].blame), bad[0].blame
+
+
+def test_retrace_monitor_strict_raises_with_blame():
+    fn = jax.jit(lambda x: x + 1.0)
+    mon = RetraceMonitor(fn, "toy2")
+    mon.expect_miss(jnp.ones((4,), jnp.float32), step="cold")
+    with pytest.raises(RetraceViolation) as exc:
+        mon.expect_hit(jnp.ones((8,), jnp.float32), step="reshape")
+    assert "reshape" in str(exc.value)
+    assert "(4,)" in str(exc.value) and "(8,)" in str(exc.value)
+
+
+def test_retrace_monitor_host_leaf_tag():
+    """Numpy leaves key a SEPARATE jit cache entry from device arrays of
+    identical aval — the blame must name the host-resident argument (the
+    restore-without-device-put foot-gun run_session pins)."""
+    fn = jax.jit(lambda x: x * 2.0)
+    mon = RetraceMonitor(fn, "toy3")
+    dev = jnp.ones((4,), jnp.float32)
+    mon.expect_miss(dev, step="cold")
+    mon.call(np.ones((4,), np.float32), expect="hit",
+             step="host-restore", strict=False)
+    ev = mon.events[-1]
+    assert ev.got == "miss"
+    assert any(":host" in b for b in ev.blame), ev.blame
+
+
+def test_retrace_monitor_rejects_unjitted():
+    with pytest.raises(TypeError):
+        RetraceMonitor(lambda x: x)
+
+
+def test_signature_diff_names_paths():
+    a = signature_of((jnp.ones((4,)),), {"p": 4})
+    b = signature_of((jnp.ones((8,)),), {"p": 5})
+    diffs = diff_signatures(a, b)
+    assert len(diffs) == 2
+    assert any("'p'" in d and "4 -> 5" in d for d in diffs), diffs
+    assert diff_signatures(None, a) == ["<first call>"]
+    same = diff_signatures(a, a)
+    assert "identical" in same[0]

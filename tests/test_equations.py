@@ -7,13 +7,13 @@ source != target evaluation) — matches an independent f64 direct sum,
 singular at interaction-list distance and regularized in the near field,
 at p = 17; serial == sharded on 4 devices across both kernel routes, both
 plan kinds, and both overlap orderings; and the drivers consume ONLY the
-spec (grep-guarded: no equation-name branches at the slab call sites).
+spec (lint-guarded via repro/analysis/lint: no equation-name branches at
+the slab call sites).
 
 Multidevice cases run in a subprocess because jax locks the device count
 at first init and the rest of the suite must see exactly 1 CPU device.
 """
 import os
-import re
 import subprocess
 import sys
 import textwrap
@@ -309,18 +309,19 @@ def test_equations_multidevice():
 
 def test_drivers_have_no_equation_branches():
     """The slab paths are spec-parametric: neither driver may branch on an
-    equation name or instance (the grep guard of the acceptance criteria).
-    """
+    equation name or instance.  Formerly a regex grep; now the
+    ``no-equation-branches`` AST lint rule (repro/analysis/lint), which
+    also catches multi-line comparisons the regex missed."""
+    from repro.analysis.lint import EquationBranchRule, run_lint
+
     root = os.path.join(os.path.dirname(__file__), "..", "src", "repro")
-    forbidden = re.compile(
-        r"eq\.name\s*==|==\s*['\"](vortex|laplace|tracer)['\"]"
-        r"|isinstance\([^)]*(?:Laplace|Tracer|Vortex)Equation")
+    rule = EquationBranchRule()
+    findings = run_lint(root, rules=[rule])
+    assert findings == [], "\n".join(str(f) for f in findings)
+    # the rule actually covers every slab-path file the old grep did
     for rel_path in ("core/fmm.py", "core/parallel_fmm.py",
                      "kernels/ops.py", "kernels/m2l.py", "kernels/p2p.py"):
-        with open(os.path.join(root, rel_path)) as f:
-            src = f.read()
-        hit = forbidden.search(src)
-        assert hit is None, (rel_path, hit and hit.group(0))
+        assert rule.applies(rel_path), rel_path
 
 
 def test_packed_exchange_payload_width_is_spec_dependent():

@@ -1,19 +1,21 @@
-"""HLO-level guarantees of the parity-folded M2L path.
+"""HLO-level guarantees of the parity-folded M2L path, as trace contracts.
 
 The pre-folding kernel wrapper materialized a ``(nb, 40p)`` gathered ME
-tensor in HBM before the kernel ran.  These tests walk the optimized HLO
-(launch/hlo_analysis) to pin that the folded paths (a) contain no buffer
-with a 40p-wide dimension at all and (b) move strictly fewer HBM bytes
-than the masked-40 formulation.
+tensor in HBM before the kernel ran.  These pins now live in the contract
+registry (repro/analysis/contracts): ``no_staging_dim(40p)`` states no
+buffer with a 40p-wide dimension exists at all, ``fewer_bytes`` states the
+folded formulation moves strictly fewer fusion-aware HBM bytes than the
+masked-40 one.  The seed-style gather wrapper is kept as the positive
+control: the contract must FAIL on it, or the detector is vacuous.
 """
 import numpy as np
 import jax
 import jax.numpy as jnp
 
+from repro.analysis import contracts as C
 from repro.core import expansions as ex
 from repro.core.quadtree import M2L_OFFSETS, M2L_VALIDITY
 from repro.kernels import ops as kops
-from repro.launch.hlo_analysis import analyze_hlo, shape_dim_pattern
 
 LEVEL, P = 4, 17
 N = 1 << LEVEL
@@ -25,18 +27,13 @@ def _me():
                        jnp.complex64)
 
 
-def _hlo(fn, me):
-    return jax.jit(fn).lower(me).compile().as_text()
-
-
-def _staging_pattern():
-    # any tensor shape with a 40p-sized dimension, e.g. f32[256,680]
-    return shape_dim_pattern(40 * P)
+def _lowered(fn, label):
+    return C.Lowered(jax.jit(fn), _me(), label=label)
 
 
 def _old_gather_wrapper(me):
-    """The seed wrapper's staging stage (positive control for the regex):
-    gather 40 masked source slabs and flatten to (nb, 40p)."""
+    """The seed wrapper's staging stage (positive control for the
+    contract): gather 40 masked source slabs and flatten to (nb, 40p)."""
     pad = jnp.pad(me, ((3, 3), (3, 3), (0, 0)))
     slabs = []
     for oi, (dx, dy) in enumerate(M2L_OFFSETS):
@@ -47,24 +44,30 @@ def _old_gather_wrapper(me):
     return jnp.stack(slabs, axis=2).reshape(N * N, 40 * P)
 
 
-def test_regex_detects_old_staging_tensor():
-    """Positive control: the detector fires on the seed-style gather."""
-    txt = _hlo(_old_gather_wrapper, _me())
-    assert _staging_pattern().search(txt) is not None
+def test_contract_detects_old_staging_tensor():
+    """Positive control: no_staging_dim must FAIL on the seed-style
+    gather, and its failure message must show the offending buffer."""
+    (r,) = C.evaluate(_lowered(_old_gather_wrapper, "seed_gather"),
+                      [C.no_staging_dim(40 * P)])
+    assert not r.ok, r
+    assert str(40 * P) in r.detail
 
 
 def test_kernel_wrapper_has_no_40p_staging_tensor():
-    txt = _hlo(lambda g: kops.m2l_apply(g, LEVEL, P), _me())
-    assert _staging_pattern().search(txt) is None
+    (r,) = C.evaluate(_lowered(lambda g: kops.m2l_apply(g, LEVEL, P),
+                               "m2l_apply"), [C.no_staging_dim(40 * P)])
+    assert r.ok, r
 
 
 def test_folded_reference_has_no_40p_staging_tensor():
-    txt = _hlo(lambda g: ex.m2l_reference(g, LEVEL, P), _me())
-    assert _staging_pattern().search(txt) is None
+    (r,) = C.evaluate(_lowered(lambda g: ex.m2l_reference(g, LEVEL, P),
+                               "m2l_reference"), [C.no_staging_dim(40 * P)])
+    assert r.ok, r
 
 
 def test_folded_reference_moves_fewer_hbm_bytes():
-    me = _me()
-    b_old = analyze_hlo(_hlo(lambda g: ex.m2l_masked40(g, LEVEL, P), me))["bytes"]
-    b_new = analyze_hlo(_hlo(lambda g: ex.m2l_reference(g, LEVEL, P), me))["bytes"]
-    assert b_new < b_old, (b_new, b_old)
+    fold = _lowered(lambda g: ex.m2l_reference(g, LEVEL, P), "folded")
+    m40 = _lowered(lambda g: ex.m2l_masked40(g, LEVEL, P), "masked40")
+    (r,) = C.evaluate(fold, [C.fewer_bytes("folded", "masked40")],
+                      pair_with=m40)
+    assert r.ok, r

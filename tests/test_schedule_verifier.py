@@ -1,0 +1,262 @@
+"""The SPMD collective-schedule verifier (repro/analysis/schedule).
+
+Synthetic StableHLO fixtures pin the parser and the per-device scalar
+evaluator — most importantly the planted-drop module, where a ``case``
+branch on ``partition_id`` makes rank 0 skip a collective-permute the
+other ranks issue: the textbook distributed hang, flagged with a
+readable per-device diff.  (``lax.cond`` lowers the predicate to
+``int(pred)`` selecting the case region, so region 0 is the FALSE
+branch — the evaluator's branch resolution is pinned here too.)
+
+The real-module test lowers ``parallel_fmm_evaluate`` for both plan
+kinds (slab and block, including the degenerate single-rank-axis grids)
+on 4 forced host devices in a subprocess and verifies every schedule is
+consistent.
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+from repro.analysis import schedule as S
+
+_MODULE_HEAD = ("module attributes {mhlo.num_partitions = 4 : i32, "
+                "mhlo.num_replicas = 1 : i32} {")
+
+# The planted drop: sel = int(partition_id == 0); case region 0 (false,
+# ranks 1..3) issues the permute, region 1 (true, rank 0) skips it.
+_DROP = _MODULE_HEAD + """
+  func.func public @main(%arg0: tensor<4xf32>) -> tensor<4xf32> {
+    %0 = stablehlo.partition_id : tensor<ui32>
+    %1 = stablehlo.convert %0 : (tensor<ui32>) -> tensor<i32>
+    %2 = stablehlo.constant dense<0> : tensor<i32>
+    %3 = stablehlo.compare  EQ, %1, %2 : (tensor<i32>, tensor<i32>) -> tensor<i1>
+    %4 = stablehlo.convert %3 : (tensor<i1>) -> tensor<i32>
+    %5 = "stablehlo.case"(%4) ({
+      %6 = "stablehlo.collective_permute"(%arg0) {channel_handle = #stablehlo.channel_handle<handle = 1, type = 0>, source_target_pairs = dense<[[0, 1], [1, 2], [2, 3], [3, 0]]> : tensor<4x2xi64>} : (tensor<4xf32>) -> tensor<4xf32>
+      stablehlo.return %6 : tensor<4xf32>
+    }, {
+      stablehlo.return %arg0 : tensor<4xf32>
+    }) : (tensor<i32>) -> tensor<4xf32>
+    return %5 : tensor<4xf32>
+  }
+}
+"""
+
+
+def test_planted_drop_is_flagged_with_readable_diff():
+    rep = S.verify_schedule(_DROP, label="planted-drop")
+    assert not rep.ok
+    assert rep.ndev == 4
+    assert len(rep.schedules[0]) == 0          # rank 0 skips
+    assert all(len(s) == 1 for s in rep.schedules[1:])
+    diff = rep.diff_text()
+    assert "DIVERGENT" in diff
+    assert "collective_permute" in diff
+    assert "block in this collective forever" in diff
+    # per-device sequences are enumerated so the hang is localizable
+    assert "device 0: 0 collectives" in diff
+    assert "device 1: 1 collectives" in diff
+
+
+def test_per_device_branch_resolution_case_regions():
+    """Region 0 is the FALSE branch: rank 0 (sel=1) runs region 1."""
+    ev0, probs0 = S.extract_schedule(_DROP, device=0)
+    ev2, probs2 = S.extract_schedule(_DROP, device=2)
+    assert probs0 == [] and probs2 == []
+    assert ev0 == []
+    assert len(ev2) == 1 and ev2[0].kind == "collective_permute"
+    assert ev2[0].pairs == ((0, 1), (1, 2), (2, 3), (3, 0))
+    assert ev2[0].channel == 1
+
+
+_CONSISTENT = _MODULE_HEAD + """
+  func.func public @main(%arg0: tensor<4xf32>) -> tensor<4xf32> {
+    %0 = "stablehlo.collective_permute"(%arg0) {channel_handle = #stablehlo.channel_handle<handle = 1, type = 0>, source_target_pairs = dense<[[0, 1], [1, 2], [2, 3], [3, 0]]> : tensor<4x2xi64>} : (tensor<4xf32>) -> tensor<4xf32>
+    %1 = "stablehlo.all_gather"(%0) {all_gather_dim = 0 : i64, channel_handle = #stablehlo.channel_handle<handle = 2, type = 0>, replica_groups = dense<[[0, 1, 2, 3]]> : tensor<1x4xi64>} : (tensor<4xf32>) -> tensor<16xf32>
+    %2 = stablehlo.add %1, %1 : tensor<16xf32>
+    return %0 : tensor<4xf32>
+  }
+}
+"""
+
+
+def test_consistent_module_passes_with_event_metadata():
+    rep = S.verify_schedule(_CONSISTENT, label="consistent")
+    assert rep.ok, rep.diff_text()
+    seq = rep.schedules[0]
+    assert [e.kind for e in seq] == ["collective_permute", "all_gather"]
+    assert seq[1].groups == ((0, 1, 2, 3),)
+    assert "CONSISTENT" in rep.diff_text()
+    assert all(s == seq for s in rep.schedules)
+
+
+_UNRESOLVED_SAME = _MODULE_HEAD + """
+  func.func public @main(%arg0: tensor<4xf32>, %arg1: tensor<i32>) -> tensor<4xf32> {
+    %0 = "stablehlo.case"(%arg1) ({
+      %1 = "stablehlo.collective_permute"(%arg0) {source_target_pairs = dense<[[0, 1], [1, 0]]> : tensor<2x2xi64>} : (tensor<4xf32>) -> tensor<4xf32>
+      stablehlo.return %1 : tensor<4xf32>
+    }, {
+      %1 = "stablehlo.collective_permute"(%arg0) {source_target_pairs = dense<[[0, 1], [1, 0]]> : tensor<2x2xi64>} : (tensor<4xf32>) -> tensor<4xf32>
+      stablehlo.return %1 : tensor<4xf32>
+    }) : (tensor<i32>) -> tensor<4xf32>
+    return %0 : tensor<4xf32>
+  }
+}
+"""
+
+
+def test_unresolved_selector_accepted_when_regions_identical():
+    """A data-dependent case whose regions issue IDENTICAL sequences is
+    safe regardless of which region runs."""
+    rep = S.verify_schedule(_UNRESOLVED_SAME, label="data-branch")
+    assert rep.ok, rep.diff_text()
+    assert all(len(s) == 1 for s in rep.schedules)
+
+
+def test_unresolved_selector_with_divergent_regions_is_a_problem():
+    """The same module with one region's permute dropped: the selector is
+    not statically known, so the verifier must refuse (conservative)."""
+    divergent = _UNRESOLVED_SAME.replace(
+        """    }, {
+      %1 = "stablehlo.collective_permute"(%arg0) {source_target_pairs = dense<[[0, 1], [1, 0]]> : tensor<2x2xi64>} : (tensor<4xf32>) -> tensor<4xf32>
+      stablehlo.return %1 : tensor<4xf32>
+    })""",
+        """    }, {
+      stablehlo.return %arg0 : tensor<4xf32>
+    })""")
+    assert divergent != _UNRESOLVED_SAME
+    rep = S.verify_schedule(divergent, label="data-branch-divergent")
+    assert not rep.ok
+    assert any("unresolvable divergent" in p for p in rep.problems), \
+        rep.problems
+
+
+_WHILE_LOOP = _MODULE_HEAD + """
+  func.func public @main(%arg0: tensor<4xf32>, %arg1: tensor<i32>) -> tensor<4xf32> {
+    %0:2 = stablehlo.while(%iterArg = %arg1, %iterArg_0 = %arg0) : tensor<i32>, tensor<4xf32>
+     cond {
+      %1 = stablehlo.constant dense<3> : tensor<i32>
+      %2 = stablehlo.compare  LT, %iterArg, %1 : (tensor<i32>, tensor<i32>) -> tensor<i1>
+      stablehlo.return %2 : tensor<i1>
+    } do {
+      %1 = "stablehlo.collective_permute"(%iterArg_0) {source_target_pairs = dense<[[0, 1], [1, 2], [2, 3], [3, 0]]> : tensor<4x2xi64>} : (tensor<4xf32>) -> tensor<4xf32>
+      %2 = stablehlo.constant dense<1> : tensor<i32>
+      %3 = stablehlo.add %iterArg, %2 : tensor<i32>
+      stablehlo.return %3, %1 : tensor<i32>, tensor<4xf32>
+    }
+    return %0#1 : tensor<4xf32>
+  }
+}
+"""
+
+
+def test_while_body_events_tagged_in_loop_and_consistent():
+    rep = S.verify_schedule(_WHILE_LOOP, label="while")
+    assert rep.ok, rep.diff_text()
+    seq = rep.schedules[0]
+    assert len(seq) == 1 and seq[0].in_loop
+    assert "in_loop" in seq[0].brief()
+
+
+def _sanity_module(attrs):
+    return _MODULE_HEAD + f"""
+  func.func public @main(%arg0: tensor<4xf32>) -> tensor<4xf32> {{
+    %0 = "stablehlo.collective_permute"(%arg0) {{{attrs}}} : (tensor<4xf32>) -> tensor<4xf32>
+    return %0 : tensor<4xf32>
+  }}
+}}
+"""
+
+
+def test_event_sanity_duplicate_targets():
+    rep = S.verify_schedule(_sanity_module(
+        "source_target_pairs = dense<[[0, 1], [2, 1]]> : tensor<2x2xi64>"))
+    assert not rep.ok
+    assert any("duplicate targets" in p for p in rep.problems), rep.problems
+
+
+def test_event_sanity_device_out_of_range():
+    rep = S.verify_schedule(_sanity_module(
+        "source_target_pairs = dense<[[0, 5]]> : tensor<1x2xi64>"))
+    assert not rep.ok
+    assert any("out of range" in p for p in rep.problems), rep.problems
+
+
+def test_event_sanity_overlapping_replica_groups():
+    mod = _MODULE_HEAD + """
+  func.func public @main(%arg0: tensor<4xf32>) -> tensor<16xf32> {
+    %0 = "stablehlo.all_gather"(%arg0) {all_gather_dim = 0 : i64, replica_groups = dense<[[0, 1], [1, 2]]> : tensor<2x2xi64>} : (tensor<4xf32>) -> tensor<16xf32>
+    return %0 : tensor<16xf32>
+  }
+}
+"""
+    rep = S.verify_schedule(mod)
+    assert not rep.ok
+    assert any("overlap" in p for p in rep.problems), rep.problems
+
+
+def test_ndev_read_from_module_attributes():
+    rep = S.verify_schedule(_CONSISTENT)    # no explicit ndev
+    assert rep.ndev == 4
+
+
+# ---------------------------------------------------------------------------
+# real modules: both plan kinds on 4 forced host devices
+# ---------------------------------------------------------------------------
+
+_MULTIDEVICE_BODY = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                               " --xla_force_host_platform_device_count=4")
+    os.environ.setdefault("JAX_PLATFORMS", "cpu")
+    import numpy as np
+    import jax
+    from jax.sharding import Mesh
+
+    from repro.analysis import schedule as S
+    from repro.core import parallel_fmm as pf
+    from repro.core import stepper as stp
+    from repro.core.cost_model import ModelParams
+    from repro.core.plan import block_plan_from_counts, plan_from_counts
+    from repro.core.quadtree import build_tree
+
+    level, p = 3, 4
+    rng = np.random.default_rng(0)
+    pos = rng.uniform(0.05, 0.95, size=(400, 2))
+    tree, index = build_tree(pos, rng.normal(size=400), level, sigma=0.02)
+    params = ModelParams(level=level, cut=2, p=p, slots=tree.slots)
+    mesh = Mesh(np.array(jax.devices()[:4]), ("data",))
+
+    plans = {"slab": plan_from_counts(index.counts, params, 4,
+                                      method="model")}
+    for grid in ((2, 2), (4, 1), (1, 4)):
+        plans[f"block{grid[0]}x{grid[1]}"] = block_plan_from_counts(
+            index.counts, params, grid, method="model")
+
+    evaluate = pf.TRACE_ENTRY_POINTS["parallel_fmm_evaluate"]
+    for label, plan in plans.items():
+        rep = S.verify_entry(evaluate, tree, p, mesh, plan=plan, ndev=4,
+                             label=label)
+        assert rep.ok, rep.diff_text()
+        assert len(rep.schedules[0]) > 0, label   # sharded paths collect
+    rep = S.verify_entry(stp.TRACE_ENTRY_POINTS["rk2_step"], tree, 1e-4,
+                         p=p, mesh=mesh, plan=plans["slab"], ndev=4,
+                         label="rk2_step")
+    assert rep.ok, rep.diff_text()
+    print("OK")
+""")
+
+
+def test_real_modules_verify_on_four_devices():
+    """Both plan kinds (slab + block, incl. degenerate single-rank axes)
+    and the sharded stepper all produce consistent per-device schedules."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.abspath(
+        os.path.join(os.path.dirname(__file__), "..", "src"))
+    env.pop("XLA_FLAGS", None)
+    proc = subprocess.run([sys.executable, "-c", _MULTIDEVICE_BODY],
+                          capture_output=True, text=True, env=env,
+                          timeout=900)
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    assert "OK" in proc.stdout
