@@ -823,6 +823,52 @@ def bench_trace_contracts(rows, quick=False):
                      f"failed:{type(e).__name__}:{detail}"))
 
 
+def bench_proc_fault_recovery(rows, quick=False):
+    """MTTR of the cross-process fault-tolerance path (DESIGN.md §14): a
+    2-rank kill drill through ``launch/supervisor.py`` — SIGKILL rank 1
+    mid-step, survivors agree, shrink to 1, ``from_checkpoint``-restore,
+    finish.  us_per_call is the mean time to recovery (detection +
+    teardown/agreement/restore + first post-restore step); the pieces ride
+    in ``derived``.  Any failure (including an unfinished drill) marks the
+    row ``failed:``, which the CI guard treats as fatal."""
+    import tempfile
+
+    from repro.core.faults import FaultInjector, FaultSpec
+    from repro.launch.supervisor import Supervisor, SupervisorConfig
+    from repro.parallel import resilience as rz
+
+    try:
+        with tempfile.TemporaryDirectory(prefix="fmm-drill-") as d:
+            cfg = SupervisorConfig(
+                world=2, target_step=4, coord_dir=d, n_side=16, p=4,
+                dt=0.004, checkpoint_every=1, checkpoint_keep=8,
+                watchdog=rz.WatchdogPolicy(compile_grace=900.0,
+                                           teardown_grace=30.0),
+                restart=rz.RestartPolicy(min_world=1, backoff_base=0.05),
+                max_wall=1500.0)
+            sup = Supervisor(cfg, faults=FaultInjector(
+                FaultSpec(site="proc_kill", step=2, device=1)))
+            result = sup.run()
+            if not result.success or len(result.faults) != 1:
+                raise RuntimeError(f"drill did not recover: "
+                                   f"{len(result.faults)} faults")
+            rep = result.faults[0]
+            parts = [rep.detect_seconds, rep.restore_seconds,
+                     rep.first_step_seconds]
+            if any(p is None for p in parts):
+                raise RuntimeError(f"MTTR piece missing: {parts}")
+            mttr = sum(parts)
+            rows.append(("proc_fault_recovery", mttr * 1e6,
+                         f"detect={rep.detect_seconds:.2f}s_restore="
+                         f"{rep.restore_seconds:.2f}s_first_step="
+                         f"{rep.first_step_seconds:.2f}s_world="
+                         f"{rep.world_before}to{rep.world_after}"))
+    except Exception as e:  # report, never abort the whole harness
+        detail = " ".join(str(e).split())[-160:].replace(",", ";")
+        rows.append(("proc_fault_recovery", 0.0,
+                     f"failed:{type(e).__name__}:{detail}"))
+
+
 def main() -> None:
     quick = "--quick" in sys.argv
     json_path = None
@@ -839,6 +885,7 @@ def main() -> None:
                   bench_plan_halo,
                   bench_equations,
                   bench_trace_contracts,
+                  bench_proc_fault_recovery,
                   bench_moe_placement):
         bench(rows, quick=quick)
     print("name,us_per_call,derived")

@@ -208,6 +208,13 @@ def run_schedule_section(args):
     if args.devices >= 6:
         _, b23 = _plans(tree, index, level, p, 6, (2, 3))
         cases += [("block_2x3", 6, b23)]
+    if args.devices >= 3:
+        # shrunken-world mesh (DESIGN.md §14): after a coordinated 4->3
+        # shrink the survivors re-lower every module at the odd world
+        # size — verify the post-shrink schedule is hang-free too, not
+        # just the power-of-two launch configurations
+        slab3, _ = _plans(tree, index, level, p, 3, (3, 1))
+        cases += [("slab_P3_shrunk", 3, slab3)]
 
     for label, ndev, plan in cases:
         rep = S.verify_entry(evaluate_ep, tree, p, _mesh(ndev), plan=plan,
@@ -218,6 +225,12 @@ def run_schedule_section(args):
         rep = S.verify_entry(stp.TRACE_ENTRY_POINTS["rk2_step"], tree, 1e-4,
                              p=p, mesh=_mesh(4), plan=slab, ndev=4,
                              label="rk2_step[slab_P4]")
+        reports.append(rep)
+    if args.devices >= 3:
+        slab3, _ = _plans(tree, index, level, p, 3, (3, 1))
+        rep = S.verify_entry(stp.TRACE_ENTRY_POINTS["rk2_step"], tree, 1e-4,
+                             p=p, mesh=_mesh(3), plan=slab3, ndev=3,
+                             label="rk2_step[slab_P3_shrunk]")
         reports.append(rep)
 
     bad = [r for r in reports if not r.ok]

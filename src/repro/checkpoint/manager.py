@@ -4,7 +4,17 @@ keep-last-k, and elastic restore onto a different mesh.
 Format: one .npz per pytree ("params", "opt", "meta") under
 ``<dir>/step_<n>.tmp`` renamed atomically to ``step_<n>`` once complete,
 plus a LATEST pointer file written last.  A crash mid-save never corrupts
-the previous checkpoint; restore always reads LATEST.
+the previous checkpoint; restore reads LATEST, falling back to the newest
+complete step directory when LATEST is missing, corrupt, or dangling
+(points at a directory that was GC'd or lost).
+
+Durability: every payload file, meta.json, and LATEST are fsync'd before
+their rename, and the checkpoint directory is fsync'd after, so the commit
+point survives power loss, not just process death.  Errors raised inside
+the async ``_write`` thread are captured and re-raised on the next
+``save()`` / ``wait()`` — a failed snapshot is never silent (the
+cross-process shrink path of DESIGN.md §14 restores from ``latest_step()``
+and must be able to trust it).
 """
 from __future__ import annotations
 
@@ -16,6 +26,26 @@ from typing import Any, Optional
 
 import numpy as np
 import jax
+
+
+def _fsync_file(path: str) -> None:
+    fd = os.open(path, os.O_RDONLY)
+    try:
+        os.fsync(fd)
+    finally:
+        os.close(fd)
+
+
+def _fsync_dir(path: str) -> None:
+    # directory fsync makes the rename itself durable (POSIX: metadata
+    # lives in the parent directory's log)
+    fd = os.open(path, os.O_RDONLY)
+    try:
+        os.fsync(fd)
+    except OSError:
+        pass            # some filesystems refuse fsync on directories
+    finally:
+        os.close(fd)
 
 
 def _flatten(tree) -> dict[str, np.ndarray]:
@@ -46,20 +76,33 @@ class CheckpointManager:
         self.keep = keep
         self.async_save = async_save
         self._thread: Optional[threading.Thread] = None
+        self._error: Optional[BaseException] = None
         os.makedirs(directory, exist_ok=True)
 
     # -- save ---------------------------------------------------------------
 
+    def _raise_pending(self):
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise RuntimeError(
+                "previous async checkpoint save failed") from err
+
     def save(self, step: int, trees: dict[str, Any], meta: Optional[dict] = None):
-        """trees: name -> pytree.  Blocks only to snapshot to host memory."""
+        """trees: name -> pytree.  Blocks only to snapshot to host memory.
+
+        An exception from a previous async save surfaces HERE (or in
+        :meth:`wait`) rather than dying silently in the writer thread."""
         host = {name: _flatten(jax.device_get(t)) for name, t in trees.items()}
         meta = dict(meta or {})
         meta["step"] = step
         if self._thread is not None:
             self._thread.join()     # one in-flight save at a time
+            self._thread = None
+        self._raise_pending()
         if self.async_save:
             self._thread = threading.Thread(
-                target=self._write, args=(step, host, meta), daemon=True)
+                target=self._write_guarded, args=(step, host, meta),
+                daemon=True)
             self._thread.start()
         else:
             self._write(step, host, meta)
@@ -68,6 +111,13 @@ class CheckpointManager:
         if self._thread is not None:
             self._thread.join()
             self._thread = None
+        self._raise_pending()
+
+    def _write_guarded(self, step: int, host: dict, meta: dict):
+        try:
+            self._write(step, host, meta)
+        except BaseException as e:      # surfaces on next save()/wait()
+            self._error = e
 
     def _write(self, step: int, host: dict, meta: dict):
         tmp = os.path.join(self.dir, f"step_{step}.tmp")
@@ -75,16 +125,24 @@ class CheckpointManager:
         shutil.rmtree(tmp, ignore_errors=True)
         os.makedirs(tmp)
         for name, data in host.items():
-            np.savez(os.path.join(tmp, f"{name}.npz"), **data)
+            path = os.path.join(tmp, f"{name}.npz")
+            np.savez(path, **data)
+            _fsync_file(path)
         with open(os.path.join(tmp, "meta.json"), "w") as f:
             json.dump(meta, f)
+            f.flush()
+            os.fsync(f.fileno())
         shutil.rmtree(final, ignore_errors=True)
         os.rename(tmp, final)
+        _fsync_dir(self.dir)    # make the rename durable before LATEST
         # LATEST pointer written last -> atomic commit point
         with open(os.path.join(self.dir, "LATEST.tmp"), "w") as f:
             f.write(str(step))
+            f.flush()
+            os.fsync(f.fileno())
         os.replace(os.path.join(self.dir, "LATEST.tmp"),
                    os.path.join(self.dir, "LATEST"))
+        _fsync_dir(self.dir)
         self._gc()
 
     def _gc(self):
@@ -105,11 +163,23 @@ class CheckpointManager:
         return sorted(steps)
 
     def latest_step(self) -> Optional[int]:
+        """Newest RESTORABLE step: LATEST's referent when it exists on
+        disk, else the newest complete step directory (LATEST can dangle
+        after a crash between GC and pointer update, or point at a step a
+        concurrent ``keep`` policy collected)."""
         path = os.path.join(self.dir, "LATEST")
-        if not os.path.exists(path):
-            return None
-        with open(path) as f:
-            return int(f.read().strip())
+        step = None
+        if os.path.exists(path):
+            try:
+                with open(path) as f:
+                    step = int(f.read().strip())
+            except (ValueError, OSError):
+                step = None
+        if step is not None and os.path.isdir(
+                os.path.join(self.dir, f"step_{step}")):
+            return step
+        steps = self.all_steps()
+        return steps[-1] if steps else None
 
     def load_meta(self, step: Optional[int] = None) -> Optional[dict]:
         """Read a checkpoint's meta.json without restoring any arrays —

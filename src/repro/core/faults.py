@@ -29,6 +29,13 @@ Sites (where each one lands):
   time_inflate  one step's measured wall-clock sample multiplied by
                 ``magnitude`` (host side; exercises the outlier filter on
                 the measured-feedback loop, never the device program).
+  proc_kill     SIGKILL rank ``device`` once its heartbeat reaches step
+                ``step`` (supervisor level — the spec never enters a jit;
+                the kill-drill supervisor of ``launch/supervisor.py`` is
+                the executor).  Drills the dead-process shrink path.
+  proc_hang     SIGSTOP the same way: the process stays alive but its
+                heartbeat goes stale, drilling the hung-not-dead
+                watchdog path (DESIGN.md §14).
 
 Non-sticky specs fire only on attempt 0 of their step — the model of a
 transient fault, recovered by the ladder's plain retry.  ``sticky=True``
@@ -46,7 +53,8 @@ import jax.numpy as jnp
 DEVICE_SITES = ("halo_nan", "tile_corrupt")
 STEP_SITES = ("teleport", "overflow")
 HOST_SITES = ("time_inflate",)
-SITES = DEVICE_SITES + STEP_SITES + HOST_SITES
+PROC_SITES = ("proc_kill", "proc_hang")
+SITES = DEVICE_SITES + STEP_SITES + HOST_SITES + PROC_SITES
 
 
 @dataclasses.dataclass(frozen=True)
@@ -63,6 +71,12 @@ class FaultSpec:
             raise ValueError(f"unknown fault site {self.site!r}; "
                              f"one of {SITES}")
 
+    @property
+    def rank(self) -> int:
+        """Target rank of a process-granularity site (alias of ``device``:
+        one spec vocabulary covers both granularities)."""
+        return self.device
+
 
 class FaultInjector:
     """Holds the configured faults; drivers query the active subset."""
@@ -72,10 +86,16 @@ class FaultInjector:
 
     def active(self, step: int, attempt: int = 0) -> tuple[FaultSpec, ...]:
         """Device-program faults firing at (step, attempt) — the static
-        tuple threaded into the jitted step."""
+        tuple threaded into the jitted step.  Host- and process-level
+        sites never enter a jit."""
         return tuple(f for f in self.specs
-                     if f.step == step and f.site not in HOST_SITES
+                     if f.step == step and f.site in DEVICE_SITES + STEP_SITES
                      and (f.sticky or attempt == 0))
+
+    def proc_faults(self) -> tuple[FaultSpec, ...]:
+        """Process-granularity specs, executed by the kill-drill
+        supervisor (never by the drivers)."""
+        return tuple(f for f in self.specs if f.site in PROC_SITES)
 
     def time_factor(self, step: int) -> float:
         """Host-side measured-time inflation factor for this step."""

@@ -684,6 +684,33 @@ class VortexStepper:
                                                        self.params.cut)
         return "replan"
 
+    # -- cross-process watchdog hooks (parallel/resilience, DESIGN.md §14) ---
+
+    def modeled_step_work(self) -> float:
+        """Eq 13-15 modeled bottleneck of the current plan: the max
+        per-partition load.  Pure cost-model units — the resilience layer
+        multiplies it by a measured seconds-per-work calibration to seed a
+        watchdog deadline before any wall-clock history exists (e.g. the
+        first step after a coordinated shrink restart)."""
+        counts = getattr(self, "_counts_cache", None)
+        if counts is None:
+            counts = self.counts()
+            self._counts_cache = counts
+        return float(plan_loads(self.plan, counts, self.params).max())
+
+    def predicted_step_seconds(self) -> Optional[float]:
+        """Robust-filtered steady-state step wall time, or None until a
+        clean sample exists.  Same filtering discipline as the replanner:
+        flagged records and their retrace-contaminated successors are
+        dropped (:func:`clean_wall_samples`), then :func:`robust_wall`
+        median/clips the recent window — so one stalled step can't inflate
+        (or a garbage timer deflate) the watchdog deadline derived from
+        this."""
+        recent = clean_wall_samples(self.history)[-8:]
+        if not recent:
+            return None
+        return robust_wall(recent)
+
     # -- guarded execution ---------------------------------------------------
 
     def _active_faults(self, attempt: int) -> tuple:

@@ -27,3 +27,21 @@ def make_local_mesh(axes=("pod", "data", "model")) -> Mesh:
     """Degenerate all-ones mesh for smoke tests on one device."""
     dev = np.array(jax.devices()[:1]).reshape((1,) * len(axes))
     return Mesh(dev, axes)
+
+
+def make_world_mesh(world: int, axis: str = "data") -> Mesh:
+    """1-D mesh over the first ``world`` LOCAL devices.
+
+    The shrunken-world constructor of the resilience layer (DESIGN.md
+    §14): after a coordinated shrink, every surviving rank rebuilds the
+    mesh at the agreed world size and ``from_checkpoint``-restores onto it
+    — the elastic restore path is device-count independent, so only the
+    mesh changes shape.  Uses ``jax.local_devices()`` (the process's own
+    devices) rather than the global list: each rank of the supervisor's
+    process gang addresses only what it owns."""
+    devs = jax.local_devices()
+    if world > len(devs):
+        raise ValueError(f"world {world} exceeds the {len(devs)} local "
+                         f"devices (raise --xla_force_host_platform_"
+                         f"device_count or shrink the world)")
+    return Mesh(np.array(devs[:world]), (axis,))

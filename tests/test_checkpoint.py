@@ -81,6 +81,73 @@ def test_crash_mid_save_leaves_latest_intact(tmp_path):
     assert mgr.latest_step() == 3
 
 
+def test_async_save_error_surfaces(tmp_path, monkeypatch):
+    """An exception in the async ``_write`` thread must NOT die silently:
+    it re-raises on the next save()/wait() (satellite of DESIGN.md §14 —
+    the shrink path restores from latest_step() and must be able to trust
+    that saves that claimed to start actually landed)."""
+    trees = _fmm_trees()
+    mgr = CheckpointManager(str(tmp_path), async_save=True)
+
+    def boom(*a, **k):
+        raise OSError("disk full (simulated)")
+
+    monkeypatch.setattr(np, "savez", boom)
+    mgr.save(1, trees, None)           # returns; the failure is in-thread
+    with pytest.raises(RuntimeError, match="async checkpoint save failed"):
+        mgr.wait()
+    monkeypatch.undo()
+
+    # the error also surfaces on the NEXT save (not just wait)
+    monkeypatch.setattr(np, "savez", boom)
+    mgr.save(2, trees, None)
+    mgr._thread.join()      # let the failing write land while patched
+    monkeypatch.undo()
+    with pytest.raises(RuntimeError, match="async checkpoint save failed"):
+        mgr.save(3, trees, None)
+    # once surfaced it is cleared: the pipeline keeps going
+    mgr.save(4, trees, None)
+    mgr.wait()
+    assert mgr.latest_step() == 4
+
+
+def test_latest_step_falls_back_when_latest_dangles(tmp_path):
+    """LATEST pointing at a GC'd/missing directory (crash between GC and
+    pointer update) must not strand restore: fall back to the newest
+    complete step directory."""
+    trees = _fmm_trees()
+    mgr = CheckpointManager(str(tmp_path), async_save=False)
+    mgr.save(1, trees, {"tag": "one"})
+    mgr.save(2, trees, {"tag": "two"})
+    # simulate the referent vanishing out from under LATEST
+    import shutil
+    shutil.rmtree(tmp_path / "step_2")
+    assert mgr.latest_step() == 1
+    out, meta = mgr.restore(_templates(trees))
+    assert meta["tag"] == "one"
+    # corrupt LATEST content -> same fallback
+    (tmp_path / "LATEST").write_text("not-a-step")
+    assert mgr.latest_step() == 1
+    # nothing restorable at all -> None, not an exception
+    shutil.rmtree(tmp_path / "step_1")
+    assert mgr.latest_step() is None
+
+
+def test_commit_point_fsyncs(tmp_path, monkeypatch):
+    """Durability pin: every payload file, meta.json, and LATEST are
+    fsync'd at the commit point (power loss after the rename cannot lose
+    LATEST's referent)."""
+    synced = []
+    real_fsync = os.fsync
+    monkeypatch.setattr(os, "fsync", lambda fd: synced.append(fd)
+                        or real_fsync(fd))
+    trees = _fmm_trees()
+    mgr = CheckpointManager(str(tmp_path), async_save=False)
+    mgr.save(1, trees, None)
+    # 2 payload npz + meta.json + LATEST.tmp + >= 2 directory fsyncs
+    assert len(synced) >= 6
+
+
 def test_keep_last_k_gc(tmp_path):
     trees = _fmm_trees()
     mgr = CheckpointManager(str(tmp_path), keep=3, async_save=False)
