@@ -823,6 +823,115 @@ def bench_trace_contracts(rows, quick=False):
                      f"failed:{type(e).__name__}:{detail}"))
 
 
+def bench_serve(rows, quick=False):
+    """FMM-as-a-service throughput/latency (DESIGN.md §15), subprocess.
+
+    ``serve_batched`` / ``serve_sequential``: the SAME wave of tiny
+    same-bucket one-shot jobs served through the vmap bin-packing engine
+    vs an engine capped at ``batch_capacities=(1,)`` (one device program
+    per job).  Paired-interleaved reps, min per mode; trees are pulled
+    from each engine's warm artifact cache, so the pair isolates
+    dispatch + execution.  Pins: batched throughput >= 1.5x sequential
+    (failed: below 1.35x, the pipeline_on-style 10% jitter band) at
+    EQUAL results (1e-5), and zero steady-state retraces
+    (``batched_cache_entries`` flat across reps, failed: otherwise —
+    CI-fatal via the no-silently-failed-rows guard).
+
+    ``serve_throughput`` reports requests/s of the batched engine;
+    ``serve_latency`` reports p50/p99 per job class (batched one-shots +
+    RK2 session steps) from the engine's own latency counters.
+    """
+    n_jobs, reps, steps = (8, 3, 1) if quick else (12, 6, 2)
+    body = textwrap.dedent(f"""
+        import time
+        import numpy as np
+        from repro.serve import fmm_service as svc
+
+        n_jobs, n = {n_jobs}, 60
+        rng = np.random.default_rng(0)
+        pos = rng.uniform(0.1, 0.9, size=(n, 2))
+        qs = [rng.normal(size=n) for _ in range(n_jobs)]
+        waves = {{m: qs for m in ("batched", "sequential")}}  # same jobs
+        engines = {{
+            "batched": svc.FmmServiceEngine(),
+            "sequential": svc.FmmServiceEngine(batch_capacities=(1,)),
+        }}
+
+        def wave(mode):
+            eng = engines[mode]
+            jids = [eng.submit(svc.FmmJob(positions=pos, strength=q, p=4,
+                                          sigma=0.02, tenant=mode))
+                    for q in waves[mode]]
+            eng.drain()
+            return [np.asarray(eng.result(j).out) for j in jids]
+
+        out = {{m: wave(m) for m in engines}}      # compile + warm caches
+        entries_warm = svc.batched_cache_entries()
+        for eng in engines.values():
+            eng._latencies.clear()                 # drop compile-wave tails
+        t = {{m: [] for m in engines}}
+        for _ in range({reps}):                    # interleaved, paired
+            for m in ("sequential", "batched"):
+                t0 = time.perf_counter()
+                out[m] = wave(m)
+                t[m].append(time.perf_counter() - t0)
+        retraces = svc.batched_cache_entries() - entries_warm
+
+        err = max(np.abs(a - b).max() / max(np.abs(b).max(), 1e-30)
+                  for a, b in zip(out["batched"], out["sequential"]))
+        bat = min(t["batched"]) * 1e6 / n_jobs     # us per job
+        seq = min(t["sequential"]) * 1e6 / n_jobs
+        tag = ""
+        if err > 1e-5:
+            tag = "failed:batched_results_diverge_"
+        elif seq < 1.35 * bat:
+            tag = "failed:batched_speedup_below_band_"
+        print(f"ROW serve_batched {{bat:.1f}} {{tag}}"
+              f"vs_sequential={{seq / bat:.2f}}x_err={{err:.1e}}"
+              f"_jobs={{n_jobs}}")
+        print(f"ROW serve_sequential {{seq:.1f}} one_program_per_job")
+
+        tag = "" if retraces == 0 else "failed:steady_state_retraced_"
+        print(f"ROW serve_throughput {{bat:.1f}} {{tag}}req_s="
+              f"{{1e6 / bat:.0f}}_retraces={{retraces}}"
+              f"_entries={{entries_warm}}")
+
+        eng = engines["batched"]
+        sid = eng.submit(svc.FmmJob(positions=pos,
+                                    strength=0.1 * rng.normal(size=n),
+                                    steps={steps}, p=4, dt=1e-3, sigma=0.02))
+        for _ in range({steps}):
+            eng.step_session(sid)
+        lat = eng.stats()["latency"]
+        b, s = lat["batched"], lat["session"]
+        print(f"ROW serve_latency {{b['p50_ms'] * 1e3:.1f}} "
+              f"batched_p50={{b['p50_ms']:.1f}}ms_p99={{b['p99_ms']:.1f}}ms"
+              f"_session_p50={{s['p50_ms']:.0f}}ms_p99="
+              f"{{s['p99_ms']:.0f}}ms")
+    """)
+    env = dict(os.environ)
+    src_dir = os.path.abspath(os.path.join(os.path.dirname(__file__), "..",
+                                           "src"))
+    old_pp = env.get("PYTHONPATH", "")
+    env["PYTHONPATH"] = src_dir + (os.pathsep + old_pp if old_pp else "")
+    names = ("serve_batched", "serve_sequential", "serve_throughput",
+             "serve_latency")
+    try:
+        proc = subprocess.run([sys.executable, "-c", body],
+                              capture_output=True, text=True, env=env,
+                              timeout=1800)
+        got = [l.split(maxsplit=3) for l in proc.stdout.splitlines()
+               if l.startswith("ROW")]
+        if proc.returncode != 0 or len(got) != len(names):
+            raise RuntimeError(proc.stderr[-300:])
+        for _, name, us, derived in got:
+            rows.append((name, float(us), derived))
+    except Exception as e:  # report, never abort the whole harness
+        detail = " ".join(str(e).split())[-160:].replace(",", ";")
+        for name in names:
+            rows.append((name, 0.0, f"failed:{type(e).__name__}:{detail}"))
+
+
 def bench_proc_fault_recovery(rows, quick=False):
     """MTTR of the cross-process fault-tolerance path (DESIGN.md §14): a
     2-rank kill drill through ``launch/supervisor.py`` — SIGKILL rank 1
@@ -884,6 +993,7 @@ def main() -> None:
                   bench_overlap, bench_pipeline, bench_guarded_step,
                   bench_plan_halo,
                   bench_equations,
+                  bench_serve,
                   bench_trace_contracts,
                   bench_proc_fault_recovery,
                   bench_moe_placement):

@@ -156,6 +156,20 @@ def run_contracts_section(args):
                                     C.not_donated("rk2"),
                                     C.no_host_callback()])
 
+    # -- batched serving entries (serve/fmm_service, PR 10) -----------------
+    from repro.core import equations as eqs
+    from repro.serve import fmm_service as svc
+    strees = [_fmm_fixture(3, 6, n=300)[0] for _ in range(2)]
+    bz, bq, bm = svc.stack_trees(strees, 2)
+    for ep_name, xargs in (("batched_fmm_eval", (bz, bq, bm)),
+                           ("batched_fmm_eval_targets",
+                            (bz, bq, bm, bz, bm))):
+        low = C.Lowered(svc.TRACE_ENTRY_POINTS[ep_name], *xargs,
+                        level=3, sigma=0.02, p=6, eq=eqs.VORTEX,
+                        label=f"{ep_name}[B2]")
+        results += C.evaluate(low, [C.sentinel_free(), C.no_host_callback(),
+                                    C.no_f64_upcast()])
+
     # -- fused packed exchange: 4 ppermutes on 2x2, 2 on degenerate axes ----
     ndev = min(4, args.devices)
     if ndev >= 4:
@@ -226,6 +240,13 @@ def run_schedule_section(args):
                              p=p, mesh=_mesh(4), plan=slab, ndev=4,
                              label="rk2_step[slab_P4]")
         reports.append(rep)
+        # targets mode — the serving engine's sharded probe-grid lane
+        # (serve/fmm_service._run_sharded) runs this exact configuration
+        tgt_tree, _ = _fmm_fixture(level, p, n=500)
+        rep = S.verify_entry(evaluate_ep, tree, p, _mesh(4), plan=slab,
+                             targets=tgt_tree, ndev=4,
+                             label="parallel_fmm[slab_P4_targets]")
+        reports.append(rep)
     if args.devices >= 3:
         slab3, _ = _plans(tree, index, level, p, 3, (3, 1))
         rep = S.verify_entry(stp.TRACE_ENTRY_POINTS["rk2_step"], tree, 1e-4,
@@ -246,6 +267,7 @@ def run_retrace_section(args):
     from repro.analysis import retrace as R
 
     events = R.run_session(level=3, p=4)
+    events += R.run_serve_session(level=2, p=4)
     bad = [e for e in events if not e.ok]
     for e in events:
         print(f"retrace {e}")

@@ -213,3 +213,87 @@ def run_session(level: int = 3, p: int = 4, n: int = 400) -> list:
     mon2.call(ltree, p, eq=eqs.LaplaceEquation(), expect="hit",
               step="fresh-spec-instance", strict=False)
     return mon.events + mon2.events
+
+
+def run_serve_session(level: int = 2, p: int = 6, n: int = 90) -> list:
+    """The scripted *serving* lifecycle over the batched entry points.
+
+    The FMM service (``serve/fmm_service.py``) bin-packs one-shot jobs
+    into shape buckets whose :class:`~repro.serve.fmm_service.BucketKey`
+    IS the jit cache key of ``batched_fmm_eval``.  Steady-state serving
+    therefore compiles once per bucket and never again — this session
+    makes that checkable the same way :func:`run_session` pins the
+    stepper lifecycle:
+
+    * cold bucket compile (first batch of a shape)     -> miss
+    * steady wave: same bucket, FRESH charge values    -> hit
+    * second bucket (bigger slot capacity)             -> miss (legitimate)
+    * switch back to the first bucket                  -> hit
+    * probe-grid entry: cold, then steady              -> miss, hit
+    * entry-count pin: the batched caches grew by EXACTLY the number of
+      distinct buckets scripted (3) — any extra entry is a silent
+      per-request recompile
+    * host-leaf foot-gun: raw numpy batch leaves key a SEPARATE entry
+      (the PR 8 restore hazard ``stack_trees`` guards against) -> miss,
+      with ``:host`` blamed
+
+    Returns the combined event list; any ``not ev.ok`` entry is a finding.
+    """
+    import numpy as np
+
+    from repro.core import equations as eqs
+    from repro.core.quadtree import build_tree
+    from repro.serve import fmm_service as svc
+
+    rng = np.random.default_rng(7)
+    sigma = 0.02
+
+    def batch(n_jobs, slots, charge_scale=None):
+        trees = []
+        for _ in range(n_jobs):
+            pos = rng.uniform(0.05, 0.95, size=(n, 2))
+            t, _ = build_tree(pos, rng.normal(size=n), level, sigma=sigma,
+                              slots=slots, charge_scale=charge_scale)
+            trees.append(t)
+        return svc.stack_trees(trees, n_jobs)
+
+    base = svc.batched_cache_entries()
+    kw = dict(level=level, sigma=sigma, p=p, eq=eqs.VORTEX)
+
+    mon = RetraceMonitor(svc.batched_fmm_eval, "batched_fmm_eval")
+    z, q, m = batch(2, slots=16)
+    mon.call(z, q, m, expect="miss", step="cold-bucket-compile",
+             strict=False, **kw)
+    # steady wave: new tenants' data, identical bucket — the serving path
+    # must ride the compiled program
+    z2, q2, m2 = batch(2, slots=16)
+    mon.call(z2, q2, m2, expect="hit", step="steady-wave-fresh-values",
+             strict=False, **kw)
+    zb, qb, mb = batch(2, slots=32)
+    mon.call(zb, qb, mb, expect="miss", step="second-bucket", strict=False,
+             **kw)
+    mon.call(z, q, m, expect="hit", step="switch-back-bucket", strict=False,
+             **kw)
+
+    # probe-grid lane: passive targets ride their own entry point
+    mon2 = RetraceMonitor(svc.batched_fmm_eval_targets,
+                          "batched_fmm_eval_targets")
+    tz, _, tm = batch(2, slots=16)
+    mon2.call(z, q, m, tz, tm, expect="miss", step="targets-cold",
+              strict=False, **kw)
+    mon2.call(z2, q2, m2, tz, tm, expect="hit", step="targets-steady",
+              strict=False, **kw)
+
+    # pin the steady-state entry count: 3 buckets scripted -> 3 entries
+    delta = svc.batched_cache_entries() - base
+    mon.events.append(SessionEvent(
+        step="entry-count-pin", expected="3 entries", got=f"{delta} entries",
+        blame=[] if delta == 3 else
+        ["batched jit caches grew past the scripted bucket count — "
+         "a bucket key is not hashing stably"]))
+
+    # the foot-gun stack_trees exists to prevent: host numpy leaves key
+    # a separate cache entry from device arrays of identical aval
+    mon.call(np.asarray(z), np.asarray(q), np.asarray(m), expect="miss",
+             step="host-leaf-footgun", strict=False, **kw)
+    return mon.events + mon2.events

@@ -11,6 +11,7 @@ terms, s = max particles per box, N_i = per-box particle count.
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 
 import numpy as np
 
@@ -115,6 +116,34 @@ def work_padded_total(counts: np.ndarray, params: ModelParams) -> float:
     """Work actually paid by the dense padded execution (all slots active)."""
     full = np.full_like(counts, params.slots)
     return float(work_subtree(full, params).sum())
+
+
+def batch_padding_stats(per_job_work: float, n_jobs: int,
+                        capacity: int) -> dict[str, float]:
+    """Batch-axis pricing for the serving engine's padded vmap lane.
+
+    A bucket executed at ``capacity`` pays the dense per-job work for
+    every batch row, occupied or padding — the batch-axis analogue of
+    :func:`work_padded_total`'s slot padding.  Returns the paid/useful
+    split and the utilization the admission policy can steer on.
+    """
+    paid = float(per_job_work) * int(capacity)
+    useful = float(per_job_work) * int(n_jobs)
+    return {"paid": paid, "useful": useful,
+            "padding_waste": paid - useful,
+            "utilization": (useful / paid) if paid else 1.0}
+
+
+def array_digest(*arrays) -> str:
+    """Stable content digest of host arrays — the value part of artifact
+    cache keys (trees keyed by particle data, plans by leaf counts)."""
+    h = hashlib.sha1()
+    for a in arrays:
+        a = np.ascontiguousarray(np.asarray(a))
+        h.update(str(a.dtype).encode())
+        h.update(str(a.shape).encode())
+        h.update(a.tobytes())
+    return h.hexdigest()
 
 
 # ---------------------------------------------------------------------------

@@ -70,6 +70,7 @@ class EquationSpec:
     needs_targets: bool = False      # passive source != target evaluation
     l2p_modes: tuple[str, ...] = ("value",)
     charge_scale: complex = 1.0 / (2j * np.pi)   # gamma -> pseudo-charge q
+    default_p: int = 12              # expansion order for p="auto" jobs
 
     def __hash__(self):
         # class identity participates: two specs with the same name but
@@ -195,6 +196,7 @@ class LaplaceEquation(EquationSpec):
     q_is_real = True
     l2p_modes = ("value", "ngrad")
     charge_scale = 1.0 + 0.0j
+    default_p = 16                   # the log expansion converges slower
 
     def p2m_coeff(self, p: int):
         c = np.zeros(p, dtype=np.complex128)
@@ -264,6 +266,31 @@ def get_equation(eq) -> EquationSpec:
     except KeyError:
         raise ValueError(f"unknown equation {eq!r}; registered: "
                          f"{sorted(EQUATIONS)}") from None
+
+
+def resolve_job_spec(eq, *, have_targets: bool = False,
+                     steps: int = 0) -> EquationSpec:
+    """Per-job spec resolution for the serving path (serve/fmm_service.py).
+
+    Resolves like :func:`get_equation` and then validates the job shape
+    against the spec's contract, so malformed requests fail typed at
+    ADMISSION instead of deep inside a traced driver:
+
+    * a ``needs_targets`` equation (tracer) without a probe/target set is
+      meaningless — the sources carry no charges to evaluate at;
+    * trajectory sessions (``steps > 0``) integrate the vortex system
+      (:class:`~repro.core.stepper.VortexStepper`); evaluation-only
+      equations cannot be advected.
+    """
+    spec = get_equation(eq)
+    if spec.needs_targets and not have_targets:
+        raise ValueError(f"equation {spec.name!r} requires a probe/target "
+                         f"set (job.targets is None)")
+    if steps and spec.name != "vortex":
+        raise ValueError(f"trajectory sessions (steps={steps}) integrate "
+                         f"the vortex system; equation {spec.name!r} is "
+                         f"evaluation-only")
+    return spec
 
 
 def register(spec: EquationSpec) -> EquationSpec:

@@ -41,7 +41,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from .cost_model import ModelParams
+from .cost_model import ModelParams, array_digest
 from . import faults as flt
 from . import health as hw
 from . import partition as pt
@@ -328,7 +328,8 @@ class VortexStepper:
                  faults: Optional[flt.FaultInjector] = None,
                  checkpoint_dir: Optional[str] = None,
                  checkpoint_every: int = 0, checkpoint_keep: int = 3,
-                 domain: Optional[Domain] = None):
+                 domain: Optional[Domain] = None,
+                 artifact_cache=None):
         self._init_config(
             p=p, dt=dt, mesh=mesh, mesh_axis=mesh_axis,
             use_kernels=use_kernels, plan_method=plan_method, dynamic=dynamic,
@@ -339,7 +340,8 @@ class VortexStepper:
             cut=cut, sigma=sigma, measured_times_fn=measured_times_fn,
             guard=guard, policy=policy, faults=faults,
             checkpoint_dir=checkpoint_dir, checkpoint_every=checkpoint_every,
-            checkpoint_keep=checkpoint_keep, domain=domain)
+            checkpoint_keep=checkpoint_keep, domain=domain,
+            artifact_cache=artifact_cache)
         self._build_host(np.asarray(positions, np.float64),
                          np.asarray(gamma, np.float64),
                          payload_values=None if payload is None else payload)
@@ -349,8 +351,13 @@ class VortexStepper:
                      replan_tol, target_per_box, slots_headroom,
                      occupancy_guard, cut, sigma, measured_times_fn, guard,
                      policy, faults, checkpoint_dir, checkpoint_every,
-                     checkpoint_keep, domain, pipeline=True):
+                     checkpoint_keep, domain, pipeline=True,
+                     artifact_cache=None):
         self.p, self.dt = p, float(dt)
+        # externally-owned artifact cache (serve/fmm_service.ArtifactCache
+        # duck type: get(key, builder)); None builds everything locally
+        self.artifact_cache = artifact_cache
+        self._artifact_keys: dict = {}
         self.mesh, self.mesh_axis = mesh, mesh_axis
         self.use_kernels = use_kernels
         self.plan_method = plan_method
@@ -404,6 +411,40 @@ class VortexStepper:
             need = max(2 * self.nparts, 4)
         return max(2, math.ceil(math.log2(need)))
 
+    # -- externally-owned artifact cache (session re-entrancy) ---------------
+
+    def _cached(self, key, builder):
+        if self.artifact_cache is None:
+            return builder()
+        return self.artifact_cache.get(key, builder)
+
+    def _plan_key(self, counts) -> tuple:
+        return ("plan", array_digest(counts), self.params, self.nparts,
+                self.plan_method, self.plan_grid, self.overlap, self.pipeline)
+
+    def _build_plan(self, counts):
+        """The deterministic a-priori plan build (cache-keyable — replans
+        driven by MEASURED times never go through the cache)."""
+        if self.plan_grid == "auto":
+            return autotune_plan(counts, self.params, self.nparts,
+                                 method=self.plan_method,
+                                 overlap=self.overlap,
+                                 pipeline=self.pipeline)
+        return plan_from_counts(counts, self.params, self.nparts,
+                                method=self.plan_method, grid=self.plan_grid)
+
+    def artifact_keys(self) -> dict:
+        """{cache_key: live_value} of the artifacts this stepper resolved
+        through the external cache — the serving engine re-resolves them by
+        key each step (steady state: pure hits) and repopulates an evicted
+        entry from the live value."""
+        out = {}
+        if "tree" in self._artifact_keys:
+            out[self._artifact_keys["tree"]] = (self.tree, self.index)
+        if "plan" in self._artifact_keys:
+            out[self._artifact_keys["plan"]] = self.plan
+        return out
+
     def _build_host(self, positions, gamma, payload_values=None):
         """(Re)bin PHYSICAL particles through the domain map (unit coords,
         scaled sigma/gamma — see :class:`quadtree.Domain`)."""
@@ -417,8 +458,12 @@ class VortexStepper:
         ij = np.clip((positions * n).astype(np.int64), 0, n - 1)
         occ = np.bincount(ij[:, 1] * n + ij[:, 0], minlength=n * n).max()
         slots = max(int(math.ceil(occ * self.slots_headroom)), 2)
-        self.tree, self.index = build_tree(positions, gamma, level,
-                                           sigma_unit, slots=slots)
+        tree_key = ("tree", array_digest(positions, gamma), level, slots,
+                    float(sigma_unit), complex(1.0 / (2j * np.pi)))
+        self.tree, self.index = self._cached(
+            tree_key, lambda: build_tree(positions, gamma, level, sigma_unit,
+                                         slots=slots))
+        self._artifact_keys = {"tree": tree_key}
         if payload_values is not None:
             def scatter(v):
                 flat = np.zeros((n * n, slots), dtype=np.asarray(v).dtype)
@@ -437,15 +482,9 @@ class VortexStepper:
                              f"{self.plan_grid[0] * self.plan_grid[1]} tiles"
                              f" for {self.nparts} devices")
         counts = self.index.counts
-        if self.plan_grid == "auto":
-            self.plan = autotune_plan(counts, self.params, self.nparts,
-                                      method=self.plan_method,
-                                      overlap=self.overlap,
-                                      pipeline=self.pipeline)
-        else:
-            self.plan = plan_from_counts(counts, self.params, self.nparts,
-                                         method=self.plan_method,
-                                         grid=self.plan_grid)
+        plan_key = self._plan_key(counts)
+        self.plan = self._cached(plan_key, lambda: self._build_plan(counts))
+        self._artifact_keys["plan"] = plan_key
         self.subtree_assign = assignment_from_plan(self.plan, self.params.cut)
         self._cached_lb = plan_stats(self.plan, counts,
                                      self.params)["load_balance"]
@@ -552,15 +591,10 @@ class VortexStepper:
             self._relevel()
             return
         counts = self.counts()
-        if self.plan_grid == "auto":
-            self.plan = autotune_plan(counts, self.params, self.nparts,
-                                      method=self.plan_method,
-                                      overlap=self.overlap,
-                                      pipeline=self.pipeline)
-        else:
-            self.plan = plan_from_counts(counts, self.params, self.nparts,
-                                         method=self.plan_method,
-                                         grid=self.plan_grid)
+        plan_key = self._plan_key(counts)
+        self.plan = self._cached(plan_key, lambda: self._build_plan(counts))
+        # no host tree build on this path — only the plan key is live
+        self._artifact_keys = {"plan": plan_key}
         self.subtree_assign = assignment_from_plan(self.plan, self.params.cut)
         self._cached_lb = plan_stats(self.plan, counts,
                                      self.params)["load_balance"]
@@ -595,7 +629,8 @@ class VortexStepper:
                         policy: Optional[RecoveryPolicy] = None,
                         faults: Optional[flt.FaultInjector] = None,
                         checkpoint_every: int = 0,
-                        checkpoint_keep: int = 3) -> "VortexStepper":
+                        checkpoint_keep: int = 3,
+                        artifact_cache=None) -> "VortexStepper":
         """Elastic restore: rebuild a stepper from a checkpoint directory,
         onto ANY mesh/device count — tree and payload arrays are restored
         bit-exact (they are device-count independent) and the execution
@@ -619,7 +654,8 @@ class VortexStepper:
             sigma=meta["sigma"], measured_times_fn=measured_times_fn,
             guard=guard, policy=policy, faults=faults,
             checkpoint_dir=directory, checkpoint_every=checkpoint_every,
-            checkpoint_keep=checkpoint_keep, domain=None)
+            checkpoint_keep=checkpoint_keep, domain=None,
+            artifact_cache=artifact_cache)
         st._adopt_restored(out, meta)
         return st
 

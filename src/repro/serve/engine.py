@@ -7,9 +7,8 @@ model axis); SSM/RG-LRU states are bounded, enabling the 500k cell.
 """
 from __future__ import annotations
 
-import dataclasses
 import functools
-from typing import Any, Optional
+from typing import Optional
 
 import numpy as np
 import jax
@@ -53,25 +52,20 @@ def make_serve_fns(cfg: ModelConfig, mesh: Optional[Mesh] = None,
 
 
 # ---------------------------------------------------------------------------
-# Minimal continuous-batching engine (example/server use)
+# Minimal batch-decode engine (example/server use)
 # ---------------------------------------------------------------------------
 
 
-@dataclasses.dataclass
-class Request:
-    rid: int
-    prompt: np.ndarray           # (T,) int32
-    max_new: int
-    generated: list = dataclasses.field(default_factory=list)
-    done: bool = False
-
-
 class ServeEngine:
-    """Batched greedy decoding over a fixed slot count.
+    """Batched greedy decoding: :meth:`step_all` is the ONLY serving API.
 
-    Requests join free slots; each engine step decodes one token for every
-    active slot.  Simple, but exercises the real production path: shared
-    jitted prefill/decode with a persistent sharded cache.
+    An earlier scaffold carried a slot/``submit``/``_admit`` continuous-
+    batching surface that ``step_all`` never consulted (it builds a fresh
+    cache per call); those dead members are gone.  Admission control,
+    request queues, and batching policy live in the FMM serving engine
+    (``serve/fmm_service.FmmServiceEngine``) — a continuous-batching LM
+    decode loop would be a separate subsystem, not a half-wired attribute
+    set here.
     """
 
     def __init__(self, params, cfg: ModelConfig, batch_slots: int,
@@ -79,24 +73,9 @@ class ServeEngine:
         self.params = params
         self.cfg = cfg
         self.mesh = mesh
-        self.slots: list[Optional[Request]] = [None] * batch_slots
+        self.batch_slots = batch_slots
         self.max_len = max_len
-        self.caches = init_cache(cfg, batch_slots, max_len)
-        self.pos = 0
         self.prefill_fn, self.decode_fn = make_serve_fns(cfg, mesh)
-        self.pending: list[Request] = []
-        self.completed: list[Request] = []
-
-    def submit(self, req: Request):
-        self.pending.append(req)
-
-    def _admit(self):
-        for i, slot in enumerate(self.slots):
-            if slot is None and self.pending:
-                req = self.pending.pop(0)
-                self.slots[i] = req
-        # NOTE: slot-aligned batching — all slots share a position counter;
-        # prompts are left-padded to the current position by re-prefill.
 
     def step_all(self, prompts: np.ndarray, max_new: int) -> np.ndarray:
         """Convenience batch API: greedy-decode ``max_new`` tokens for a

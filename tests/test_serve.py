@@ -1,0 +1,352 @@
+"""FMM-as-a-service: the batched multi-tenant serving engine (DESIGN.md §15).
+
+Pins the PR 10 acceptance criteria on a single device (the 4-device
+multi-tenant drill runs ``examples/fmm_serve_demo.py`` in a subprocess —
+jax locks the device count at first init):
+
+* admission is priced BEFORE any device work: an oversized job raises a
+  typed :class:`JobRejected` carrying its Eq 13-15 :class:`JobPrice`, and
+  backlog overflow defers (then promotes) instead of deadlocking;
+* bin-packed vmap batches return exactly what the single-tenant library
+  returns — batched == serial ``fmm_evaluate``, probe-grid one-shots ==
+  the f64 ``direct_sum`` oracle (laplace potential compared on Re: the
+  imaginary part of the complex log carries branch-cut ambiguity);
+* steady-state serving never retraces: fresh tenant data rides the
+  compiled bucket programs, pinned via ``batched_cache_entries``;
+* the shared :class:`ArtifactCache` amortizes trees/plans across repeat
+  jobs and session steps with exact hit/miss counter pins, and a
+  ``from_checkpoint``-restored session steps without retracing
+  ``rk2_step`` (the PR 8 numpy-leaf foot-gun, guarded at the boundary).
+"""
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro.core import equations as eqs
+from repro.core.cost_model import array_digest, batch_padding_stats
+from repro.core.fmm import fmm_evaluate
+from repro.core.quadtree import build_tree, gather_particle_values
+from repro.serve import fmm_service as svc
+from repro.serve.fmm_service import (ArtifactCache, FmmJob, FmmServiceEngine,
+                                     JobRejected, ServiceBudget)
+
+SIGMA = 0.02
+
+
+def _sources(n, seed=0):
+    rng = np.random.default_rng(seed)
+    return rng.uniform(0.1, 0.9, size=(n, 2)), rng.normal(size=n)
+
+
+# ---------------------------------------------------------------------------
+# Pricing + admission control
+# ---------------------------------------------------------------------------
+
+
+def test_oversized_job_rejected_with_price():
+    """The budget blow-up path: typed rejection carrying the cost-model
+    price, computed without touching the device or building any tree."""
+    engine = FmmServiceEngine(budget=ServiceBudget(max_job_flops=1.0))
+    pos, q = _sources(200)
+    with pytest.raises(JobRejected, match="exceeds max_job_flops") as ei:
+        engine.submit(FmmJob(positions=pos, strength=q, sigma=SIGMA))
+    price = ei.value.price
+    assert price.total_flops > 1.0
+    assert price.level >= 2 and price.p == eqs.VORTEX.default_p
+    assert engine.counters["rejected"] == 1
+    assert engine.counters["admitted"] == 0
+    # pricing is pure host arithmetic: nothing was built or executed
+    assert engine.cache.stats() == {"entries": 0, "hits": 0, "misses": 0}
+    assert engine.results == {}
+
+
+def test_session_pricing_scales_with_steps():
+    engine = FmmServiceEngine(budget=ServiceBudget(max_job_flops=1e-3))
+    pos, q = _sources(100)
+    with pytest.raises(JobRejected) as ei:
+        engine.submit(FmmJob(positions=pos, strength=q, steps=5, sigma=SIGMA))
+    price = ei.value.price
+    assert price.lane == "session" and price.steps == 5
+    # RK2 = two evaluations per step
+    assert price.total_flops == pytest.approx(10 * price.flops_per_eval)
+
+
+def test_backlog_defers_then_promotes():
+    """max_queue_flops bounds the admitted backlog; deferred jobs are
+    promoted as the queue drains, and drain() always completes them."""
+    engine = FmmServiceEngine()
+    pos, q = _sources(60, seed=1)
+    first = engine.submit(FmmJob(positions=pos, strength=q, p=4, sigma=SIGMA))
+    per_job = engine.queue[0].price.total_flops
+    engine.budget = ServiceBudget(max_queue_flops=1.5 * per_job)
+    later = [engine.submit(FmmJob(positions=pos,
+                                  strength=q * (i + 2), p=4, sigma=SIGMA))
+             for i in range(2)]
+    assert engine.counters["deferred"] == 2
+    assert len(engine.queue) == 1 and len(engine.deferred) == 2
+    results = engine.drain()
+    assert engine.counters["promoted"] == 2
+    assert not engine.queue and not engine.deferred
+    assert set(results) == {first, *later}
+
+
+def test_resolve_job_spec_errors():
+    assert eqs.resolve_job_spec("vortex", steps=3) is eqs.VORTEX
+    assert eqs.resolve_job_spec("tracer", have_targets=True) is eqs.TRACER
+    with pytest.raises(ValueError, match="target"):
+        eqs.resolve_job_spec("tracer", have_targets=False)
+    with pytest.raises(ValueError, match="evaluation-only"):
+        eqs.resolve_job_spec("laplace", have_targets=True, steps=2)
+
+
+def test_batch_padding_stats_math():
+    s = batch_padding_stats(100.0, 3, 4)
+    assert s["paid"] == 400.0 and s["useful"] == 300.0
+    assert s["padding_waste"] == 100.0
+    assert s["utilization"] == pytest.approx(0.75)
+    assert batch_padding_stats(0.0, 0, 0)["utilization"] == 1.0
+
+
+def test_array_digest_keys_by_value():
+    a = np.arange(6, dtype=np.float64)
+    assert array_digest(a) == array_digest(a.copy())
+    assert array_digest(a) != array_digest(a + 1)
+    assert array_digest(a) != array_digest(a.astype(np.float32))
+    assert array_digest(a) != array_digest(a.reshape(2, 3))
+    assert array_digest(a, a) != array_digest(a)
+
+
+# ---------------------------------------------------------------------------
+# Batched lane correctness
+# ---------------------------------------------------------------------------
+
+
+def test_batched_jobs_match_serial_evaluation():
+    """Two nearby-size vortex jobs share one bucket, run as ONE vmap batch,
+    and return exactly what single-tenant serial evaluation returns."""
+    engine = FmmServiceEngine()
+    pos0, q0 = _sources(150, seed=10)
+    # same layout, different charges: same bucket, distinct cached trees
+    jobs = [(pos0, q0), (pos0, -2.0 * q0)]
+    jids = [engine.submit(FmmJob(positions=pos, strength=q, p=8, sigma=SIGMA))
+            for pos, q in jobs]
+    engine.drain()
+    assert engine.counters["batches"] == 1
+    for jid, (pos, q) in zip(jids, jobs):
+        r = engine.result(jid)
+        assert r.lane == "batched" and r.batch_capacity == 2
+        tree, index = build_tree(pos, q, r.price.level, SIGMA,
+                                 slots=r.price.slots)
+        ref = gather_particle_values(
+            np.asarray(fmm_evaluate(svc.ensure_device(tree), r.price.p)),
+            index)
+        err = np.abs(r.out - ref).max() / np.abs(ref).max()
+        assert err < 1e-5, err
+
+
+def test_probe_jobs_match_direct_sum():
+    """laplace + tracer probe-grid one-shots vs the f64 oracle."""
+    engine = FmmServiceEngine()
+    src, q = _sources(160, seed=3)
+    tgt = np.random.default_rng(4).uniform(0.15, 0.85, size=(48, 2))
+    jids = {name: engine.submit(FmmJob(
+        positions=src, strength=q, equation=name, targets=tgt, p=12,
+        sigma=SIGMA)) for name in ("laplace", "tracer")}
+    engine.drain()
+    zt, zs = tgt[:, 0] + 1j * tgt[:, 1], src[:, 0] + 1j * src[:, 1]
+    for name, jid in jids.items():
+        out = engine.result(jid).out
+        ref = eqs.direct_sum(name, zt, zs, q, SIGMA)
+        if name == "laplace":
+            err = max(np.abs(out[:, 0].real - ref[:, 0].real).max()
+                      / np.abs(ref[:, 0].real).max(),
+                      np.abs(out[:, 1] - ref[:, 1]).max()
+                      / np.abs(ref[:, 1]).max())
+        else:
+            err = np.abs(out - ref).max() / np.abs(ref).max()
+        assert err < 2e-3, (name, err)
+
+
+def test_steady_state_serving_never_retraces():
+    """Second wave, same layouts, FRESH strengths: zero new jit entries."""
+    engine = FmmServiceEngine()
+    pos, q = _sources(150, seed=20)
+    rng = np.random.default_rng(21)
+    for wave in range(3):
+        # same wave width each time: the padded batch axis is part of the
+        # compiled shape, so steady state means same-capacity waves
+        for _ in range(3):
+            engine.submit(FmmJob(positions=pos,
+                                 strength=rng.normal(size=len(q)),
+                                 p=8, sigma=SIGMA))
+        engine.drain()
+        if wave == 0:
+            warm = svc.batched_cache_entries()
+    assert svc.batched_cache_entries() == warm
+
+
+def test_service_boundary_device_puts_host_leaves():
+    """stack_trees / ensure_device must hand jit entries DEVICE arrays:
+    raw numpy leaves key a separate cache entry per request (PR 8)."""
+    import jax
+
+    pos, q = _sources(80, seed=5)
+    tree, _ = build_tree(pos, q, 2, SIGMA, slots=32)
+    host = tree.__class__(z=np.asarray(tree.z), q=np.asarray(tree.q),
+                          mask=np.asarray(tree.mask), level=tree.level,
+                          sigma=tree.sigma)
+    for leaf in svc.stack_trees([host, host], 4):
+        assert isinstance(leaf, jax.Array)
+    dev = svc.ensure_device(host)
+    assert all(isinstance(x, jax.Array) for x in (dev.z, dev.q, dev.mask))
+
+
+# ---------------------------------------------------------------------------
+# Artifact cache amortization
+# ---------------------------------------------------------------------------
+
+
+def test_oneshot_tree_cache_hits_and_misses():
+    engine = FmmServiceEngine()
+    pos, q = _sources(120, seed=30)
+    job = dict(positions=pos, strength=q, p=6, sigma=SIGMA)
+    engine.submit(FmmJob(**job))
+    engine.drain()
+    assert engine.cache.stats() == {"entries": 1, "hits": 0, "misses": 1}
+    # identical resubmission: the tree is amortized, not rebuilt
+    engine.submit(FmmJob(**job))
+    engine.drain()
+    assert engine.cache.stats() == {"entries": 1, "hits": 1, "misses": 1}
+    # changed charge values -> new digest -> legitimate rebuild
+    engine.submit(FmmJob(**{**job, "strength": q + 1.0}))
+    engine.drain()
+    assert engine.cache.stats()["misses"] == 2
+    # same charges, different equation -> different charge_scale -> rebuild
+    engine.submit(FmmJob(**{**job, "equation": "laplace", "p": 6}))
+    engine.drain()
+    assert engine.cache.stats()["misses"] == 3
+
+
+def test_session_steps_amortize_through_shared_cache():
+    """Open = tree + plan misses; every steady step re-resolves both keys
+    as pure hits (the engine owns the artifacts, the session holds keys)."""
+    engine = FmmServiceEngine()
+    pos, q = _sources(100, seed=31)
+    sid = engine.submit(FmmJob(positions=pos, strength=0.1 * q, steps=3,
+                               p=4, dt=1e-3, sigma=SIGMA))
+    assert engine.counters["sessions"] == 1
+    stats0 = engine.cache.stats()
+    assert stats0["misses"] == 2 and stats0["hits"] == 0
+    for k in range(1, 4):
+        engine.step_session(sid)
+        s = engine.cache.stats()
+        assert s["misses"] == 2, s
+        assert s["hits"] == 2 * k, s
+    assert engine.counters["session_steps"] == 3
+    assert engine.stats()["latency"]["session"]["n"] == 3
+
+
+def test_restored_session_steps_without_retrace(tmp_path):
+    """from_checkpoint through the engine: restored leaves are device-put
+    (``_adopt_restored``), so the first post-restore step is a pure
+    rk2_step cache HIT — the numpy-leaf restore foot-gun stays guarded
+    behind the service boundary."""
+    from repro.core import stepper as stp
+
+    engine = FmmServiceEngine(
+        session_kwargs={"checkpoint_dir": str(tmp_path)})
+    pos, q = _sources(100, seed=32)
+    sid = engine.submit(FmmJob(positions=pos, strength=0.1 * q, steps=2,
+                               p=4, dt=1e-3, sigma=SIGMA))
+    engine.step_session(sid)
+    engine.session(sid).stepper.save_checkpoint()
+    engine.session(sid).stepper._ckpt.wait()    # saves are async
+
+    rid = engine.restore_session(str(tmp_path))
+    assert rid != sid
+    entries = stp.rk2_step._cache_size()
+    rec = engine.step_session(rid)
+    assert stp.rk2_step._cache_size() == entries, \
+        "post-restore step retraced rk2_step"
+    assert rec.step >= 1
+    # the restored trajectory continues the original one
+    a, _ = engine.session(rid).particles()
+    engine.step_session(sid)
+    b, _ = engine.session(sid).particles()
+    np.testing.assert_allclose(a, b, rtol=0, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Streaming + observability
+# ---------------------------------------------------------------------------
+
+
+def test_stream_prefetch_yields_every_step():
+    engine = FmmServiceEngine()
+    pos, q = _sources(90, seed=33)
+    sid = engine.submit(FmmJob(positions=pos, strength=0.1 * q, steps=3,
+                               p=4, dt=1e-3, sigma=SIGMA))
+    seen = [(i, rec.step) for i, _pos, rec in
+            engine.session(sid).stream(3, prefetch=True)]
+    assert [i for i, _ in seen] == [0, 1, 2]
+    assert engine.counters["session_steps"] == 3
+
+
+def test_stats_shape():
+    engine = FmmServiceEngine()
+    pos, q = _sources(110, seed=34)
+    engine.submit(FmmJob(positions=pos, strength=q, p=6, sigma=SIGMA))
+    engine.drain()
+    s = engine.stats()
+    assert s["batched_jobs"] == 1 and s["batches"] == 1
+    assert 0.0 < s["batch_utilization"] <= 1.0
+    assert s["latency"]["batched"]["n"] == 1
+    assert s["jit_entries"] == svc.batched_cache_entries()
+
+
+def test_serve_engine_dead_api_removed():
+    """Satellite: the LM ServeEngine scaffold carried submit/_admit/slots
+    bookkeeping that step_all never consulted — gone, not half-wired."""
+    from repro.serve.engine import ServeEngine
+
+    for name in ("submit", "_admit"):
+        assert not hasattr(ServeEngine, name), name
+    assert callable(ServeEngine.step_all)
+    assert "ONLY serving API" in ServeEngine.__doc__
+
+
+def test_artifact_cache_counters():
+    c = ArtifactCache()
+    assert c.get("k", lambda: 41) == 41
+    assert c.get("k", lambda: 42) == 41
+    assert "k" in c and len(c) == 1
+    assert c.stats() == {"entries": 1, "hits": 1, "misses": 1}
+    c.clear()
+    assert len(c) == 0 and c.stats()["hits"] == 1
+
+
+# ---------------------------------------------------------------------------
+# The 4-device multi-tenant drill (acceptance)
+# ---------------------------------------------------------------------------
+
+
+def test_multitenant_drill_four_devices():
+    """examples/fmm_serve_demo.py end to end: >= 3 concurrent tenants
+    (two streamed vortex sessions + laplace/tracer probe waves), all
+    matching single-tenant references, oversized job rejected with its
+    price, steady state retrace-free — on a 4-device host mesh."""
+    root = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(root, "src")
+    env.pop("XLA_FLAGS", None)
+    proc = subprocess.run(
+        [sys.executable, os.path.join(root, "examples", "fmm_serve_demo.py"),
+         "--devices", "4", "--n", "220", "--steps", "2", "--p", "6"],
+        capture_output=True, text=True, env=env, cwd=root, timeout=900)
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    assert "fmm_serve_demo: OK" in proc.stdout
+    assert "rejected as priced" in proc.stdout
+    assert "steady-state retraces: 0" in proc.stdout
